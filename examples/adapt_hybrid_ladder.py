@@ -1,0 +1,95 @@
+"""Post-training adaptation (paper §4.2): convert the upper half of a
+trained STANDARD transformer to Ladder Residual, measure the zero-shot
+degradation, then recover it with brief fine-tuning.
+
+The conversion itself is free — Ladder Residual reuses the exact same
+parameters and only rewires the residual stream (cfg.replace) — which is
+why the paper's 3B-token adaptation is so light.
+
+    PYTHONPATH=src python examples/adapt_hybrid_ladder.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, ResidualMode, TrainConfig
+from repro.models import transformer as tfm
+from repro.parallel import tp as tpmod
+from repro.parallel.collectives import NULL_ENV
+from repro.training import optimizer as opt
+from repro.training.data import SyntheticLM
+
+
+def eval_loss(cfg, params, loader, steps=8):
+    tot = 0.0
+    for i in range(1000, 1000 + steps):  # held-out step range
+        b = {k: jnp.asarray(v) for k, v in loader.batch_at(i).items()}
+        tot += float(tpmod.lm_loss(cfg, params, b, NULL_ENV,
+                                   TrainConfig(), train=False)[0])
+    return tot / steps
+
+
+def train(cfg, params, loader, steps, lr0=2e-3, start=0):
+    tcfg = TrainConfig(learning_rate=lr0, warmup_steps=10,
+                       total_steps=steps, weight_decay=0.01)
+    state = opt.adamw_init(params)
+    lr = opt.lr_schedule(tcfg)
+
+    @jax.jit
+    def step(params, state, b, i):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: tpmod.lm_loss(cfg, p, b, NULL_ENV, tcfg, True),
+            has_aux=True)(params)
+        g, _ = opt.clip_by_global_norm(g, 1.0)
+        return *opt.adamw_update(g, state, params, lr=lr(i), cfg=tcfg), loss
+
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in loader.batch_at(start + i).items()}
+        params, state, loss = step(params, state, b,
+                                   jnp.asarray(i, jnp.int32))
+    return params
+
+
+def main():
+    base = REGISTRY["ladder-1b"].reduced(
+        n_layers=8, d_model=256, n_heads=8, d_ff=1024, vocab_size=4096)
+    loader = SyntheticLM(vocab_size=base.vocab_size, seq_len=128,
+                         global_batch=8)
+
+    # 1. pretrain a STANDARD transformer
+    std = base.replace(residual_mode=ResidualMode.STANDARD)
+    params = tfm.init_params(std, jax.random.key(0))
+    params = train(std, params, loader, steps=250)
+    l_std = eval_loss(std, params, loader)
+    print(f"standard pretrained           eval loss {l_std:.4f}")
+
+    # 2. rewire the upper half to Ladder — SAME parameters, zero-shot
+    hybrid = base.replace(residual_mode=ResidualMode.LADDER,
+                          ladder_start_layer=4)
+    l_zero = eval_loss(hybrid, params, loader)
+    print(f"hybrid-ladder zero-shot       eval loss {l_zero:.4f} "
+          f"(degradation {l_zero - l_std:+.4f})  <- paper Table 4 row 2")
+
+    # 3. brief recovery fine-tune (the paper's 3B-token SFT analogue)
+    params_ft = train(hybrid, params, loader, steps=120, lr0=5e-4,
+                      start=300)
+    l_ft = eval_loss(hybrid, params_ft, loader)
+    print(f"hybrid-ladder retrained       eval loss {l_ft:.4f} "
+          f"(recovered {l_zero - l_ft:.4f})      <- paper Table 4 row 3")
+
+    if l_zero <= l_std:
+        print("note: no zero-shot degradation at this toy scale (the paper's"
+              " 8B shows a large generative-task drop; tiny models on"
+              " synthetic data can be insensitive to the rewiring)")
+    print("OK" if l_ft <= l_zero else "WARN: recovery incomplete")
+
+
+if __name__ == "__main__":
+    main()

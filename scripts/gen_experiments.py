@@ -1,0 +1,69 @@
+"""Regenerate EXPERIMENTS.md tables from results/dryrun.json.
+
+    python scripts/gen_experiments.py > EXPERIMENTS.md
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+rows = json.loads((ROOT / "results" / "dryrun.json").read_text())
+by_cell = {r["cell"]: r for r in rows}
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def table(mesh, tag_suffix=""):
+    out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck "
+           "| useful | mem/dev GB | fit |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: r.get("cell", "")):
+        cell = r.get("cell", "")
+        if f"/{mesh}/" not in cell or r.get("status") != "ok":
+            continue
+        if not cell.endswith("/ladder" + tag_suffix):
+            continue
+        arch, shape = cell.split("/")[:2]
+        mem = (r["mem"]["argument"] + max(
+            r["mem"]["temp"] - r["mem"].get("output", 0), 0)) / 1e9
+        tmem = r.get("t_memory_nocopy", r["t_memory"])
+        fit = "Y" if mem <= 16.0 else f"OVER({mem:.0f})"
+        out.append(
+            f"| {arch} | {shape} | {fmt_ms(r['t_compute'])} | "
+            f"{fmt_ms(tmem)} | {fmt_ms(r['t_collective'])} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | {mem:.1f} | "
+            f"{fit} |")
+    return "\n".join(out)
+
+
+def skips(mesh):
+    out = []
+    for r in rows:
+        if r.get("status") == "skipped" and f"/{mesh}/" in r["cell"]:
+            out.append("- " + r["cell"].split("/" + mesh)[0])
+    return "\n".join(sorted(set(out)))
+
+
+def cellrow(cell):
+    r = by_cell.get(cell)
+    if not r or r.get("status") != "ok":
+        return None
+    return r
+
+
+HEADER = (ROOT / "scripts" / "experiments_header.md").read_text()
+print(HEADER)
+
+print("\n### Single-pod (16x16 = 256 chips) baseline — all 40 cells\n")
+print(table("16x16"))
+print("\nSkipped (documented in DESIGN.md §Arch-applicability — long_500k "
+      "needs sub-quadratic attention):\n")
+print(skips("16x16"))
+print("\n### Multi-pod (2x16x16 = 512 chips) — all 40 cells\n")
+print(table("2x16x16"))
+print("\nSkips mirror the single-pod set.\n")
+
+print((ROOT / "scripts" / "experiments_footer.md").read_text())

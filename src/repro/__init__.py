@@ -1,0 +1,5 @@
+"""repro: Ladder-Residual (ICML 2025) reproduction — a multi-pod JAX
+training/inference framework with communication-overlapping residual
+topologies as a first-class feature."""
+
+__version__ = "1.0.0"

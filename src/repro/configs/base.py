@@ -1,0 +1,298 @@
+"""Configuration system for the Ladder-Residual reproduction framework.
+
+Every model in the zoo is described by a :class:`ModelConfig`.  The config is a
+plain frozen dataclass so that it can be hashed and used as a static argument
+to ``jax.jit``.  Architectural families are distinguished by the per-layer
+``layer_pattern``: a tuple of block descriptors, each of which names the
+sub-blocks ("mixer" + optional "ffn") that make up one layer.  The Ladder
+Residual rewiring (the paper's contribution) is orthogonal to the family and
+selected via ``residual_mode``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+class ResidualMode(str, enum.Enum):
+    """Residual-stream wiring of the transformer stack.
+
+    STANDARD   x_{i+1} = AllReduce(h_{i+1}(x_i)) + x_i          (Eq. 1)
+    LADDER     x_{i+1} = AllReduce(h_{i+1}(x_{i-1})) + x_i      (Eq. 2, the paper)
+    PARALLEL   PaLM-style fused attention+MLP, one AllReduce per layer
+    DESYNC2    drop every other AllReduce (Desync Residual-2x, §5)
+    DESYNC4    keep 1 of every 4 AllReduces (Desync Residual-4x, §5)
+    NO_COMM    drop all AllReduces — the paper's "Upper Bound" (incorrect math,
+               used only for benchmarking the communication-free limit).
+    """
+
+    STANDARD = "standard"
+    LADDER = "ladder"
+    PARALLEL = "parallel"
+    DESYNC2 = "desync2"
+    DESYNC4 = "desync4"
+    NO_COMM = "no_comm"
+
+
+class BlockKind(str, enum.Enum):
+    """Kind of one layer (a layer = mixer sub-block + optional ffn sub-block)."""
+
+    ATTN_MLP = "attn_mlp"            # classic transformer block
+    ATTN_MOE = "attn_moe"            # attention + mixture-of-experts FFN
+    MLA_MOE = "mla_moe"              # multi-head latent attention + MoE FFN
+    MLA_MLP = "mla_mlp"              # MLA + dense FFN (deepseek first layer)
+    LOCAL_ATTN_MLP = "local_attn_mlp"  # sliding-window attention + MLP
+    MAMBA2 = "mamba2"                # single-module Mamba2 block (no FFN)
+    SHARED_ATTN_MLP = "shared_attn_mlp"  # zamba2 shared transformer block
+    RWKV6 = "rwkv6"                  # RWKV6 time-mix + channel-mix
+    CROSS_ATTN = "cross_attn"        # enc-dec cross attention sub-block(s)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell: an input shape paired with the step it lowers."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+# The four assigned LM shapes.  ``decode_*``/``long_*`` lower ``serve_step``
+# (one new token against a KV cache of ``seq_len``), not ``train_step``.
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts
+    num_shared_experts: int = 0     # always-on shared experts (deepseek style)
+    top_k: int = 1
+    capacity_factor: float = 1.25   # train-time token capacity per expert
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01   # load-balance loss weight
+    moe_d_ff: int = 0               # per-expert hidden size (0 -> use d_ff)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0            # 0 -> no query compression
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 block configuration."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256           # chunked SSD scan length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64            # low-rank data-dependent decay projection
+    chunk_size: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Complete description of one architecture."""
+
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # Per-layer pattern; cycled to cover n_layers.  E.g. gemma3 uses
+    # (LOCAL,)*5 + (GLOBAL,) repeated.  A scan runs over groups of
+    # len(layer_pattern) layers with stacked parameters.
+    layer_pattern: Tuple[BlockKind, ...] = (BlockKind.ATTN_MLP,)
+    # Layer indices (absolute) overriding the pattern, e.g. deepseek layer 0.
+    layer_overrides: Tuple[Tuple[int, BlockKind], ...] = ()
+
+    # positional encoding / attention details
+    rope_theta: float = 10000.0
+    sliding_window: int = 0         # 0 -> full attention for LOCAL blocks
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    gated_mlp: bool = True          # SwiGLU vs GELU-MLP
+    attn_logit_softcap: float = 0.0
+    dense_d_ff: int = 0             # FFN width for dense-override layers
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+
+    # zamba2-style shared transformer block applied every `shared_attn_every`
+    # layers (parameters are shared across invocations).
+    shared_attn_every: int = 0
+
+    # encoder-decoder (whisper): if >0 the model has an encoder stack of this
+    # many layers and `n_layers` decoder layers with cross attention.
+    encoder_layers: int = 0
+    encoder_seq_ratio: int = 1      # encoder frames per decoder token (stub)
+
+    # modality frontend stub: "none" | "audio" | "vision".  input_specs()
+    # provides precomputed frame/patch embeddings for non-"none" frontends.
+    frontend: str = "none"
+    num_patches: int = 0            # vlm: patch embeddings prepended per image
+
+    # ---- paper knob ----
+    residual_mode: ResidualMode = ResidualMode.STANDARD
+    # apply ladder only to layers >= this index (hybrid adaptation, §4.2)
+    ladder_start_layer: int = 0
+
+    # ---- runtime knobs ----
+    dtype: str = "bfloat16"
+    remat: str = "block"            # none | block | dots
+    use_pallas: bool = False        # use Pallas kernels for hot paths
+    use_flash_decode: bool = False  # seq-sharded flash decoding over 'data'
+    mla_flash_decode: bool = False  # MLA latent cache seq-sharded over MODEL
+    fused_qkv: bool = True
+    max_position_embeddings: int = 1 << 20
+
+    # which assigned shapes this arch runs; e.g. pure full-attention archs
+    # skip long_500k (noted in DESIGN.md §Arch-applicability).
+    supported_shapes: Tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def block_kind(self, layer_idx: int) -> BlockKind:
+        for idx, kind in self.layer_overrides:
+            if idx == layer_idx:
+                return kind
+        return self.layer_pattern[layer_idx % len(self.layer_pattern)]
+
+    def layer_kinds(self) -> Tuple[BlockKind, ...]:
+        return tuple(self.block_kind(i) for i in range(self.n_layers))
+
+    # ------------------------------------------------------------------
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, n_layers: int = 2, d_model: int = 64, n_heads: int = 4,
+                n_kv_heads: int = 0, d_ff: int = 128, vocab_size: int = 256,
+                **kw) -> "ModelConfig":
+        """A tiny config of the same family for CPU smoke tests."""
+        n_kv = n_kv_heads or max(1, n_heads * self.n_kv_heads // max(self.n_heads, 1))
+        upd = dict(
+            n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+            n_kv_heads=n_kv, d_ff=d_ff, vocab_size=vocab_size,
+            head_dim=d_model // n_heads, dtype="float32", remat="none",
+            dense_d_ff=min(self.dense_d_ff, 2 * d_ff) if self.dense_d_ff else 0,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+        )
+        if self.moe is not None:
+            upd["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=min(2, self.moe.top_k),
+                num_shared_experts=min(1, self.moe.num_shared_experts),
+                moe_d_ff=d_ff // 2 if self.moe.moe_d_ff else 0)
+        if self.mla is not None:
+            upd["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=0,
+                                   qk_rope_head_dim=8, qk_nope_head_dim=8,
+                                   v_head_dim=16)
+        if self.ssm is not None:
+            upd["ssm"] = dataclasses.replace(self.ssm, d_state=16, head_dim=16,
+                                             chunk_size=8)
+        if self.rwkv is not None:
+            upd["rwkv"] = dataclasses.replace(self.rwkv, head_dim=16,
+                                              decay_lora=8, chunk_size=8)
+        if self.shared_attn_every:
+            upd["shared_attn_every"] = 2
+        if self.encoder_layers:
+            upd["encoder_layers"] = n_layers
+        if self.num_patches:
+            upd["num_patches"] = 4
+        if self.layer_overrides:
+            upd["layer_overrides"] = tuple((i, k) for i, k in self.layer_overrides
+                                           if i < n_layers)
+        upd.update(kw)
+        return self.replace(**upd)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND roofline accounting)."""
+        from repro.models.model import count_params_analytical
+        return count_params_analytical(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytical
+        return count_params_analytical(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How a step is sharded over the mesh."""
+
+    tp: int = 1                     # size of 'model' axis
+    dp: int = 1                     # size of 'data' axis
+    pp: int = 1                     # size of 'pod' axis used as pipeline
+    pods: int = 1                   # size of 'pod' axis used as extra DP
+    use_sp: bool = False            # Megatron-style sequence parallelism
+    shard_seq_for_decode: bool = False  # long-context flash decoding over 'data'
+    grad_compression: str = "none"  # none | int8 | topk
+    fsdp: bool = False              # shard params/opt-state over 'data'
+    microbatches: int = 1           # pipeline microbatches (pp>1)
+
+    @property
+    def world(self) -> int:
+        return self.tp * self.dp * self.pp * self.pods
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    learning_rate: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    z_loss: float = 0.0
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    log_every: int = 10

@@ -1,0 +1,23 @@
+"""dbrx-132b — fine-grained MoE, 16 experts top-4.
+
+[hf:databricks/dbrx-base; unverified]  40L d_model=6144 48H (GQA kv=8)
+d_ff=10752(per expert) vocab=100352.  Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    layer_pattern=(BlockKind.ATTN_MOE,),
+    moe=MoEConfig(num_experts=16, num_shared_experts=0, top_k=4,
+                  capacity_factor=1.25, moe_d_ff=10752),
+    rope_theta=500000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

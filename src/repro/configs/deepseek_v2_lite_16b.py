@@ -1,0 +1,33 @@
+"""deepseek-v2-lite-16b — MoE with multi-head latent attention (MLA).
+
+[arXiv:2405.04434; hf]  27L d_model=2048 16H d_ff=1408(per expert)
+vocab=102400, MLA kv_lora=512, MoE 64 routed experts top-6 + 2 shared.
+Layer 0 uses a dense FFN (width 10944) per the HF reference.  (The assignment
+line lists both "64e top-6" and "160 routed"; we follow the verified
+V2-Lite config: 64 routed + 2 shared, top-6 — noted in DESIGN.md.)
+
+MLA compresses the KV cache to kv_lora_rank + qk_rope_head_dim per token,
+but attention is still full -> long_500k skipped.
+"""
+
+from repro.configs.base import BlockKind, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,                # per-expert hidden
+    dense_d_ff=10944,         # layer-0 dense FFN
+    vocab_size=102400,
+    layer_pattern=(BlockKind.MLA_MOE,),
+    layer_overrides=((0, BlockKind.MLA_MLP),),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0, qk_rope_head_dim=64,
+                  qk_nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(num_experts=64, num_shared_experts=2, top_k=6,
+                  capacity_factor=1.25, moe_d_ff=1408),
+    rope_theta=10000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

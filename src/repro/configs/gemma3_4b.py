@@ -1,0 +1,27 @@
+"""gemma3-4b — dense decoder with 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt; unverified]  34L d_model=2560 8H (GQA kv=4)
+d_ff=10240 vocab=262144.  5 sliding-window layers (window 1024) per 1 global
+layer.  Because 29/34 layers are local (sub-quadratic, O(1)-bounded KV) we DO
+run long_500k for this arch: global layers keep a full (sharded) KV while
+local layers keep a ring-buffer window cache.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=10240,
+    vocab_size=262144,
+    layer_pattern=(BlockKind.LOCAL_ATTN_MLP,) * 5 + (BlockKind.ATTN_MLP,),
+    sliding_window=1024,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    attn_logit_softcap=0.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)

@@ -1,0 +1,50 @@
+"""The paper's own model family: Llama-3-style transformers at the sizes
+benchmarked in Ladder-Residual (Table 1): 1B, 3B, 8B, 34B, 70B, 176B, 405B.
+
+``residual_mode`` selects Standard / Ladder / Parallel / Desync-nx / NoComm —
+the same backbone is used for all five variants, mirroring the paper's
+benchmark setup (§3.3.1).  The 1B/3B configs mirror the pretraining-from-
+scratch experiments (§4.1, StarCoder tokenizer vocab 49152, 2048 ctx); the
+8B/70B/405B configs mirror Llama-3.1.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+_COMMON = dict(
+    family="dense",
+    layer_pattern=(BlockKind.ATTN_MLP,),
+    rope_theta=500000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)
+
+LADDER_1B = ModelConfig(
+    name="ladder-1b", n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=5504, vocab_size=49152, **_COMMON)
+
+LADDER_3B = ModelConfig(
+    name="ladder-3b", n_layers=26, d_model=3072, n_heads=24, n_kv_heads=24,
+    d_ff=8192, vocab_size=49152, **_COMMON)
+
+LLAMA_8B = ModelConfig(
+    name="llama3-8b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256, **_COMMON)
+
+LLAMA_34B = ModelConfig(
+    name="llama-34b", n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab_size=32000, **_COMMON)
+
+LLAMA_70B = ModelConfig(
+    name="llama3-70b", n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256, **_COMMON)
+
+BLOOM_176B = ModelConfig(
+    name="bloom-176b", n_layers=70, d_model=14336, n_heads=112, n_kv_heads=112,
+    d_ff=4 * 14336, vocab_size=250880, gated_mlp=False, family="dense",
+    layer_pattern=(BlockKind.ATTN_MLP,), rope_theta=10000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"))
+
+LLAMA_405B = ModelConfig(
+    name="llama3-405b", n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8,
+    d_ff=53248, vocab_size=128256, **_COMMON)
+
+CONFIG = LLAMA_70B  # canonical paper benchmark model

@@ -1,0 +1,26 @@
+"""llava-next-mistral-7b — VLM; Mistral-7B backbone with anyres tiling stub.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]  32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000.  The vision tower + anyres tiling is a
+STUB: ``input_specs()`` provides pre-projected patch embeddings
+(batch, num_patches, d_model) that are prepended to the token embeddings.
+Full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    layer_pattern=(BlockKind.ATTN_MLP,),
+    frontend="vision",
+    num_patches=576,          # one 24x24 CLIP tile (anyres adds more tiles)
+    rope_theta=1_000_000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

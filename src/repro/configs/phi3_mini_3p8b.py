@@ -1,0 +1,21 @@
+"""phi3-mini-3.8b — dense decoder, RoPE + SwiGLU.
+
+[arXiv:2404.14219; unverified]  32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064.  Pure full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    layer_pattern=(BlockKind.ATTN_MLP,),
+    rope_theta=10000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

@@ -1,0 +1,23 @@
+"""phi4-mini-3.8b — dense decoder, RoPE + SwiGLU + GQA.
+
+[arXiv:2412.08905; hf]  32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064.  Pure full attention -> long_500k skipped (DESIGN.md
+§Arch-applicability).
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    layer_pattern=(BlockKind.ATTN_MLP,),
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

@@ -1,0 +1,23 @@
+"""rwkv6-7b (Finch) — attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892; hf]  32L d_model=4096 d_ff=14336 vocab=65536.
+Each layer = time-mix (WKV6 recurrence) + channel-mix.  State is O(1) per
+layer -> runs long_500k.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,               # wkv heads = d_model / head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    layer_pattern=(BlockKind.RWKV6,),
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, chunk_size=128),
+    gated_mlp=False,          # rwkv channel-mix is its own gating
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)

@@ -1,0 +1,21 @@
+"""stablelm-3b — dense decoder.
+
+[hf:stabilityai/stablelm-2-1_6b; unverified]  32L d_model=2560 32H
+(GQA kv=32) d_ff=6912 vocab=50304.  Pure full attention -> long_500k skipped.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50304,
+    layer_pattern=(BlockKind.ATTN_MLP,),
+    rope_theta=10000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

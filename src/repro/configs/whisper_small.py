@@ -1,0 +1,28 @@
+"""whisper-small — encoder-decoder audio model (backbone only).
+
+[arXiv:2212.04356; unverified]  12L d_model=768 12H (kv=12) d_ff=3072
+vocab=51865.  The conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings of shape (batch, enc_seq, d_model).  The decoder
+carries self-attention + cross-attention + MLP per layer.  Full attention ->
+long_500k skipped; decode shapes decode against the encoder context.
+"""
+
+from repro.configs.base import BlockKind, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,              # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    layer_pattern=(BlockKind.CROSS_ATTN,),
+    frontend="audio",
+    encoder_seq_ratio=2,      # 2 audio frames per decoded token (stub ratio)
+    gated_mlp=False,          # whisper uses GELU MLP
+    rope_theta=10000.0,       # backbone stub uses RoPE in place of learned pos
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+)

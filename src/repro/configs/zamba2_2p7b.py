@@ -1,0 +1,28 @@
+"""zamba2-2.7b — hybrid Mamba2 + shared attention blocks.
+
+[arXiv:2411.15242; hf]  54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64.  The backbone is a stack of Mamba2 blocks with a
+*shared* full transformer block (attention + MLP, parameters shared across
+invocations) interleaved every 6 layers, following the Zamba2 design.
+
+Hybrid/SSM family -> runs long_500k (SSM state is O(1); the shared attention
+invocations keep a KV cache, sharded over the mesh).
+"""
+
+from repro.configs.base import BlockKind, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    layer_pattern=(BlockKind.MAMBA2,),
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk_size=256),
+    shared_attn_every=6,
+    rope_theta=10000.0,
+    supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)

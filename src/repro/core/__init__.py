@@ -1,0 +1,2 @@
+from repro.core.residual import (Carry, finalize_carry, fuse_parallel,
+                                 init_carry, run_section, subblock_step)

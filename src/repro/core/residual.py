@@ -1,0 +1,249 @@
+"""Residual-stream topologies — the paper's core contribution.
+
+A transformer stack is a sequence of *sub-blocks* (attention halves, MLP
+halves, MoE FFNs, Mamba mixers, ...).  Each sub-block function returns a
+TP-*partial* output that needs an AllReduce (psum over the model axis) to
+complete.  This module owns BOTH the placement of that AllReduce and the
+residual wiring around it — which is exactly the design space the paper
+explores:
+
+STANDARD (Eq. 1)   x_j = psum(h_j(x_{j-1})) + x_{j-1}
+    The psum is on the critical path: h_{j+1} cannot start until it lands.
+
+LADDER (Eq. 2)     x_j = psum(h_j(x_{j-2})) + x_{j-1}
+    h_{j+1} consumes x_{j-1}, which is independent of psum(h_j(...)), so the
+    XLA latency-hiding scheduler can run the AllReduce concurrently with the
+    next sub-block's compute (async all-reduce-start/done — the JAX analogue
+    of the paper's AsyncAllReduce handle).  Implemented as a rolling pair of
+    "pending" outputs, mirroring Algorithm 1.
+
+PARALLEL (PaLM)    fused at assembly time: consecutive (mixer, ffn) pairs
+    compute from the same input and share one psum — this mode reaches this
+    driver already fused, so it runs the STANDARD wiring over fused blocks.
+
+DESYNC-nx (§5)     keep only every n-th AllReduce.  Correct resync semantics
+    require reducing the *accumulated local delta* since the last sync (not
+    just the current sub-block output); we carry that delta explicitly.
+
+NO_COMM            drop every AllReduce — the paper's upper bound (incorrect
+    math, benchmarking only).
+
+All modes run unchanged at TP=1 (psum == identity), which the equivalence
+tests exploit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ResidualMode
+from repro.parallel.collectives import AxisEnv
+
+# A sub-block: fn(group_params, x, state) -> (partial_out, new_state, aux)
+SubBlockFn = Callable[[Any, jnp.ndarray, Any], Tuple[jnp.ndarray, Any, jnp.ndarray]]
+
+
+@dataclass
+class Carry:
+    """Scan carry for every topology (unused fields stay None per mode)."""
+
+    residual: jnp.ndarray
+    p1: Optional[jnp.ndarray] = None      # pending from sub-block j-1 (ladder)
+    p2: Optional[jnp.ndarray] = None      # pending from sub-block j-2 (ladder)
+    delta: Optional[jnp.ndarray] = None   # unsynced local delta (desync)
+    aux: jnp.ndarray = None               # accumulated auxiliary loss
+
+    def tree(self):
+        return tuple(t for t in (self.residual, self.p1, self.p2, self.delta,
+                                 self.aux) if t is not None)
+
+
+def init_carry(mode: ResidualMode, x: jnp.ndarray) -> Carry:
+    zero = jnp.zeros_like(x)
+    aux = jnp.zeros((), jnp.float32)
+    if mode == ResidualMode.LADDER:
+        return Carry(residual=x, p1=zero, p2=zero, aux=aux)
+    if mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
+        return Carry(residual=x, delta=zero, aux=aux)
+    return Carry(residual=x, aux=aux)
+
+
+def finalize_carry(mode: ResidualMode, carry: Carry, env: AxisEnv) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flush pendings / deltas; returns (residual, aux_loss)."""
+    r = carry.residual
+    if mode == ResidualMode.LADDER:
+        r = r + carry.p2 + carry.p1
+    elif mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
+        # re-synchronize whatever local delta remains at the stack end
+        r = r + env.psum_model(carry.delta)
+    return r, carry.aux
+
+
+def desync_period(mode: ResidualMode) -> int:
+    return {ResidualMode.DESYNC2: 2, ResidualMode.DESYNC4: 4}.get(mode, 1)
+
+
+def _name_collective(x):
+    """Tag a reduced sub-block output so remat policies can SAVE it: the
+    'coll_out' name lets `remat="save_collectives"` keep AllReduce results
+    across the checkpoint boundary instead of re-communicating them during
+    the backward recompute (§Perf hillclimb 1 — roughly halves the train
+    collective term at the cost of one saved activation per sub-block)."""
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(x, "coll_out")
+
+
+def subblock_step(mode: ResidualMode, fn: SubBlockFn, params, carry: Carry,
+                  state, env: AxisEnv, sub_idx: int, desync_n: int = 1):
+    """Advance one sub-block under the given topology.
+
+    sub_idx: STATIC index phase of this sub-block — desync modes decide from
+    it which AllReduces are retained, and that decision must be static so
+    the dropped collectives are truly absent from the lowered HLO (the whole
+    point of Desync Residual).  The assembler guarantees that scan bodies
+    cover a whole number of desync periods, making the in-body phase static.
+    Returns (carry, new_state).
+    """
+    if mode == ResidualMode.LADDER:
+        # Algorithm 1: consume the psum issued two sub-blocks ago, then
+        # compute from the (now one-step-stale) residual and issue this
+        # sub-block's psum.  Between issue and consume, one full sub-block
+        # of compute overlaps the collective.
+        residual = carry.residual + carry.p2
+        out, new_state, aux = fn(params, residual, state)
+        pending = env.sp_reduce(out) if env.sp else env.psum_model(out)
+        pending = _name_collective(pending)
+        return Carry(residual=residual, p1=pending, p2=carry.p1,
+                     aux=carry.aux + aux), new_state
+
+    if mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
+        local = carry.residual + carry.delta
+        out, new_state, aux = fn(params, local, state)
+        delta = carry.delta + out
+        if (sub_idx + 1) % desync_n == 0:   # static decision
+            residual = carry.residual + env.psum_model(delta)
+            delta = jnp.zeros_like(delta)
+        else:
+            residual = carry.residual
+        return Carry(residual=residual, delta=delta,
+                     aux=carry.aux + aux), new_state
+
+    if mode == ResidualMode.NO_COMM:
+        out, new_state, aux = fn(params, carry.residual, state)
+        return Carry(residual=carry.residual + out,
+                     aux=carry.aux + aux), new_state
+
+    # STANDARD (and PARALLEL, which arrives pre-fused)
+    out, new_state, aux = fn(params, carry.residual, state)
+    reduced = env.sp_reduce(out) if env.sp else env.psum_model(out)
+    reduced = _name_collective(reduced)
+    return Carry(residual=carry.residual + reduced,
+                 aux=carry.aux + aux), new_state
+
+
+def run_section(mode: ResidualMode, fns: Sequence[SubBlockFn], params_stack,
+                carry: Carry, env: AxisEnv, *, states=None,
+                sub_idx0: int = 0, remat: str = "none",
+                use_scan: bool = True, n_groups: Optional[int] = None,
+                gather=None):
+    """Run a homogeneous section of the stack: ``n_groups`` repetitions of the
+    sub-block pattern ``fns``, with per-group parameters stacked on the
+    leading axis of ``params_stack`` (and of ``states``, when present).
+
+    gather: optional fn(group_params) -> group_params applied inside the
+    (possibly remat'ed) group body — the FSDP weight all-gather hook.
+    Returns (carry, new_states).
+    """
+    desync_n = desync_period(mode)
+    k = len(fns)
+
+    if n_groups is None:
+        n_groups = jax.tree.leaves(params_stack)[0].shape[0]
+
+    # Desync phases must be static inside a scan body: require the body to
+    # cover a whole number of desync periods (the assembler arranges this by
+    # choosing the scan super-group size); otherwise fall back to unrolling.
+    if desync_n > 1 and use_scan and n_groups > 1 and \
+            (k % desync_n != 0 or sub_idx0 % desync_n != 0):
+        use_scan = False
+
+    def group_body(carry: Carry, group_params, group_states, base_idx: int):
+        if gather is not None:
+            group_params = gather(group_params)
+        new_states = [] if group_states is not None else None
+        for j, fn in enumerate(fns):
+            st = group_states[j] if group_states is not None else None
+            carry, new_st = subblock_step(mode, fn, group_params, carry, st,
+                                          env, base_idx + j, desync_n)
+            if new_states is not None:
+                new_states.append(new_st)
+        return carry, (tuple(new_states) if new_states is not None else None)
+
+    if remat != "none":
+        if remat == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        elif remat == "save_collectives":
+            policy = jax.checkpoint_policies.save_only_these_names("coll_out")
+        else:
+            policy = None
+
+        def group_body_r(carry, gp, gs, base_idx):
+            def wrapped(c_tuple, gp, gs):
+                c = _carry_from_tuple(mode, c_tuple)
+                c2, ns = group_body(c, gp, gs, base_idx)
+                return c2.tree(), ns
+            c_tuple, ns = jax.checkpoint(wrapped, policy=policy)(
+                carry.tree(), gp, gs)
+            return _carry_from_tuple(mode, c_tuple), ns
+    else:
+        group_body_r = group_body
+
+    if not use_scan or n_groups == 1:
+        new_states = [] if states is not None else None
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda t: t[g], params_stack)
+            gs = jax.tree.map(lambda t: t[g], states) if states is not None else None
+            carry, ns = group_body_r(carry, gp, gs, sub_idx0 + g * k)
+            if new_states is not None:
+                new_states.append(ns)
+        if new_states is not None:
+            new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+        return carry, new_states
+
+    def scan_body(c_tuple, xs):
+        gp, gs = xs
+        c = _carry_from_tuple(mode, c_tuple)
+        # in-scan phase: sub_idx0 is period-aligned and k covers whole
+        # periods, so `sub_idx0 + j` has the correct static desync phase
+        # for every group.
+        c2, ns = group_body_r(c, gp, gs, sub_idx0)
+        return c2.tree(), ns
+
+    xs = (params_stack, states)
+    c_tuple, new_states = jax.lax.scan(scan_body, carry.tree(), xs)
+    return _carry_from_tuple(mode, c_tuple), new_states
+
+
+def _carry_from_tuple(mode: ResidualMode, t) -> Carry:
+    if mode == ResidualMode.LADDER:
+        return Carry(residual=t[0], p1=t[1], p2=t[2], aux=t[3])
+    if mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
+        return Carry(residual=t[0], delta=t[1], aux=t[2])
+    return Carry(residual=t[0], aux=t[1])
+
+
+def fuse_parallel(mixer_fn: SubBlockFn, ffn_fn: SubBlockFn) -> SubBlockFn:
+    """PaLM-style parallel block: mixer and FFN compute from the same input;
+    their partial outputs share one AllReduce (half the communication)."""
+
+    def fused(params, x, state):
+        o1, st1, a1 = mixer_fn(params, x, state[0] if state is not None else None)
+        o2, st2, a2 = ffn_fn(params, x, state[1] if state is not None else None)
+        new_state = (st1, st2) if state is not None else None
+        return o1 + o2, new_state, a1 + a2
+
+    return fused

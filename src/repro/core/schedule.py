@@ -1,0 +1,140 @@
+"""Analytical communication/compute timeline model.
+
+This is the quantitative form of the paper's argument: a transformer layer
+is attention-compute, MLP-compute, and two AllReduces; the residual topology
+decides which of these may run concurrently.  Per sub-block j:
+
+  STANDARD   t = sum_j (t_comp_j + t_comm_j)           (comm blocks)
+  LADDER     t = sum_j max(t_comp_j, t_comm_{j-1})     (comm hides under the
+                                                        NEXT sub-block)
+  PARALLEL   fused attn+mlp, one AllReduce per layer
+  DESYNC-n   all compute + 1/n of the comms
+  NO_COMM    compute only (the paper's upper bound)
+
+Compute times follow a two-term roofline max(flops/peak, bytes/bw); comms a
+latency + bytes/bandwidth line.  Hardware presets cover the paper's H100
+setups (NVLink / PCIe-only / cross-node IB) and the TPU v5e target, so the
+same model reproduces Table 1/2/6 + Figure 2/3 trends and projects them
+onto the dry-run hardware.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ResidualMode
+
+
+@dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float          # per device
+    hbm_bw: float              # bytes/s
+    link_bw: float             # bytes/s per device (ring, bidirectional sum)
+    comm_latency: float        # seconds per collective
+    mfu: float = 0.6           # achievable fraction of peak on matmuls
+
+
+# the paper's benchmark hardware (H100 DGX, bf16)
+H100_NVLINK = HW("H100+NVLink", 989e12, 3.35e12, 450e9, 8e-6, 0.65)
+H100_NO_NVLINK = HW("H100 PCIe-only", 989e12, 3.35e12, 60e9, 25e-6, 0.65)
+H100_CROSS_NODE = HW("H100 x-node IB", 989e12, 3.35e12, 50e9, 30e-6, 0.65)
+TPU_V5E = HW("TPU v5e", 197e12, 819e9, 50e9, 5e-6, 0.6)
+
+HWS = dict(nvlink=H100_NVLINK, no_nvlink=H100_NO_NVLINK,
+           cross_node=H100_CROSS_NODE, v5e=TPU_V5E)
+
+
+@dataclass
+class LayerCost:
+    t_attn: float
+    t_mlp: float
+    t_comm: float              # one AllReduce of the hidden activations
+
+
+def _t_compute(flops, bytes_, hw: HW):
+    return max(flops / (hw.peak_flops * hw.mfu), bytes_ / hw.hbm_bw)
+
+
+def layer_cost(cfg: ModelConfig, *, tp: int, batch: int, seq_new: int,
+               kv_len: int, hw: HW) -> LayerCost:
+    """Per-layer sub-block costs for `seq_new` tokens against `kv_len` keys
+    (seq_new == kv_len for prefill/train fwd, 1 for decode)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    t = batch * seq_new
+    # attention sub-block (per device)
+    fl_proj = 2 * t * d * (hq + 2 * hkv) * hd / tp + 2 * t * d * hq * hd / tp
+    fl_score = 2 * t * kv_len * hq * hd / tp * 2
+    by_attn = (d * (hq + 3 * hkv) * hd * 2 / tp            # weights bf16
+               + 2 * batch * kv_len * hkv * hd * 2 / max(tp, 1)  # KV cache
+               + 4 * t * d * 2 / tp)                       # activations
+    t_attn = _t_compute(fl_proj + fl_score, by_attn, hw)
+    # mlp sub-block
+    ff = cfg.moe.moe_d_ff * cfg.moe.top_k if cfg.moe else cfg.d_ff
+    n_mats = 3 if cfg.gated_mlp else 2
+    fl_mlp = 2 * t * d * ff * n_mats / tp
+    by_mlp = n_mats * d * ff * 2 / tp + 4 * t * d * 2 / tp
+    if cfg.moe:
+        by_mlp = n_mats * d * cfg.moe.moe_d_ff * 2 * \
+            max(cfg.moe.num_experts // tp, 1) + 4 * t * d * 2 / tp
+    t_mlp = _t_compute(fl_mlp, by_mlp, hw)
+    # AllReduce of (t, d) bf16 over tp
+    ar_bytes = 2 * (tp - 1) / max(tp, 1) * (t * d * 2)
+    t_comm = hw.comm_latency + ar_bytes / hw.link_bw if tp > 1 else 0.0
+    return LayerCost(t_attn, t_mlp, t_comm)
+
+
+def stack_time(mode: ResidualMode, n_layers: int, lc: LayerCost,
+               desync_n: int = 1) -> float:
+    ta, tm, tc = lc.t_attn, lc.t_mlp, lc.t_comm
+    if mode == ResidualMode.STANDARD:
+        return n_layers * (ta + tc + tm + tc)
+    if mode == ResidualMode.LADDER:
+        # each comm overlaps the next sub-block's compute
+        return n_layers * (max(ta, tc) + max(tm, tc)) + tc
+    if mode == ResidualMode.PARALLEL:
+        return n_layers * (ta + tm + tc)
+    if mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
+        n = {ResidualMode.DESYNC2: 2, ResidualMode.DESYNC4: 4}[mode]
+        return n_layers * (ta + tm) + (2 * n_layers / n) * tc
+    if mode == ResidualMode.NO_COMM:
+        return n_layers * (ta + tm)
+    raise ValueError(mode)
+
+
+def generation_throughput(cfg: ModelConfig, mode: ResidualMode, *, tp: int,
+                          batch: int, prompt: int, gen: int, hw: HW):
+    """tokens/s over a (prefill + decode) generation task — the paper's
+    benchmark protocol (1024 prompt + 512 generated)."""
+    lc_p = layer_cost(cfg, tp=tp, batch=batch, seq_new=prompt,
+                      kv_len=prompt, hw=hw)
+    t_prefill = stack_time(mode, cfg.n_layers, lc_p)
+    # decode at the mean KV length
+    lc_d = layer_cost(cfg, tp=tp, batch=batch, seq_new=1,
+                      kv_len=prompt + gen // 2, hw=hw)
+    t_decode = stack_time(mode, cfg.n_layers, lc_d) * gen
+    total = t_prefill + t_decode
+    return dict(tok_per_s=batch * gen / total, t_prefill=t_prefill,
+                t_decode_per_tok=t_decode / gen, total=total)
+
+
+def speedup_table(cfg: ModelConfig, *, tp: int, batch: int, prompt: int,
+                  gen: int, hw: HW):
+    """All variants vs STANDARD (the paper's Table 1/2 protocol)."""
+    base = generation_throughput(cfg, ResidualMode.STANDARD, tp=tp,
+                                 batch=batch, prompt=prompt, gen=gen, hw=hw)
+    rows = {}
+    for mode in [ResidualMode.STANDARD, ResidualMode.PARALLEL,
+                 ResidualMode.LADDER, ResidualMode.DESYNC2,
+                 ResidualMode.DESYNC4, ResidualMode.NO_COMM]:
+        r = generation_throughput(cfg, mode, tp=tp, batch=batch,
+                                  prompt=prompt, gen=gen, hw=hw)
+        rows[mode.value] = dict(
+            tok_per_s=r["tok_per_s"],
+            speedup=r["tok_per_s"] / base["tok_per_s"],
+            prefill_improvement=1 - r["t_prefill"] / base["t_prefill"],
+            decode_improvement=1 - r["t_decode_per_tok"] /
+            base["t_decode_per_tok"])
+    return rows

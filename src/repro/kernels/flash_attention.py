@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (causal, sliding-window, GQA via index_map).
+
+Grid (BH_q, nQ, nK) with the K dimension minor: the online-softmax
+statistics (m, l) and the output accumulator live in VMEM scratch across the
+K iterations of one (head, q-block) cell.  GQA needs NO materialised KV
+repetition — the BlockSpec index_map divides the q-head index by the group
+size so each q head streams its kv head's tiles straight from HBM.
+
+Block shapes default to (128, head_dim) q-tiles and (512, head_dim) k-tiles:
+q/k/v tiles plus the fp32 accumulator for head_dim 128 total ~0.7 MB —
+comfortably inside VMEM, MXU-aligned on both matmul dims.  Fully-masked
+tiles (strictly above the causal diagonal or outside the sliding window)
+are skipped with pl.when, so the streamed work matches the useful work.
+
+Validated in interpret mode against kernels/ref.flash_attention_ref over a
+shape/dtype sweep (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, window: int, softcap: float, block_q: int,
+            block_k: int, n_k: int, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_off = qi * block_q
+    k_off = ki * block_k
+    # tile-level early out: strictly above the diagonal / outside the window
+    in_range = k_off <= q_off + block_q - 1
+    if window:
+        in_range = jnp.logical_and(
+            in_range, k_off + block_k - 1 >= q_off - window + 1)
+
+    @pl.when(in_range)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_off + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        kpos = k_off + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        mask = (kpos <= qpos) & (kpos < seq_len)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-37)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, scale: float, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 512, interpret: bool = False):
+    """q: (BH, S, hd); k, v: (BHkv, S, hd) with BH = BHkv * g.  Causal."""
+    bh, s, hd = q.shape
+    bhkv = k.shape[0]
+    g = bh // bhkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    n_q = -(-s // block_q)
+    n_k = -(-s // block_k)
+    pad_q = n_q * block_q - s
+    pad_k = n_k * block_k - s
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, n_k=n_k, seq_len=s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b // g, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n_q * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denominator
+            pltpu.VMEM((block_q, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

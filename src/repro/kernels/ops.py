@@ -1,0 +1,71 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they execute in interpret mode, which runs the kernel body op-by-op in
+Python — bit-faithful to the kernel's math, so the allclose tests against
+kernels/ref.py validate the real TPU code path's semantics.
+
+The model-facing signatures here adapt between the model's (B, S, H, hd)
+tensors and the kernels' flattened-head layouts.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import rwkv6 as _rw
+from repro.kernels import ssm_scan as _ssm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "softcap"))
+def flash_attention(q, k, v, *, scale: float, window: int = 0,
+                    softcap: float = 0.0):
+    """Model-facing: q (B,S,Hq,hd); k,v (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    out = _fa.flash_attention(qf, kf, vf, scale=scale, window=window,
+                              softcap=softcap, interpret=_interpret())
+    return out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, weight, *, eps: float = 1e-5):
+    return _rn.rmsnorm(x, weight, eps=eps, interpret=_interpret())
+
+
+@jax.jit
+def ssm_scan(x, b_mat, c_mat, dt, a_log):
+    return _ssm.ssm_scan(x, b_mat, c_mat, dt, a_log,
+                         interpret=_interpret())
+
+
+@jax.jit
+def rwkv6(r, k, v, w, u, s0=None):
+    """Matches models.rwkv.wkv6_scan's signature (zero initial state only
+    in the kernel; a nonzero s0 falls back to the scan path)."""
+    y, s_last = _rw.rwkv6(r, k, v, w, u, interpret=_interpret())
+    if s0 is not None:
+        # kernel assumes zero state; fold a nonzero s0 analytically:
+        # contribution of s0 to y_t is (prod_{tau<=t-1} w_tau) s0 . r_t —
+        # cheap closed form, keeps the kernel simple
+        wf = w.astype(jnp.float32)
+        cw = jnp.cumprod(wf, axis=1)
+        prev = jnp.concatenate([jnp.ones_like(cw[:, :1]),
+                                cw[:, :-1]], axis=1)      # (B,S,H,hd)
+        extra = jnp.einsum("bshi,bhij,bshi->bshj",
+                           prev, s0, r.astype(jnp.float32))
+        y = (y.astype(jnp.float32) + extra).astype(y.dtype)
+        s_last = s_last + s0 * cw[:, -1][..., None]
+    return y, s_last

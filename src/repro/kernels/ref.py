@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each oracle is the most direct possible implementation — no blocking, no
+numerics tricks beyond what the math requires — so kernel bugs cannot hide
+behind shared structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, scale: float, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (BH, S, hd); k, v: (BHkv, S, hd) with BH = BHkv * g.
+
+    Plain causal softmax attention per head, fp32 accumulation.
+    """
+    bh, s, hd = q.shape
+    g = bh // k.shape[0]
+    kr = jnp.repeat(k, g, axis=0)
+    vr = jnp.repeat(v, g, axis=0)
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale,
+                        kr.astype(jnp.float32))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def ssm_scan_ref(x, b_mat, c_mat, dt, a_log, h0=None):
+    """Sequential Mamba2/SSD recurrence (the trusted slow path).
+
+    x: (B,S,H,hd); b_mat/c_mat: (B,S,H,N); dt: (B,S,H) softplus'd;
+    a_log: (H,).  Returns (y (B,S,H,hd), h_last (B,H,N,hd)).
+    """
+    bsz, s, h, hd = x.shape
+    n = b_mat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, hd), jnp.float32)
+
+    def step(hprev, t):
+        xt = (x[:, t] * dt[:, t][..., None]).astype(jnp.float32)  # (B,H,hd)
+        decay = jnp.exp(dt[:, t] * a[None, :])[..., None, None]
+        hnew = hprev * decay + jnp.einsum("bhn,bhd->bhnd",
+                                          b_mat[:, t].astype(jnp.float32), xt)
+        y = jnp.einsum("bhn,bhnd->bhd", c_mat[:, t].astype(jnp.float32), hnew)
+        return hnew, y
+
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.swapaxes(0, 1).astype(x.dtype), h_last
+
+
+def rwkv6_ref(r, k, v, w, u, s0):
+    """Sequential WKV6 recurrence (fp32).
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd).
+    y_t = (S_{t-1} + (u*k_t) v_t^T)^T r_t ;  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, t):
+        kv = jnp.einsum("bhi,bhj->bhij", kf[:, t], vf[:, t])
+        y = jnp.einsum("bhij,bhi->bhj", s + u[None, :, :, None] * kv,
+                       rf[:, t])
+        return s * wf[:, t][..., None] + kv, y
+
+    s_last, ys = jax.lax.scan(step, s0, jnp.arange(r.shape[1]))
+    return ys.swapaxes(0, 1).astype(r.dtype), s_last

@@ -1,0 +1,54 @@
+"""Pallas TPU fused RMSNorm.
+
+One pass: rows stream through VMEM in (block_rows, D) tiles; the mean-square
+reduction, rsqrt and the (1 + w) scale fuse into a single kernel — vs three
+HBM round-trips for the unfused lowering (read x for the reduction, read x
+again for the normalise, write y).  D is the full feature width per tile so
+no cross-tile reduction is needed (d_model <= 16k fits VMEM comfortably:
+8 rows x 16k x 4 B = 0.5 MB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-5, block_rows: int = 8,
+            interpret: bool = False):
+    """x: (..., D); weight: (D,) stored zero-centred (gemma convention)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    n = -(-rows // block_rows)
+    pad = n * block_rows - rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n * block_rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, weight)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,95 @@
+"""Pallas TPU WKV6 recurrence (RWKV6 time-mix core).
+
+Grid (B, H, nC): the per-head state S ∈ R^{hd x hd} persists in VMEM scratch
+across a head's chunks; within a chunk the recurrence is evaluated
+step-by-step with rank-1 updates (VPU-bound — the data-dependent per-channel
+decay w_t makes the chunked matmul form numerically hazardous because it
+needs exp(+cumsum) factors; production variants renormalise per chunk, we
+keep the kernel exact and move throughput to the chunk level).
+
+VMEM per cell at (L=64, hd=64): 4 input tiles + state ≈ 90 KB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, s_ref, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)                      # (hd,)
+
+    def step(t, carry):
+        s, y = carry
+        rt = r_ref[0, 0, t].astype(jnp.float32)           # (hd,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)
+        vt = v_ref[0, 0, t].astype(jnp.float32)
+        wt = w_ref[0, 0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                    # (hd, hd)
+        yt = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)
+        s = s * wt[:, None] + kv
+        y = y.at[t].set(yt)
+        return s, y
+
+    y0 = jnp.zeros((chunk, s_ref.shape[1]), jnp.float32)
+    s, y = jax.lax.fori_loop(0, chunk, step, (s_ref[...], y0))
+    s_ref[...] = s
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        sout_ref[0, 0] = s_ref[...]
+
+
+def rwkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd).  Zero initial state.
+
+    Returns (y (B,S,H,hd), s_last (B,H,hd,hd) fp32).
+    """
+    bsz, s, h, hd = r.shape
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        # pad with w=1 (identity decay) so state stays untouched
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+
+    args = [t.transpose(0, 2, 1, 3) for t in (r, k, v, w)]  # (B,H,S,hd)
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    y, s_last = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, hh, c: (hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nc * chunk, hd), r.dtype),
+            jax.ShapeDtypeStruct((bsz, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(*args, u.astype(jnp.float32))
+    return y.transpose(0, 2, 1, 3)[:, :s], s_last

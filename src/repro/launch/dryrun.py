@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init).  Smoke tests and benches never import this module —
+they see 1 device.
+
+For every cell this driver:
+  1. builds the production mesh ((16,16) or (2,16,16)),
+  2. plans parallelism (TP=16, DP=16, pod = extra DP; long-context decode
+     shards the KV sequence over the data axes),
+  3. lowers + compiles the train_step / prefill / serve_step against
+     ShapeDtypeStruct inputs (no allocation),
+  4. prints memory_analysis() (proves per-device fit) and cost_analysis(),
+  5. derives the three roofline terms (launch/roofline.py) and appends the
+     row to a JSON results file consumed by EXPERIMENTS.md and benchmarks.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-70b \
+      --shape train_4k --mesh both --residual ladder
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # 40-cell baseline
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ALL_SHAPES, ASSIGNED_ARCHS, REGISTRY,
+                           SHAPES_BY_NAME, ResidualMode, TrainConfig,
+                           get_config)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (dec_seq, plan_parallel, serve_input_specs,
+                                train_input_specs)
+from repro.models import transformer as tfm
+from repro.models.model import count_params, model_flops
+from repro.parallel import sharding
+from repro.parallel import tp as tpmod
+from repro.serving import engine
+from repro.training import optimizer as opt
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+
+def _train_structs(cfg, pcfg, fsdp=True):
+    return jax.eval_shape(
+        lambda: tpmod.init_train_state(cfg, pcfg, jax.random.key(0),
+                                       fsdp=fsdp)[:2])
+
+
+def _serve_param_structs(cfg, pcfg, fsdp=False, fsdp_q8=False):
+    def mk():
+        p = tfm.init_params(cfg, jax.random.key(0))
+        p, _ = sharding.prepare_params_for_tp(p, cfg, pcfg.tp)
+        if fsdp:
+            from repro.parallel import fsdp as fsdp_mod
+            sec = sharding.param_pspecs(p)["sections"]
+            if fsdp_q8:
+                flat = fsdp_mod.flatten_sections_host_q8(
+                    p["sections"], sec, pcfg.tp, pcfg.dp)
+            else:
+                flat, _ = fsdp_mod.flatten_sections_host(
+                    p["sections"], sec, pcfg.tp, pcfg.dp)
+            p = dict(p)
+            p["sections"] = flat
+        return p
+    return jax.eval_shape(mk)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             residual: str = "ladder", *, verbose: bool = True,
+             use_sp: bool = False, extra_tag: str = "",
+             overrides: dict | None = None) -> dict:
+    cfg_overrides = {k: v for k, v in (overrides or {}).items()
+                     if not k.startswith("_")}
+    cfg = get_config(arch, residual=residual, **cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}/{shape_name}/{mesh_name}/{residual}{extra_tag}"
+
+    if shape_name not in cfg.supported_shapes:
+        return dict(cell=tag, status="skipped",
+                    reason="unsupported shape for this arch family "
+                           "(DESIGN.md §Arch-applicability)")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pcfg = plan_parallel(cfg, shape, multi_pod)
+    if use_sp:
+        import dataclasses
+        pcfg = dataclasses.replace(pcfg, use_sp=True)
+    chips = pcfg.world
+    t0 = time.time()
+
+    if shape.kind == "train":
+        # microbatch so each device sees ONE sequence per micro-step —
+        # bounds activation memory (remat checkpoints scale with the
+        # per-micro token count)
+        per_dev = shape.global_batch // (pcfg.dp * pcfg.pods)
+        tcfg = TrainConfig(grad_accum=max(1, per_dev))
+        step, in_specs, _ = tpmod.build_train_step(cfg, mesh, pcfg, tcfg,
+                                                   fsdp=True)
+        params_s, opt_s = _train_structs(cfg, pcfg, fsdp=True)
+        batch_s = train_input_specs(cfg, shape)
+        with jax.set_mesh(mesh):
+            # donate params + opt state: updated in place on real hardware
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_s, opt_s, batch_s, jax.ShapeDtypeStruct((), jnp.int32))
+        mf = model_flops(cfg, shape.tokens, train=True)
+    else:
+        fsdp = engine.serve_needs_fsdp(cfg, pcfg)
+        fsdp_q8 = fsdp and bool((overrides or {}).get("_serve_q8"))
+        steps = engine.build_serve_steps(
+            cfg, mesh, pcfg, seq_shard_data=pcfg.shard_seq_for_decode,
+            fsdp=fsdp, fsdp_q8=fsdp_q8)
+        tok_s, cache_s, extra_s, cache_specs = serve_input_specs(cfg, shape,
+                                                                 pcfg)
+        params_s = _serve_param_structs(cfg, pcfg, fsdp=fsdp,
+                                        fsdp_q8=fsdp_q8)
+        if shape.kind == "prefill":
+            sd = dec_seq(cfg, shape)
+            out_cache_specs = engine.build_caches(
+                cfg, shape.global_batch,
+                sd if cfg.encoder_layers else shape.seq_len, pcfg,
+                for_decode=True,
+                enc_s=shape.seq_len if cfg.encoder_layers else 0,
+                structs_only=True)[1]
+            fn = engine.shard_mapped(
+                steps["prefill"], mesh,
+                (steps["pspecs"], steps["tok_spec"], cache_specs,
+                 {k: steps["tok_spec"] for k in extra_s}),
+                (out_cache_specs, steps["tok_spec"]))
+            args = (params_s, tok_s, cache_s, extra_s)
+            mf = model_flops(cfg, shape.tokens, train=False)
+        else:
+            fn = engine.shard_mapped(
+                steps["decode"], mesh,
+                (steps["pspecs"], steps["tok_spec"], cache_specs, P()),
+                (cache_specs, steps["tok_spec"]))
+            args = (params_s, tok_s, cache_s,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            mf = model_flops(cfg, shape.global_batch, train=False,
+                             decode_context=shape.seq_len)
+        with jax.set_mesh(mesh):
+            # donate the KV caches: updated in place on real hardware
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(*args)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = rl.analyse(arch, shape_name, mesh_name, compiled, mf, chips,
+                      hlo_text=hlo)
+    row = roof.row()
+    row.update(cell=tag, status="ok", t_lower_s=round(t_lower, 2),
+               t_compile_s=round(t_compile, 2),
+               residual=residual,
+               params=count_params(cfg),
+               mem=dict(argument=ma.argument_size_in_bytes,
+                        output=ma.output_size_in_bytes,
+                        temp=ma.temp_size_in_bytes))
+    if verbose:
+        per_dev_gb = (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 1e9
+        print(f"[{tag}] compile={t_compile:.1f}s "
+              f"mem/dev={per_dev_gb:.2f}GB "
+              f"t_comp={roof.t_compute*1e3:.2f}ms t_mem={roof.t_memory*1e3:.2f}ms "
+              f"t_coll={roof.t_collective*1e3:.2f}ms -> {roof.bottleneck} "
+              f"useful={roof.useful_ratio:.2f} roofline={roof.roofline_fraction:.3f}")
+        print(f"  memory_analysis: {ma}")
+        ca = compiled.cost_analysis() or {}
+        print(f"  cost_analysis: flops={ca.get('flops')} "
+              f"bytes={ca.get('bytes accessed')}")
+    return row
+
+
+def append_result(row: dict, path: Path = RESULTS):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    data = []
+    if path.exists():
+        data = json.loads(path.read_text())
+    data = [r for r in data if r.get("cell") != row.get("cell")]
+    data.append(row)
+    path.write_text(json.dumps(data, indent=1, default=float))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--residual", default="ladder")
+    ap.add_argument("--all", action="store_true",
+                    help="all 40 assigned cells (single-pod baseline)")
+    ap.add_argument("--multi-all", action="store_true",
+                    help="all 40 assigned cells on the 2x16x16 mesh")
+    ap.add_argument("--sp", action="store_true", help="sequence parallelism")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    cells = []
+    if args.all or args.multi_all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in ALL_SHAPES:
+                cells.append((arch, shape.name, args.multi_all))
+    else:
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        try:
+            row = run_cell(arch, shape, mp, residual=args.residual,
+                           use_sp=args.sp,
+                           extra_tag="+sp" if args.sp else "")
+            append_result(row, out)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures += 1
+            traceback.print_exc()
+            append_result(dict(
+                cell=f"{arch}/{shape}/{'2x16x16' if mp else '16x16'}/{args.residual}",
+                status="error", error=f"{type(e).__name__}: {e}"), out)
+    print(f"done; failures={failures}; results -> {out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

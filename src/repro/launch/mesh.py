@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before first jax init and only then calls it.
+
+Mesh layout (TPU v5e pods):
+  single-pod:  (16, 16)    axes (data, model)  = 256 chips
+  multi-pod:   (2, 16, 16) axes (pod, data, model) = 512 chips
+
+The 'model' axis carries tensor parallelism (the paper's subject) and maps
+onto one ICI torus dimension; 'data' carries DP; 'pod' is either extra DP
+(default) or pipeline stages (parallel/pp.py) across the inter-pod DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(world: int, tp: int, pods: int = 1):
+    """Elastic helper: build a (pod, data, model) mesh for whatever device
+    count is actually available (restart-after-failure path)."""
+    assert world % (tp * pods) == 0, (world, tp, pods)
+    dp = world // (tp * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)

@@ -1,0 +1,421 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), all per-device, in seconds:
+
+  compute    = HLO_FLOPs / peak_FLOPs
+  memory     = HLO_bytes / HBM_bw
+  collective = sum_i ring_bytes_i / link_bw
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+The CPU backend's ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+(scan-over-layers would be undercounted ~n_layers x), so we parse
+``compiled.as_text()`` ourselves:
+
+* every computation gets a symbol table (op name -> result shapes);
+* a DFS from ENTRY accumulates (flops, bytes, collective bytes), multiplying
+  while bodies by the ``known_trip_count`` XLA records in backend_config
+  (nested loops — grad-accumulation over a layer scan — multiply through);
+* dot FLOPs = 2 * |result| * |contracted dims| (resolved via the symbol
+  table); fusions are recursed for FLOPs but charged operand+result bytes
+  only (fusion internals live in registers/VMEM — the TPU traffic model);
+* collectives are weighted by ring cost for their replica-group size
+  (all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n,
+  collective-permute 1).
+
+``cost_analysis()`` numbers are retained in the report as a cross-check.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{(\d+(?:,\d+)*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_CALL_LIST_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id",
+               "opt-barrier"}
+# Ops that materialise buffers on TPU.  Everything else (raw elementwise,
+# convert, broadcast, compare, select, ...) is assumed fused into a
+# neighbouring op by the TPU backend — the CPU HLO we parse is less fused
+# than TPU HLO would be, so charging unfused elementwise ops would inflate
+# the memory term several-fold.
+_TRAFFIC = {"dot", "convolution", "fusion", "call", "conditional",
+            "custom-call", "copy", "dynamic-slice", "dynamic-update-slice",
+            "slice", "reduce", "reduce-window", "transpose", "scatter",
+            "gather", "concatenate", "pad", "reverse", "sort", "rng",
+            "cholesky", "triangular-solve"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    rtype: str          # raw result-type text
+    operands: List[str]
+    attrs: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.rtype)
+
+
+def _parse_operands(rest: str) -> Tuple[List[str], str]:
+    """Split 'a, %b, ...), attr=...' into operand names and attrs."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = rest[:i], rest[i + 1:]
+                names = re.findall(r"%([\w\.\-]+)", inner)
+                return names, attrs
+    return re.findall(r"%([\w\.\-]+)", rest), ""
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[Op]], str]:
+    """Returns ({computation -> ops}, entry_name)."""
+    comps: Dict[str, List[Op]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        # computation headers start at column 0 and end with the opening
+        # brace; everything else (HloModule line, stack-frame trailer,
+        # in-computation ops) fails one of the two conditions.
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, kind, rest = m.groups()
+        operands, attrs = _parse_operands(rest)
+        comps[cur].append(Op(name, kind, rtype, operands, attrs))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_count: int = 0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    copy_bytes: float = 0.0   # raw `copy` op traffic — CPU-backend copies
+                              # that donation/in-place DUS removes on TPU
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        self.coll_count += o.coll_count
+        self.copy_bytes += o.copy_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.coll_bytes * m,
+                    int(self.coll_count * m),
+                    {k: v * m for k, v in self.coll_by_kind.items()},
+                    self.copy_bytes * m)
+
+
+def _dot_flops(op: Op, table: Dict[str, str]) -> float:
+    res = _shape_dims(op.rtype)
+    relems = 1
+    for _, dims in res:
+        for d in dims:
+            relems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    lhs_ct = [int(x) for x in m.group(1).split(",") if x] if m else []
+    lhs_type = table.get(op.operands[0], "") if op.operands else ""
+    lhs = _shape_dims(lhs_type)
+    contracted = 1
+    if lhs:
+        dims = lhs[0][1]
+        for i in lhs_ct:
+            if i < len(dims):
+                contracted *= dims[i]
+    return 2.0 * relems * contracted
+
+
+def _group_size(attrs: str) -> int:
+    gm = _GROUPS_RE.search(attrs)
+    if gm:
+        return len(gm.group(1).split(","))
+    gi = _GROUPS_IOTA_RE.search(attrs)
+    if gi:
+        return int(gi.group(2))
+    return 1
+
+
+def _called_comps(attrs: str) -> List[str]:
+    names = list(_CALL_RE.findall(attrs))
+    for blob in _CALL_LIST_RE.findall(attrs):
+        names += [n.strip().lstrip("%") for n in blob.split(",") if n.strip()]
+    return names
+
+
+def _ring_weight(kind: str, n: int) -> float:
+    if kind == "all-reduce":
+        return 2 * (n - 1) / max(n, 1)
+    if kind in ("all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all"):
+        return (n - 1) / max(n, 1)
+    return 1.0  # collective-permute
+
+
+def analyse_hlo(hlo: str) -> Cost:
+    comps, entry = parse_computations(hlo)
+    tables: Dict[str, Dict[str, str]] = {
+        cname: {op.name: op.rtype for op in ops}
+        for cname, ops in comps.items()}
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(cname: str) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Cost()          # break cycles defensively
+        total = Cost()
+        table = tables.get(cname, {})
+        for op in comps.get(cname, []):
+            kind = op.kind
+            if kind.endswith("-done"):
+                continue
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if base_kind == "while":
+                m = _TRIP_RE.search(op.attrs)
+                trips = int(m.group(1)) if m else 1
+                sub = Cost()
+                for n in _called_comps(op.attrs):
+                    sub += cost_of(n)
+                total += sub.scaled(trips)
+                continue
+            if base_kind in ("fusion", "call", "conditional",
+                             "custom-call"):
+                inner_bytes = 0.0
+                has_dus = False
+                pure_elementwise = True
+                for n in _called_comps(op.attrs):
+                    sub = cost_of(n)
+                    inner_bytes += sub.bytes
+                    for o in comps.get(n, []):
+                        if o.kind == "dynamic-update-slice":
+                            has_dus = True
+                        if o.kind in _TRAFFIC or o.kind in _COLLECTIVES:
+                            pure_elementwise = False
+                    total += Cost(sub.flops, 0.0, sub.coll_bytes,
+                                  sub.coll_count, dict(sub.coll_by_kind))
+                # Fusion traffic model: internals use the same op rules
+                # (slices charge slice-sized bytes); the boundary streams
+                # at most result-sized reads per operand plus the output
+                # write.  In-place update fusions (DUS root) write only the
+                # updated region, already charged by the internal rule.
+                # Pure-elementwise fusions (the CPU backend wraps EVERY
+                # elementwise op in its own kLoop fusion) charge nothing:
+                # on TPU these fuse into their producers/consumers.
+                if pure_elementwise and not has_dus:
+                    pass
+                elif has_dus:
+                    total += Cost(0.0, inner_bytes, 0.0, 0)
+                else:
+                    res = op.result_bytes
+                    opb = sum(min(_shape_bytes(table.get(o, "")), res)
+                              for o in op.operands)
+                    total += Cost(0.0, inner_bytes + opb + res, 0.0, 0)
+                continue
+            if base_kind in _COLLECTIVES:
+                n = _group_size(op.attrs)
+                full = op.result_bytes
+                if base_kind == "reduce-scatter":
+                    full *= n
+                w = _ring_weight(base_kind, n)
+                opb = sum(_shape_bytes(table.get(o, ""))
+                          for o in op.operands)
+                total += Cost(0.0, opb + op.result_bytes, full * w, 1,
+                              {base_kind: full * w})
+                continue
+            if base_kind in _NO_TRAFFIC:
+                continue
+            flops = 0.0
+            if base_kind == "dot":
+                flops = _dot_flops(op, table)
+            if base_kind in ("slice", "dynamic-slice", "gather"):
+                # reads + writes only the slice, not the source buffer
+                total += Cost(flops, 2 * op.result_bytes, 0.0, 0)
+            elif base_kind == "dynamic-update-slice":
+                upd = _shape_bytes(table.get(op.operands[1], "")) \
+                    if len(op.operands) > 1 else op.result_bytes
+                total += Cost(flops, 2 * upd, 0.0, 0)
+            elif base_kind == "scatter":
+                upd = _shape_bytes(table.get(op.operands[2], "")) \
+                    if len(op.operands) > 2 else op.result_bytes
+                total += Cost(flops, 3 * upd, 0.0, 0)
+            elif base_kind in _TRAFFIC:
+                opb = sum(_shape_bytes(table.get(o, ""))
+                          for o in op.operands)
+                cb = opb + op.result_bytes if base_kind == "copy" else 0.0
+                total += Cost(flops, opb + op.result_bytes, 0.0, 0,
+                              copy_bytes=cb)
+            else:
+                total += Cost(flops, 0.0, 0.0, 0)
+        memo[cname] = total
+        return total
+
+    return cost_of(entry) if entry else Cost()
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_global: float
+    chips: int
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    n_collectives: int = 0
+    coll_by_kind: dict = field(default_factory=dict)
+    ca_flops: float = 0.0           # raw cost_analysis (loop bodies x1)
+    ca_bytes: float = 0.0
+    copy_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_memory_nocopy(self) -> float:
+        """Memory term excluding raw copies — the TPU number (donation +
+        in-place dynamic-update-slice removes them; the CPU backend we
+        compile on inserts copies the TPU backend would alias away)."""
+        return max(self.bytes_per_dev - self.copy_bytes, 0.0) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = dict(compute=self.t_compute, memory=self.t_memory,
+                  collective=self.t_collective)
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_global = self.flops_per_dev * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOP fraction of peak, assuming perfect overlap: the step
+        cannot run faster than max(t_compute, t_memory, t_collective)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t == 0:
+            return 0.0
+        return (self.model_flops_global / self.chips) / (PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            model_flops=self.model_flops_global,
+            hlo_flops_per_dev=self.flops_per_dev,
+            hlo_bytes_per_dev=self.bytes_per_dev,
+            coll_bytes_per_dev=self.coll_bytes_per_dev,
+            coll_by_kind=self.coll_by_kind,
+            useful_ratio=self.useful_ratio,
+            roofline_fraction=self.roofline_fraction,
+            t_memory_nocopy=self.t_memory_nocopy,
+            copy_bytes=self.copy_bytes,
+            temp_bytes=self.temp_bytes, argument_bytes=self.argument_bytes,
+            n_collectives=self.n_collectives,
+            ca_flops=self.ca_flops, ca_bytes=self.ca_bytes)
+
+
+def analyse(arch, shape, mesh_name, compiled, model_flops_global, chips,
+            hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyse_hlo(hlo)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_dev=cost.flops,
+        bytes_per_dev=cost.bytes,
+        coll_bytes_per_dev=cost.coll_bytes,
+        model_flops_global=model_flops_global, chips=chips,
+        argument_bytes=getattr(ma, "argument_size_in_bytes", 0),
+        output_bytes=getattr(ma, "output_size_in_bytes", 0),
+        temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+        n_collectives=cost.coll_count,
+        coll_by_kind=dict(cost.coll_by_kind),
+        ca_flops=float(ca.get("flops", 0.0)),
+        ca_bytes=float(ca.get("bytes accessed", 0.0)),
+        copy_bytes=cost.copy_bytes)

@@ -1,0 +1,89 @@
+"""Input specs (ShapeDtypeStruct stand-ins) for every (arch x shape) cell.
+
+No device allocation happens here: training batches, serving caches and
+parameters are all described as shape/dtype structs that the dry-run lowers
+against, exactly like weak-type-correct tracing inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.parallel import sharding
+from repro.serving import engine
+
+
+def plan_parallel(cfg: ModelConfig, shape: ShapeConfig,
+                  multi_pod: bool = False) -> ParallelConfig:
+    """Production parallelism for one cell on the (16,16)/(2,16,16) mesh."""
+    pods = 2 if multi_pod else 1
+    dp, tp = 16, 16
+    shard_seq = shape.kind == "decode" and shape.global_batch < dp * pods
+    return ParallelConfig(tp=tp, dp=dp, pods=pods,
+                          shard_seq_for_decode=shard_seq)
+
+
+def dec_seq(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Decoder-token sequence length for one cell (enc-dec and VLM archs
+    consume part of the cell's seq_len with frontend positions)."""
+    if cfg.encoder_layers:
+        return shape.seq_len // cfg.encoder_seq_ratio
+    return shape.seq_len
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.encoder_layers:
+        sd = dec_seq(cfg, shape)
+        return dict(tokens=jax.ShapeDtypeStruct((b, sd), i32),
+                    targets=jax.ShapeDtypeStruct((b, sd), i32),
+                    frames=jax.ShapeDtypeStruct((b, s, cfg.d_model), dt))
+    if cfg.family == "vlm":
+        st = s - cfg.num_patches
+        return dict(tokens=jax.ShapeDtypeStruct((b, st), i32),
+                    targets=jax.ShapeDtypeStruct((b, st), i32),
+                    patches=jax.ShapeDtypeStruct((b, cfg.num_patches,
+                                                  cfg.d_model), dt))
+    return dict(tokens=jax.ShapeDtypeStruct((b, s), i32),
+                targets=jax.ShapeDtypeStruct((b, s), i32))
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      pcfg: ParallelConfig):
+    """Returns (tokens_struct, cache_structs, extra_structs, cache_pspecs)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    seq_shard = pcfg.shard_seq_for_decode
+    sd = dec_seq(cfg, shape)
+
+    if shape.kind == "prefill":
+        caches, cache_specs = engine.build_caches(
+            cfg, b, s if not cfg.encoder_layers else sd, pcfg,
+            for_decode=False, structs_only=True)
+        extra = {}
+        if cfg.encoder_layers:
+            extra["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+            tok = jax.ShapeDtypeStruct((b, sd), i32)
+        elif cfg.family == "vlm":
+            extra["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), dt)
+            tok = jax.ShapeDtypeStruct((b, s - cfg.num_patches), i32)
+        else:
+            tok = jax.ShapeDtypeStruct((b, s), i32)
+        return tok, caches, extra, cache_specs
+
+    # decode: one new token against a cache of seq_len
+    caches, cache_specs = engine.build_caches(
+        cfg, b, sd if cfg.encoder_layers else s, pcfg, for_decode=True,
+        seq_shard_data=seq_shard, enc_s=s if cfg.encoder_layers else 0,
+        structs_only=True)
+    tok = jax.ShapeDtypeStruct((b,), i32)
+    return tok, caches, {}, cache_specs

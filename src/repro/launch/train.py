@@ -1,0 +1,69 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch ladder-1b \
+      --residual ladder --steps 300 --tp 2 --dp 2 \
+      --reduced --ckpt /tmp/run1
+
+On the production pod this launches with tp=16/dp=16 (and --pods 2) over the
+real mesh; on this CPU container use --devices to fake a small mesh.
+"""
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ladder-1b")
+    ap.add_argument("--residual", default="ladder")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N fake host devices (CPU testing)")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) config of the family")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+            f" --xla_force_host_platform_device_count={args.devices}"
+
+    import jax
+    from repro.configs import TrainConfig, ParallelConfig, get_config
+    from repro.launch.mesh import make_mesh_for
+    from repro.training.data import SyntheticLM
+    from repro.training.trainer import Trainer
+
+    cfg = get_config(args.arch, residual=args.residual)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.n_layers, d_model=args.d_model,
+                          n_heads=max(4, args.d_model // 64),
+                          d_ff=args.d_model * 4, vocab_size=2048)
+    pcfg = ParallelConfig(tp=args.tp, dp=args.dp, pods=args.pods)
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=args.warmup,
+                       total_steps=args.steps,
+                       checkpoint_every=args.ckpt_every)
+    mesh = make_mesh_for(pcfg.world, args.tp, args.pods)
+    loader = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch)
+    trainer = Trainer(cfg, mesh, pcfg, tcfg, ckpt_dir=args.ckpt,
+                      zero1=args.zero1, fsdp=args.fsdp)
+    state = trainer.resume_or_init()
+    state = trainer.fit(state, loader, args.steps - state.step)
+    print(f"done at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

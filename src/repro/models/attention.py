@@ -1,0 +1,410 @@
+"""Attention modules: GQA (full / sliding-window), MLA, enc-dec cross-attn.
+
+All functions return TP-*partial* outputs: the projection back to d_model is
+computed against this shard's heads only, and the completing AllReduce is
+owned by the residual topology driver (core/residual.py) — that placement is
+the Ladder-Residual mechanism.
+
+Memory discipline: naive (S, S) score materialisation at 32k/500k sequence
+lengths would blow past HBM, so the jnp paths use an online-softmax scan over
+query blocks ("flash in jnp"); the Pallas kernel (kernels/flash_attention.py)
+implements the same algorithm with explicit VMEM tiling for TPU.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+from repro.parallel.collectives import AxisEnv
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype):
+    ks = jax.random.split(key, 4)
+    return dict(
+        wq=dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        wk=dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        wv=dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        wo=dense_init(ks[3], n_heads * head_dim, d_model, dtype,
+                      scale=(n_heads * head_dim) ** -0.5),
+    )
+
+
+def init_mla(key, d_model: int, n_heads: int, mla, dtype):
+    """DeepSeek-V2 multi-head latent attention parameters (full shapes)."""
+    ks = jax.random.split(key, 6)
+    qk_head = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    return dict(
+        # query path (uncompressed for V2-Lite: q_lora_rank == 0)
+        wq=dense_init(ks[0], d_model, n_heads * qk_head, dtype),
+        # kv compression: d_model -> kv_lora + shared rope key
+        wkv_a=dense_init(ks[1], d_model, mla.kv_lora_rank + mla.qk_rope_head_dim,
+                         dtype),
+        # decompression: kv_lora -> per-head (nope key + value)
+        wkv_b=dense_init(ks[2], mla.kv_lora_rank,
+                         n_heads * (mla.qk_nope_head_dim + mla.v_head_dim),
+                         dtype),
+        wo=dense_init(ks[3], n_heads * mla.v_head_dim, d_model, dtype,
+                      scale=(n_heads * mla.v_head_dim) ** -0.5),
+    )
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention (online, blocked)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hkv,G,hd)  k: (B,Sk,Hkv,hd) -> (B,Hkv,G,Sq,Sk)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _direct_attention(q, k, v, mask, softcap: float):
+    s = _gqa_scores(q, k)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def _causal_mask(sq, sk, q_offset, window: int):
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m  # (sq, sk)
+
+
+def blocked_causal_attention(q, k, v, *, scale: float, window: int = 0,
+                             softcap: float = 0.0, block_q: int = 512,
+                             block_k: int = 1024, causal: bool = True):
+    """Online-softmax attention, O(block) memory (causal or bidirectional).
+
+    q: (B, S, Hq, hd); k, v: (B, S, Hkv, hd).  Returns (B, S, Hq, hd).
+    For short sequences falls back to the direct path (exact same math).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    hdv = v.shape[-1]            # value head dim may differ (MLA)
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd) * scale
+
+    if s <= block_q:
+        if causal:
+            mask = _causal_mask(s, s, 0, window)[None, None, None]
+        else:
+            mask = jnp.ones((1, 1, 1, s, s), bool)
+        out = _direct_attention(qg, k, v, mask, softcap)
+        return out.reshape(b, s, hq, hdv)
+
+    nq = -(-s // block_q)
+    pad = nq * block_q - s
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qblocks = qg.reshape(b, nq, block_q, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    kv_len = k.shape[1]
+
+    def q_step(carry, inp):
+        qi, blk = inp  # blk: (B, bq, Hkv, G, hd)
+        q_off = qi * block_q
+        if window:
+            # only the key range [q_off - window, q_off + block_q) matters
+            k_lo = jnp.maximum(q_off - window, 0)
+            span = min(window + block_q, kv_len)
+            k_lo = jnp.minimum(k_lo, kv_len - span)
+            ks = jax.lax.dynamic_slice_in_dim(k, k_lo, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, k_lo, span, axis=1)
+            qpos = q_off + jnp.arange(block_q)[:, None]
+            kpos = k_lo + jnp.arange(span)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window)
+            out = _direct_attention(blk, ks, vs, mask[None, None, None], softcap)
+            return carry, out
+        # full causal: stream keys in blocks with online softmax
+        nk = -(-kv_len // block_k)
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        acc0 = jnp.zeros((b, block_q, hkv, g, hdv), jnp.float32)
+
+        def k_step(st, ki):
+            m, l, acc = st
+            k_off = ki * block_k
+            ks = jax.lax.dynamic_slice_in_dim(k, k_off, block_k, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, k_off, block_k, axis=1)
+            s_blk = _gqa_scores(blk, ks)  # (B,Hkv,G,bq,bk)
+            if softcap:
+                s_blk = jnp.tanh(s_blk / softcap) * softcap
+            qpos = q_off + jnp.arange(block_q)[:, None]
+            kpos = k_off + jnp.arange(block_k)[None, :]
+            valid = ((kpos <= qpos) if causal else True) & (kpos < kv_len)
+            s_blk = jnp.where(valid[None, None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vs.dtype), vs)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        # keys beyond this q block are always masked: stop early via bound
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, acc0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l.transpose(0, 3, 1, 2)[..., None], 1e-37)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qblocks))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, hq, hdv)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module (train/prefill/decode)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, x, head_dim):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, -1, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, -1, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, -1, head_dim)
+    return q, k, v
+
+
+def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
+              rope_theta: float, window: int = 0, softcap: float = 0.0,
+              use_pallas: bool = False, cache: Optional[dict] = None,
+              kv_override=None):
+    """Causal self-attention (or cross-attention via kv_override).
+
+    Returns (partial_out, new_cache).  partial_out requires a psum over the
+    model axis (applied by the topology driver).
+
+    cache: None for train; a KV-cache dict for prefill (length==0) or decode.
+    kv_override: (k, v, kv_mask) precomputed keys/values for cross-attention.
+    """
+    scale = 1.0 / math.sqrt(head_dim)
+    q, k, v = _project_qkv(params, x, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    if kv_override is None:
+        k = apply_rope(k, positions, rope_theta)
+
+    s = x.shape[1]
+    if kv_override is not None:
+        ko, vo, kv_mask = kv_override
+        out = _encoder_attention(q * scale, ko, vo, kv_mask, softcap)
+    elif cache is None or s > 1:
+        # train, or prefill: attention over the fresh K/V via the blocked
+        # online-softmax path (prefill additionally writes the cache; the
+        # math is identical to attending against the just-filled cache).
+        if cache is not None:
+            from repro.serving.kv_cache import cache_update
+            cache = cache_update(cache, k, v, positions, env)
+        if use_pallas:
+            from repro.kernels import ops
+            out = ops.flash_attention(q, k, v, scale=scale, window=window,
+                                      softcap=softcap)
+        else:
+            out = blocked_causal_attention(q, k, v, scale=scale, window=window,
+                                           softcap=softcap)
+    else:
+        from repro.serving.kv_cache import cache_update
+        cache = cache_update(cache, k, v, positions, env)
+        out = _cached_attention(q * scale, cache, positions, env,
+                                softcap=softcap)
+
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, -1)
+    return out @ params["wo"], cache
+
+
+def _encoder_attention(q, k, v, kv_mask, softcap: float):
+    """Bidirectional / cross attention (no causal mask)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, s, hkv, hq // hkv, hd)
+    mask = kv_mask[:, None, None, None, :] if kv_mask is not None else \
+        jnp.ones((1, 1, 1, 1, k.shape[1]), bool)
+    out = _direct_attention(qg, k, v, mask, softcap)
+    return out.reshape(b, s, hq, hd)
+
+
+def _cached_attention(q, cache, positions, env: AxisEnv, *, softcap: float):
+    """Attention of q against a KV cache (decode / prefill-with-cache).
+
+    Supports seq-sharded caches (flash-decoding): when the cache carries
+    ``seq_shards > 1`` each data shard holds a slice of the sequence and
+    partial softmax statistics are combined with a psum over the data axis.
+    """
+    k, v = cache["k"], cache["v"]         # heads-major: (B, Hkv, Sk, hd)
+    slot_pos = cache["slot_pos"]          # (S_slots,) absolute pos or -1
+    b, s, hq, hd = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(b, s, hkv, hq // hkv, hd)
+
+    cur = positions[:, -1][:, None]        # (B,1) current absolute position
+    valid = (slot_pos[None, :] >= 0) & (slot_pos[None, :] <= cur)  # (B,Sk)
+    if s > 1:  # prefill into cache: causal among the new tokens
+        valid = (slot_pos[None, None, :] >= 0) & \
+                (slot_pos[None, None, :] <= positions[:, :, None])
+        mask = valid[:, None, None]
+    else:
+        mask = valid[:, None, None, None]   # (B,1,1,1,Sk)
+
+    # heads-major cache: dot has batch dims (b,h), contraction d — no
+    # transpose of the cache is materialised
+    scores = jnp.einsum("bqhgd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    if cache.get("seq_sharded", False) and env._dp_axes():
+        # flash-decoding combine: partial softmax stats across seq shards
+        m_loc = jnp.max(scores, axis=-1)
+        m_glob = jnp.max(env.all_gather_dp(m_loc), axis=0)
+        p = jnp.exp(scores - m_glob[..., None])
+        num = jnp.einsum("bhgqk,bhkd->bqhgd", p.astype(v.dtype), v)
+        den = jnp.sum(p, axis=-1)
+        num = env.psum_dp(num)
+        den = env.psum_dp(den)
+        out = num / jnp.maximum(den.transpose(0, 3, 1, 2)[..., None], 1e-37)
+    else:
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed-KV attention
+# ---------------------------------------------------------------------------
+
+def mla_attention(params, x, positions, env: AxisEnv, *, mla, rope_theta: float,
+                  cache: Optional[dict] = None):
+    """Multi-head latent attention.  The KV cache stores only the compressed
+    latent (kv_lora_rank) + the shared rope key — the paper-exact memory win.
+
+    This shard holds n_heads/tp heads of wq / wkv_b / wo; wkv_a is replicated
+    (it is tiny and produces the shared latent).
+    """
+    b, s, _ = x.shape
+    rope_d, nope_d, v_d = mla.qk_rope_head_dim, mla.qk_nope_head_dim, mla.v_head_dim
+    qk_head = nope_d + rope_d
+
+    q = (x @ params["wq"]).reshape(b, s, -1, qk_head)
+    n_heads_local = q.shape[2]
+    q_nope, q_rope = jnp.split(q, [nope_d], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = x @ params["wkv_a"]                       # (B,S,lora+rope)
+    c_kv, k_rope = jnp.split(ckv, [mla.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    scale = 1.0 / math.sqrt(qk_head)
+
+    if cache is not None and s > 1:
+        # Prefill: write the compressed cache, then decompress the *fresh*
+        # latents and run blocked attention (identical math, O(block) memory).
+        from repro.serving.kv_cache import mla_cache_update
+        cache = mla_cache_update(cache, c_kv, k_rope, positions, env)
+
+    if cache is not None and s == 1:
+        # --- absorbed decode path ------------------------------------------
+        # Fold wkv_b into the query and output projections so scores and the
+        # attention-weighted combine run directly in the compressed latent
+        # space: per decode step this is O(S * kv_lora) instead of
+        # re-decompressing the full K/V (the standard MLA "matrix
+        # absorption"; see EXPERIMENTS.md §Perf).
+        from repro.serving.kv_cache import mla_cache_update
+        cache = mla_cache_update(cache, c_kv, k_rope, positions, env)
+        c_kv, k_rope = cache["c_kv"], cache["k_rope"]
+        slot_pos = cache["slot_pos"]
+
+        w_b = params["wkv_b"].reshape(mla.kv_lora_rank, n_heads_local,
+                                      nope_d + v_d)
+        w_uk, w_uv = w_b[..., :nope_d], w_b[..., nope_d:]
+        q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)      # latent query
+
+        flash_model = cache["seq_sharded_model"] and env.model
+        if flash_model:
+            # §Perf hillclimb: latent cache is SEQ-sharded over the model
+            # axis; queries (tiny in latent space) are gathered so every
+            # shard scores ALL heads against its sequence slice, then the
+            # softmax stats combine with a psum over 'model'.  Cuts decode
+            # cache memory and reads by tp at the cost of ~B*H*lora bytes
+            # of gathered queries per step.
+            h_local = q_lat.shape[2]
+            q_lat = jax.lax.all_gather(q_lat, env.model, axis=2, tiled=True)
+            q_rope_g = jax.lax.all_gather(q_rope, env.model, axis=2,
+                                          tiled=True)
+            s_nope = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv,
+                                preferred_element_type=jnp.float32)
+            s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope_g, k_rope,
+                                preferred_element_type=jnp.float32)
+            scores = (s_nope + s_rope) * scale
+            cur = positions[:, -1][:, None]
+            mask = ((slot_pos[None, :] >= 0) &
+                    (slot_pos[None, :] <= cur))[:, None, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+            m_loc = jnp.max(scores, axis=-1)
+            m_glob = jnp.max(jax.lax.all_gather(m_loc, env.model), axis=0)
+            p = jnp.exp(scores - m_glob[..., None])
+            num = jnp.einsum("bhqk,bkl->bqhl", p.astype(c_kv.dtype), c_kv)
+            den = jnp.sum(p, axis=-1)
+            num = jax.lax.psum(num, env.model)
+            den = jax.lax.psum(den, env.model)
+            o_lat = num / jnp.maximum(
+                den.transpose(0, 2, 1)[..., None].astype(num.dtype), 1e-37)
+            # slice back this shard's heads for the (head-sharded) w_uv/wo
+            i = env.model_axis_index()
+            o_lat = jax.lax.dynamic_slice_in_dim(o_lat, i * h_local,
+                                                 h_local, axis=2)
+            out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv)
+            out = out.reshape(b, s, -1)
+            return out @ params["wo"], cache
+
+        s_nope = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                            preferred_element_type=jnp.float32)
+        scores = (s_nope + s_rope) * scale
+        if s > 1:
+            mask = (slot_pos[None, None, None, :] >= 0) & \
+                   (slot_pos[None, None, None, :] <= positions[:, None, :, None])
+        else:
+            cur = positions[:, -1][:, None]
+            mask = ((slot_pos[None, :] >= 0) &
+                    (slot_pos[None, :] <= cur))[:, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkl->bqhl", p.astype(c_kv.dtype), c_kv)
+        out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv)
+        out = out.reshape(b, s, -1)
+        return out @ params["wo"], cache
+
+    # --- train / prefill: decompress K/V and run blocked causal attention --
+    # q.k = q_nope.k_nope + q_rope.k_rope, so concatenating the rope part
+    # onto both queries and keys reproduces the MLA score exactly while
+    # reusing the O(block)-memory online-softmax path.
+    kv = (c_kv @ params["wkv_b"]).reshape(b, c_kv.shape[1], n_heads_local,
+                                          nope_d + v_d)
+    k_nope, v = jnp.split(kv, [nope_d], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_nope.shape[:3], rope_d))
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    out = blocked_causal_attention(q_cat, k_cat, v, scale=scale)
+    out = out.reshape(b, s, -1)
+    return out @ params["wo"], cache

@@ -1,0 +1,175 @@
+"""Shared primitive layers (pure functions over param pytrees).
+
+Conventions
+-----------
+* Parameters are nested dicts of ``jnp.ndarray``.  ``init_*`` functions build
+  FULL (unsharded) parameters; the launch layer slices them via shard_map
+  in_specs.  Inside shard_map the arrays arrive pre-sliced, and all layer
+  code derives head counts / widths from the *actual* array shapes, so the
+  same function body runs at TP=1 and TP=16.
+* Linear layers keep weights as (in, out) and compute ``x @ w``.
+* The AllReduce that completes a TP-partial output is NOT applied here; it is
+  owned by the residual topology driver (core/residual.py) — that placement
+  is the paper's contribution.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import AxisEnv
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-5, env: AxisEnv | None = None,
+            use_pallas: bool = False):
+    """RMSNorm over the feature axis.
+
+    With SP the residual is seq-sharded (features full), so no cross-device
+    reduction is needed here.  ``use_pallas`` dispatches to the fused Pallas
+    kernel on TPU-shaped inputs.
+    """
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.rmsnorm(x, weight, eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype):
+    # stored as (weight - 1) like gemma/llama "zero-centered" convention
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding (vocab-sharded over the model axis)
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table, tokens, env: AxisEnv):
+    """Vocab-sharded embedding lookup.
+
+    ``table`` arrives with shape (vocab/tp, d_model) inside shard_map.  Each
+    shard contributes rows it owns; a psum over the model axis completes the
+    lookup.  (This psum is tiny — (B,S,D) bf16 — and is issued once at the
+    stack entry, where the Ladder schedule cannot help; it is counted in the
+    roofline's collective term.)
+    """
+    vshard = table.shape[0]
+    idx = tokens - env.model_axis_index() * vshard
+    ok = (idx >= 0) & (idx < vshard)
+    x = jnp.where(ok[..., None], jnp.take(table, jnp.clip(idx, 0, vshard - 1),
+                                          axis=0), 0)
+    return env.psum_model(x)
+
+
+def lm_head_logits(x, table):
+    """Per-shard logits against a vocab-sharded (tied) embedding table.
+
+    Returns vocab-sharded logits (B, S, vocab/tp); consumers use the sharded
+    softmax in :func:`sharded_cross_entropy` so the full logits tensor is
+    never materialised (a memory-roofline win for 200k+ vocabularies).
+    """
+    return x @ table.T.astype(x.dtype)
+
+
+def sharded_cross_entropy(logits_shard, targets, env: AxisEnv,
+                          z_loss: float = 0.0,
+                          true_vocab: Optional[int] = None):
+    """Stable cross-entropy over vocab-sharded logits.
+
+    logits_shard: (B, S, V/tp) — this shard's slice of the vocab.
+    targets: (B, S) global token ids.
+    true_vocab: unpadded vocabulary size; padded columns are masked out of
+    the softmax (Megatron-style), so padded embedding rows receive exactly
+    zero gradient.
+    Returns per-token negative log-likelihood (B, S) replicated over model.
+    """
+    vshard = logits_shard.shape[-1]
+    lf = logits_shard.astype(jnp.float32)
+    if true_vocab is not None:
+        col = jnp.arange(vshard) + env.model_axis_index() * vshard
+        lf = jnp.where(col < true_vocab, lf, -1e30)
+    local_max = jnp.max(lf, axis=-1)
+    if env.model:
+        gmax = jnp.max(jax.lax.all_gather(local_max, env.model), axis=0)
+    else:
+        gmax = local_max
+    gmax = jax.lax.stop_gradient(gmax)
+    ex = jnp.exp(lf - gmax[..., None])
+    denom = env.psum_model(jnp.sum(ex, axis=-1))
+    tidx = targets - env.model_axis_index() * vshard
+    ok = (tidx >= 0) & (tidx < vshard)
+    picked = jnp.take_along_axis(lf, jnp.clip(tidx, 0, vshard - 1)[..., None],
+                                 axis=-1)[..., 0]
+    picked = env.psum_model(jnp.where(ok, picked, 0.0))
+    logz = jnp.log(denom)
+    nll = -(picked - gmax - logz)
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz + gmax)
+    return nll
+
+
+# ---------------------------------------------------------------------------
+# MLPs (TP-partial outputs — no psum here)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = dict(up=dense_init(ks[0], d_model, d_ff, dtype))
+    if gated:
+        p["gate"] = dense_init(ks[1], d_model, d_ff, dtype)
+    p["down"] = dense_init(ks[2], d_ff, d_model, dtype,
+                           scale=d_ff ** -0.5)
+    return p
+
+
+def mlp(params, x, gated: bool = True):
+    """SwiGLU / GELU MLP; returns a TP-partial output (d_ff is sharded)."""
+    up = x @ params["up"]
+    if gated:
+        h = jax.nn.silu(x @ params["gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["down"]

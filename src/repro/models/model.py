@@ -1,0 +1,91 @@
+"""Public model API: init / apply / parameter accounting."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (forward, init_params, logits_shard,
+                                      padded_vocab, param_specs,
+                                      plan_sections)
+from repro.parallel.collectives import NULL_ENV, AxisEnv
+
+
+def build_model(cfg: ModelConfig):
+    """Returns (init_fn, apply_fn) closures for the given config."""
+
+    def init_fn(key):
+        return init_params(cfg, key)
+
+    def apply_fn(params, tokens, env: AxisEnv = NULL_ENV, **kw):
+        return forward(cfg, params, tokens, env, **kw)
+
+    return init_fn, apply_fn
+
+
+def _leaf_count(specs) -> int:
+    import math
+    # NOTE: not jnp.prod — int32 overflow on >2.1e9-element leaves (dbrx
+    # expert stacks) silently truncated counts.
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(specs))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count from the shape-only init (no allocation)."""
+    return _leaf_count(param_specs(cfg))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token: routed-expert weights scaled by
+    top_k/num_experts (shared experts and everything else count fully)."""
+    specs = param_specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    total = 0
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "experts" in keys and cfg.moe is not None:
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total
+
+
+def count_params_analytical(cfg: ModelConfig, active_only: bool = False) -> int:
+    return count_active_params(cfg) if active_only else count_params(cfg)
+
+
+def model_flops(cfg: ModelConfig, tokens: int, train: bool = False,
+                decode_context: int = 0) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference fwd) with N the
+    active parameter count; attention score FLOPs added explicitly for
+    decode against a long context (where they dominate)."""
+    n = count_active_params(cfg)
+    # exclude embedding tables from the 6ND convention
+    n_emb = padded_vocab(cfg.vocab_size) * cfg.d_model
+    n_body = n - n_emb * (1 if cfg.tie_embeddings else 2)
+    mult = 6.0 if train else 2.0
+    flops = mult * n_body * tokens + 2.0 * n_emb * tokens  # lm head matmul
+    if decode_context:
+        # per-token attention over the KV cache; sliding-window layers only
+        # see min(context, window) keys
+        full_ctx = win_ctx = 0
+        for k in cfg.layer_kinds():
+            if k.name == "LOCAL_ATTN_MLP":
+                win_ctx += 1
+            elif "ATTN" in k.name or "MLA" in k.name:
+                full_ctx += 1
+        eff = full_ctx * decode_context + win_ctx * min(
+            decode_context, cfg.sliding_window or decode_context)
+        flops += mult / 3 * 2 * tokens * eff * cfg.n_heads * cfg.head_dim * 2
+    return flops
+
+
+__all__ = ["build_model", "count_params", "count_active_params",
+           "count_params_analytical", "forward", "init_params",
+           "logits_shard", "model_flops", "padded_vocab", "param_specs",
+           "plan_sections"]

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN with expert parallelism over the model axis.
+
+Sharding strategy ("TP-style EP", DESIGN.md §Parallelism): after attention's
+AllReduce the token activations are replicated across the model axis, so each
+model shard routes the full token set but evaluates only its *local* experts
+(E/tp per shard).  Each shard's contribution is the capacity-limited
+combine of its experts' outputs; the completing psum over the model axis is
+owned by the residual topology driver — exactly the same collective slot a
+dense MLP occupies, so the Ladder-Residual overlap applies to MoE layers
+unchanged.
+
+Dispatch is GShard-style with a fixed per-expert capacity so all shapes are
+static (required for lowering); dropped tokens fall back to the residual
+stream.  The router runs in fp32 with an optional load-balance aux loss.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, mlp
+from repro.parallel.collectives import AxisEnv
+
+
+def init_moe(key, d_model: int, moe_d_ff: int, num_experts: int,
+             num_shared: int, dtype, gated: bool = True):
+    """Full (unsharded) MoE parameters.
+
+    experts: stacked (E, ...) tensors — sharded over the model axis on dim 0.
+    shared experts are fused into one wider MLP sharded on d_ff (plain TP).
+    router: replicated (it is d_model x E, tiny).
+    """
+    ks = jax.random.split(key, 3)
+    p = dict(router=dense_init(ks[0], d_model, num_experts, jnp.float32))
+    ek = jax.random.split(ks[1], 3)
+    p["experts"] = dict(
+        up=jax.vmap(lambda k: dense_init(k, d_model, moe_d_ff, dtype))(
+            jax.random.split(ek[0], num_experts)),
+        gate=jax.vmap(lambda k: dense_init(k, d_model, moe_d_ff, dtype))(
+            jax.random.split(ek[1], num_experts)),
+        down=jax.vmap(lambda k: dense_init(k, moe_d_ff, d_model, dtype,
+                                           scale=moe_d_ff ** -0.5))(
+            jax.random.split(ek[2], num_experts)),
+    )
+    if not gated:
+        del p["experts"]["gate"]
+    if num_shared:
+        p["shared"] = init_mlp(ks[2], d_model, moe_d_ff * num_shared, dtype,
+                               gated=gated)
+    return p
+
+
+def moe_ffn(params, x, env: AxisEnv, *, top_k: int, num_experts: int,
+            capacity_factor: float, gated: bool = True,
+            aux_loss_weight: float = 0.0,
+            train: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (partial_out, aux_loss).  partial_out needs psum over model.
+
+    x: (B, S, D) replicated over the model axis.
+    params["experts"]: this shard's (E_local, ...) expert stack.
+    train: capacity-factor dropping applies only in training; inference
+    (prefill/decode) uses a drop-free capacity (worst case every token
+    routes to the same expert), so cached decoding matches the full
+    forward exactly.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    e_local = params["experts"]["up"].shape[0]
+    logits = (xt.astype(jnp.float32) @ params["router"])      # (T, E) global
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.float32),
+                axis=1), axis=0)
+    aux = aux_loss_weight * num_experts * jnp.sum(me * ce)
+
+    if train:
+        capacity = max(int(capacity_factor * t * top_k / num_experts), 1)
+    else:
+        capacity = t  # drop-free: a token assigns to an expert at most once
+    # position of each (token, k) assignment within its expert's queue
+    onehot = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.int32)  # (T,k,E)
+    flat = onehot.reshape(t * top_k, num_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)          # (T*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(t, top_k)
+    keep = pos < capacity
+
+    shard_lo = env.model_axis_index() * e_local
+    local_idx = gate_idx - shard_lo
+    mine = (local_idx >= 0) & (local_idx < e_local) & keep
+    local_idx = jnp.clip(local_idx, 0, e_local - 1)
+
+    # scatter tokens into (E_local * capacity, D) buffers.  The k slots are
+    # processed one at a time so no (T, k, D) tensor is ever materialised
+    # (at dbrx scale that tensor would be ~3 GB/device).
+    flat_dst = local_idx * capacity + jnp.clip(pos, 0, capacity - 1)
+    ec = e_local * capacity
+    buf = jnp.zeros((ec, d), x.dtype)
+    for kk in range(top_k):
+        idx_k = jnp.where(mine[:, kk], flat_dst[:, kk], ec)  # ec == dropped
+        buf = buf.at[idx_k].add(jnp.where(mine[:, kk, None], xt, 0),
+                                mode="drop")
+    buf = buf.reshape(e_local, capacity, d)
+
+    # expert compute: batched over local experts
+    def one_expert(w, xb):
+        return mlp(w, xb[None], gated=gated)[0]
+    eout = jax.vmap(one_expert)(params["experts"], buf)        # (E_l, C, D)
+    eout = eout.reshape(ec, d)
+
+    # gather back, accumulating the gate-weighted expert outputs per k slot
+    out = jnp.zeros((t, d), x.dtype)
+    for kk in range(top_k):
+        g = jnp.take(eout, jnp.clip(flat_dst[:, kk], 0, ec - 1), axis=0)
+        g = jnp.where(mine[:, kk, None], g, 0)
+        out = out + g * gate_vals[:, kk, None].astype(x.dtype)
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], xt[None], gated=gated)[0]
+
+    return out.reshape(b, s, d), aux

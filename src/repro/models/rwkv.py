@@ -1,0 +1,148 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+TP mapping: wkv heads are sharded over the model axis (per-head state
+S ∈ R^{head_dim x head_dim} is shard-local); the time-mix output projection
+and the channel-mix down projection produce TP-partial outputs whose psum is
+owned by the residual topology — so the Ladder schedule covers both
+sub-blocks of an attention-free architecture (DESIGN.md §Arch-applicability).
+
+The recurrence is evaluated with a scan over time steps (jnp path).  The
+Pallas kernel (kernels/rwkv6.py) evaluates the same recurrence with the state
+held in VMEM; both are validated against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.parallel.collectives import AxisEnv
+
+
+def init_rwkv6(key, d_model: int, d_ff: int, rwkv, dtype):
+    hd = rwkv.head_dim
+    n_heads = d_model // hd
+    ks = jax.random.split(key, 10)
+    return dict(
+        tmix=dict(
+            # token-shift interpolation weights (replicated; act on d_model)
+            mu_r=jnp.full((d_model,), 0.5, dtype),
+            mu_k=jnp.full((d_model,), 0.5, dtype),
+            mu_v=jnp.full((d_model,), 0.5, dtype),
+            mu_g=jnp.full((d_model,), 0.5, dtype),
+            mu_w=jnp.full((d_model,), 0.5, dtype),
+            wr=dense_init(ks[0], d_model, n_heads * hd, dtype),
+            wk=dense_init(ks[1], d_model, n_heads * hd, dtype),
+            wv=dense_init(ks[2], d_model, n_heads * hd, dtype),
+            wg=dense_init(ks[3], d_model, n_heads * hd, dtype),
+            # data-dependent decay: low-rank d_model -> lora -> heads*hd
+            w1=dense_init(ks[4], d_model, rwkv.decay_lora, dtype),
+            w2=dense_init(ks[5], rwkv.decay_lora, n_heads * hd, dtype,
+                          scale=0.1 * rwkv.decay_lora ** -0.5),
+            w_bias=jnp.full((n_heads * hd,), -6.0, jnp.float32),
+            u=(jax.random.normal(ks[6], (n_heads, hd), jnp.float32) * 0.1),
+            ln_w=jnp.zeros((n_heads * hd,), dtype),
+            wo=dense_init(ks[7], n_heads * hd, d_model, dtype,
+                          scale=(n_heads * hd) ** -0.5),
+        ),
+        cmix=dict(
+            mu_k=jnp.full((d_model,), 0.5, dtype),
+            wk_up=dense_init(ks[8], d_model, d_ff, dtype),
+            wv_down=dense_init(ks[9], d_ff, d_model, dtype,
+                               scale=d_ff ** -0.5),
+        ),
+    )
+
+
+def _token_shift(x, last: Optional[jnp.ndarray]):
+    """x[t-1] stream; `last` carries the final token for decode."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1) \
+            if x.shape[1] > 1 else last[:, None]
+    return prev
+
+
+def wkv6_scan(r, k, v, w, u, s0):
+    """Sequential WKV6 recurrence.
+
+    r,k,v: (B, S, H, hd); w: (B, S, H, hd) decay in (0,1); u: (H, hd).
+    s0: (B, H, hd, hd) state (key-dim first).  Returns (y, s_last).
+    y_t = (S_{t-1} + (u*k_t) v_t^T)^T r_t ;  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                   # (B,H,hd)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhij,bhi->bhj", s + u[None, :, :, None] * kv, rt)
+        s_new = s * wt[..., None] + kv
+        return s_new, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))     # (S,B,H,hd)
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), s_last
+
+
+def time_mix(p, x, env: AxisEnv, *, head_dim: int, use_pallas: bool = False,
+             state: Optional[dict] = None):
+    """RWKV6 time-mix.  Returns (partial_out, new_state)."""
+    bsz, s, d_model = x.shape
+    last = state["shift"] if state is not None else None
+    prev = _token_shift(x, last)
+
+    def lerp(mu):
+        return x + (prev - x) * mu
+
+    r = lerp(p["mu_r"]) @ p["wr"]
+    k = lerp(p["mu_k"]) @ p["wk"]
+    v = lerp(p["mu_v"]) @ p["wv"]
+    g = lerp(p["mu_g"]) @ p["wg"]
+    wx = lerp(p["mu_w"])
+    w = jnp.tanh(wx @ p["w1"]) @ p["w2"]
+    # decay in (0,1): exp(-exp(bias + lora))
+    w = jnp.exp(-jnp.exp(p["w_bias"] + w.astype(jnp.float32)))
+
+    n_local = r.shape[-1] // head_dim
+    hshape = (bsz, s, n_local, head_dim)
+    r, k, v, w = (t.reshape(hshape) for t in (r, k, v, w))
+
+    s0 = state["wkv"] if state is not None else \
+        jnp.zeros((bsz, n_local, head_dim, head_dim), jnp.float32)
+
+    if use_pallas and state is None:
+        from repro.kernels import ops
+        y, s_last = ops.rwkv6(r, k, v, w, p["u"], s0)
+    else:
+        y, s_last = wkv6_scan(r, k, v, w, p["u"], s0)
+
+    y = y.reshape(bsz, s, -1)
+    # group norm per head then gate
+    yf = y.astype(jnp.float32).reshape(bsz, s, n_local, head_dim)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = (yf * jax.lax.rsqrt(var + 1e-5)).reshape(bsz, s, -1)
+    y = (yf * (1.0 + p["ln_w"].astype(jnp.float32))).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    out = y @ p["wo"]
+
+    new_state = None
+    if state is not None:
+        new_state = dict(wkv=s_last, shift=x[:, -1])
+    return out, new_state
+
+
+def channel_mix(p, x, env: AxisEnv, state: Optional[dict] = None):
+    """RWKV6 channel-mix (squared-ReLU FFN).  Returns (partial_out, state)."""
+    last = state["shift"] if state is not None else None
+    prev = _token_shift(x, last)
+    xk = x + (prev - x) * p["mu_k"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk_up"]))
+    out = h @ p["wv_down"]
+    new_state = None
+    if state is not None:
+        new_state = dict(shift=x[:, -1])
+    return out, new_state

@@ -1,0 +1,209 @@
+"""Mamba2 block (SSD, chunked scan) — used by zamba2.
+
+TP mapping (DESIGN.md §Hardware-adaptation): the inner dimension (heads x
+head_dim) is sharded over the model axis, with per-head B/C projections
+(n_groups == n_heads) so every per-head quantity lives wholly on one shard.
+``out_proj`` therefore produces a TP-partial output whose completing psum is
+owned by the residual topology — the Ladder schedule applies to SSM layers
+exactly as to attention layers.
+
+State per head: h ∈ R^{d_state x head_dim}; A is a negative scalar per head
+(Mamba2 convention), dt is softplus-activated per head per step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.parallel.collectives import AxisEnv
+
+
+def init_mamba2(key, d_model: int, ssm, dtype):
+    """Full (unsharded) Mamba2 parameters.
+
+    The input projection is stored as separate per-segment matrices
+    (z | x | B | C | dt) rather than one packed matrix so each segment can
+    be column-sharded over the model axis independently (depthwise conv is
+    per-channel, so the segment split is mathematically exact).
+    """
+    d_inner = ssm.d_inner(d_model)
+    n_heads = ssm.n_heads(d_model)
+    n, hd, conv = ssm.d_state, ssm.head_dim, ssm.d_conv
+    ks = jax.random.split(key, 7)
+    return dict(
+        in_z=dense_init(ks[0], d_model, d_inner, dtype),
+        in_x=dense_init(ks[1], d_model, d_inner, dtype),
+        in_b=dense_init(ks[2], d_model, n_heads * n, dtype),
+        in_c=dense_init(ks[3], d_model, n_heads * n, dtype),
+        in_dt=dense_init(ks[4], d_model, n_heads, dtype),
+        conv_x=(jax.random.normal(ks[5], (conv, d_inner), jnp.float32)
+                * 0.1).astype(dtype),
+        conv_b=(jax.random.normal(ks[6], (conv, n_heads * n), jnp.float32)
+                * 0.1).astype(dtype),
+        conv_c=(jax.random.normal(ks[6], (conv, n_heads * n), jnp.float32)
+                * 0.1).astype(dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        dt_bias=jnp.zeros((n_heads,), jnp.float32),
+        d_skip=jnp.ones((n_heads,), jnp.float32),
+        norm_w=jnp.zeros((d_inner,), dtype),
+        out_proj=dense_init(ks[2], d_inner, d_model, dtype,
+                            scale=d_inner ** -0.5),
+    )
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv over time.  xbc: (B, S, C); conv_w: (K, C).
+
+    Returns (activated output, new conv state of the last K-1 inputs).
+    """
+    k = conv_w.shape[0]
+    if conv_state is not None:
+        xbc_ext = jnp.concatenate([conv_state, xbc], axis=1)
+        new_state = xbc_ext[:, -(k - 1):]
+    else:
+        xbc_ext = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xbc_ext[:, -(k - 1):]
+    out = sum(xbc_ext[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, b_mat, c_mat, dt, a_log, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, hd); b_mat/c_mat: (B, S, H, N); dt: (B, S, H) (softplus'd)
+    h0: (B, H, N, hd) initial state.  Returns (y, h_last).
+    """
+    bsz, s, h, hd = x.shape
+    n = b_mat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    a = -jnp.exp(a_log)                                        # (H,) negative
+    la = dt * a[None, None, :]                                 # log decay/step
+    xs = x * dt[..., None]                                     # dt-weighted in
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, bc, cc, lac = map(to_chunks, (xs, b_mat, c_mat, la))
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, hd), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    lmask = idx[:, None] >= idx[None, :]                       # (L, L) s<=t
+
+    def chunk_step(hprev, inp):
+        xk, bk, ck, lak = inp                                  # (B,L,H,*)
+        cs = jnp.cumsum(lak, axis=1)                           # (B,L,H)
+        # intra-chunk: y[t] += sum_{s<=t} exp(cs_t - cs_s) (C_t.B_s) xs_s
+        # mask the exponent BEFORE exp: the upper triangle would overflow
+        # (cs_t - cs_s > 0 for t < s) and inf * 0 poisons the output.
+        diff = cs[:, :, None] - cs[:, None, :]                 # (B,L,L,H)
+        diff = jnp.where(lmask[None, :, :, None], diff, -jnp.inf)
+        ratio = jnp.exp(diff)
+        scores = jnp.einsum("blhn,bmhn->blmh", ck, bk,
+                            preferred_element_type=jnp.float32)
+        w = scores * ratio
+        y = jnp.einsum("blmh,bmhd->blhd", w, xk.astype(jnp.float32))
+        # inter-chunk: y[t] += exp(cs_t) C_t . h_prev
+        y = y + jnp.einsum("blhn,bhnd->blhd", ck * jnp.exp(cs)[..., None],
+                           hprev)
+        # state update: h = exp(cs_L) h_prev + sum_s exp(cs_L - cs_s) B_s xs_s
+        tot = cs[:, -1]                                        # (B,H)
+        hnew = hprev * jnp.exp(tot)[..., None, None] + jnp.einsum(
+            "bmhn,bmhd->bhnd", bk * jnp.exp(tot[:, None] - cs)[..., None],
+            xk.astype(jnp.float32))
+        return hnew, y
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xc, bc, cc, lac))
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * chunk, h, hd)[:, :s]
+    return y.astype(x.dtype), h_last
+
+
+def _ssd_step(x, b_vec, c_vec, dt, a_log, h):
+    """Single decode step.  x: (B,1,H,hd); returns (y, h_new)."""
+    a = -jnp.exp(a_log)
+    la = dt[:, 0] * a[None, :]                                 # (B,H)
+    decay = jnp.exp(la)[..., None, None]
+    xs = (x * dt[..., None])[:, 0].astype(jnp.float32)         # (B,H,hd)
+    h_new = h * decay + jnp.einsum("bhn,bhd->bhnd", b_vec[:, 0], xs)
+    y = jnp.einsum("bhn,bhnd->bhd", c_vec[:, 0], h_new)
+    return y[:, None].astype(x.dtype), h_new
+
+
+def _grouped_rmsnorm(y, weight, z, head_dim: int, eps=1e-5):
+    """Mamba2 gated norm: RMSNorm(y * silu(z)) computed PER HEAD.
+
+    Per-head statistics keep the norm shard-local under TP (heads are never
+    split across shards), so TP output is bit-identical to single-device."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    shape = yf.shape
+    yh = yf.reshape(*shape[:-1], shape[-1] // head_dim, head_dim)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + eps)
+    out = yh.reshape(shape) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(y.dtype)
+
+
+def mamba2(params, x, env: AxisEnv, *, ssm,
+           state: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Mamba2 mixer.  Returns (partial_out, new_state).
+
+    Inside shard_map the parameter slices define the local width; head count
+    is derived from the a_log slice, so the same code runs at any TP degree.
+    """
+    n = ssm.d_state
+    hd = ssm.head_dim
+    bsz, s, _ = x.shape
+
+    n_heads = params["a_log"].shape[0]          # local heads
+    d_inner = n_heads * hd
+
+    z = x @ params["in_z"]
+    xr = x @ params["in_x"]
+    br = x @ params["in_b"]
+    cr = x @ params["in_c"]
+    dt = x @ params["in_dt"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    if state is not None:
+        cx, cb, cc = state["conv"]
+    else:
+        cx = cb = cc = None
+    xr, ncx = _causal_conv(xr, params["conv_x"], cx)
+    br, ncb = _causal_conv(br, params["conv_b"], cb)
+    cr, ncc = _causal_conv(cr, params["conv_c"], cc)
+    new_conv = (ncx, ncb, ncc)
+
+    xin = xr.reshape(bsz, s, n_heads, hd)
+    b_mat = br.reshape(bsz, s, n_heads, n)
+    c_mat = cr.reshape(bsz, s, n_heads, n)
+
+    if state is not None and s == 1:
+        y, h_new = _ssd_step(xin, b_mat, c_mat, dt, params["a_log"],
+                             state["h"])
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_new = _ssd_chunked(xin, b_mat, c_mat, dt, params["a_log"],
+                                ssm.chunk_size, h0)
+
+    y = y + xin * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, d_inner)
+    y = _grouped_rmsnorm(y, params["norm_w"], z, hd)
+    out = y @ params["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = dict(h=h_new, conv=new_conv)
+    return out, new_state

@@ -1,0 +1,562 @@
+"""Model assembler: builds every architecture family out of sub-blocks and
+runs them through the residual-topology driver (core/residual.py).
+
+The stack is planned into *sections*: contiguous layer ranges with a
+repeating kind pattern.  Each section scans over stacked per-group params
+(compile-time win: one group body compiled per section regardless of depth).
+Zamba2's shared attention block is planned as *virtual layers* injected every
+``shared_attn_every`` Mamba layers; its parameters live outside the scanned
+stack and are closed over (they are scan loop invariants).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockKind, ModelConfig, ResidualMode
+from repro.core import residual as topo
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_init, init_mlp,
+                                 init_rmsnorm, lm_head_logits, mlp, rmsnorm,
+                                 embed_lookup)
+from repro.parallel.collectives import AxisEnv
+
+VOCAB_ALIGN = 2048  # pad vocab so every TP degree up to 16 divides evenly
+
+
+def padded_vocab(vocab_size: int) -> int:
+    return -(-vocab_size // VOCAB_ALIGN) * VOCAB_ALIGN
+
+
+# ---------------------------------------------------------------------------
+# kind -> sub-blocks
+# ---------------------------------------------------------------------------
+
+_SUBS = {
+    BlockKind.ATTN_MLP: ("attn", "mlp"),
+    BlockKind.LOCAL_ATTN_MLP: ("local_attn", "mlp"),
+    BlockKind.ATTN_MOE: ("attn", "moe"),
+    BlockKind.MLA_MOE: ("mla", "moe"),
+    BlockKind.MLA_MLP: ("mla", "dense_mlp"),
+    BlockKind.MAMBA2: ("mamba",),
+    BlockKind.SHARED_ATTN_MLP: ("shared_attn", "shared_mlp"),
+    BlockKind.RWKV6: ("rwkv_tmix", "rwkv_cmix"),
+    BlockKind.CROSS_ATTN: ("attn", "xattn", "mlp"),
+    "ENC_ATTN_MLP": ("enc_attn", "mlp"),
+}
+
+
+def subblocks_of(kind) -> Tuple[str, ...]:
+    return _SUBS[kind]
+
+
+def effective_kinds(cfg: ModelConfig) -> Tuple[Any, ...]:
+    """Layer kinds with zamba-style shared virtual layers injected."""
+    kinds: List[Any] = []
+    for i in range(cfg.n_layers):
+        kinds.append(cfg.block_kind(i))
+        if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
+            kinds.append(BlockKind.SHARED_ATTN_MLP)
+    return tuple(kinds)
+
+
+# ---------------------------------------------------------------------------
+# section planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SectionPlan:
+    kinds: Tuple[Any, ...]        # layer kinds of ONE group
+    n_groups: int
+    mode: ResidualMode
+    sub_idx0: int                 # global sub-block index at section start
+    layer_idx0: int               # global (effective) layer index at start
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def plan_sections(cfg: ModelConfig, kinds: Optional[Tuple] = None,
+                  mode_of=None) -> List[SectionPlan]:
+    kinds = kinds if kinds is not None else effective_kinds(cfg)
+    n = len(kinds)
+    desync_n = topo.desync_period(cfg.residual_mode)
+
+    if mode_of is None:
+        def mode_of(layer_idx):
+            if cfg.residual_mode == ResidualMode.LADDER and \
+                    layer_idx < cfg.ladder_start_layer:
+                return ResidualMode.STANDARD
+            return cfg.residual_mode
+
+    # split into contiguous regions of equal mode
+    regions: List[Tuple[int, int]] = []
+    start = 0
+    for i in range(1, n + 1):
+        if i == n or mode_of(i) != mode_of(start):
+            regions.append((start, i))
+            start = i
+
+    plans: List[SectionPlan] = []
+    sub_idx = 0
+    for lo, hi in regions:
+        mode = mode_of(lo)
+        i = lo
+        while i < hi:
+            # smallest repeating period from position i
+            period = 1
+            while period <= hi - i:
+                if all(kinds[i + j] == kinds[i + (j % period)]
+                       for j in range(hi - i)):
+                    break
+                period += 1
+            else:
+                period = hi - i
+            # desync: group must cover whole periods of the AllReduce pattern
+            group = list(kinds[i:i + period])
+            subs = sum(len(subblocks_of(k)) for k in group)
+            while desync_n > 1 and mode in (ResidualMode.DESYNC2,
+                                            ResidualMode.DESYNC4) and \
+                    subs % desync_n != 0 and i + len(group) + period <= hi:
+                group += list(kinds[i + len(group):i + len(group) + period])
+                subs = sum(len(subblocks_of(k)) for k in group)
+            g = len(group)
+            n_groups = (hi - i) // g
+            if n_groups == 0:
+                group = list(kinds[i:hi])
+                g, n_groups = len(group), 1
+            plans.append(SectionPlan(tuple(group), n_groups, mode, sub_idx,
+                                     i))
+            sub_idx += n_groups * sum(len(subblocks_of(k)) for k in group)
+            i += n_groups * g
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _init_subblock(key, cfg: ModelConfig, sub: str, dtype):
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm": init_rmsnorm(d, dtype)}
+    if sub in ("attn", "local_attn", "enc_attn", "shared_attn"):
+        p.update(attn_mod.init_attention(key, d, cfg.n_heads, cfg.n_kv_heads,
+                                         cfg.head_dim, dtype))
+    elif sub == "xattn":
+        p.update(attn_mod.init_attention(key, d, cfg.n_heads, cfg.n_kv_heads,
+                                         cfg.head_dim, dtype))
+    elif sub == "mla":
+        p.update(attn_mod.init_mla(key, d, cfg.n_heads, cfg.mla, dtype))
+    elif sub in ("mlp", "shared_mlp"):
+        p.update(init_mlp(key, d, cfg.d_ff, dtype, gated=cfg.gated_mlp))
+    elif sub == "dense_mlp":
+        p.update(init_mlp(key, d, cfg.dense_d_ff or cfg.d_ff, dtype,
+                          gated=cfg.gated_mlp))
+    elif sub == "moe":
+        m = cfg.moe
+        p.update(moe_mod.init_moe(key, d, m.moe_d_ff or cfg.d_ff,
+                                  m.num_experts, m.num_shared_experts, dtype,
+                                  gated=cfg.gated_mlp))
+    elif sub == "mamba":
+        p.update(ssm_mod.init_mamba2(key, d, cfg.ssm, dtype))
+    elif sub in ("rwkv_tmix", "rwkv_cmix"):
+        full = rwkv_mod.init_rwkv6(key, d, cfg.d_ff, cfg.rwkv, dtype)
+        p.update(full["tmix"] if sub == "rwkv_tmix" else full["cmix"])
+    else:
+        raise ValueError(sub)
+    return p
+
+
+def _init_section(key, cfg: ModelConfig, plan: SectionPlan, dtype):
+    """Params for one section: dict sub{j} -> stacked (n_groups, ...).
+
+    Keys are derived from the ABSOLUTE (effective-layer, sub) position, so
+    initialisation is independent of how the planner groups layers — the
+    same seed yields identical weights for standard/ladder/desync/hybrid
+    plans (which is what makes §4.2 conversion a pure rewiring)."""
+    sec: Dict[str, Any] = {}
+    j = 0
+    for li, kind in enumerate(plan.kinds):
+        for si, sub in enumerate(subblocks_of(kind)):
+            slot = f"sub{j}"
+            if sub in ("shared_attn", "shared_mlp"):
+                sec[slot] = {}          # params live in params["shared_block"]
+            else:
+                keys = jnp.stack([
+                    jax.random.fold_in(
+                        jax.random.fold_in(
+                            key, plan.layer_idx0 + g * len(plan.kinds) + li),
+                        si)
+                    for g in range(plan.n_groups)])
+                sec[slot] = jax.vmap(
+                    lambda k: _init_subblock(k, cfg, sub, dtype))(keys)
+            j += 1
+    return sec
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], vp, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[1], vp, cfg.d_model, dtype)
+
+    plans = plan_sections(cfg)
+    # NOTE: every section gets the SAME base key — _init_section folds in
+    # absolute layer indices, so weights are plan-layout independent.
+    params["sections"] = tuple(
+        _init_section(ks[2], cfg, plan, dtype) for plan in plans)
+
+    if cfg.shared_attn_every:
+        params["shared_block"] = dict(
+            attn=_init_subblock(ks[3], cfg, "attn", dtype),
+            mlp=_init_subblock(ks[4], cfg, "mlp", dtype),
+        )
+
+    if cfg.encoder_layers:
+        enc_kinds = tuple(["ENC_ATTN_MLP"] * cfg.encoder_layers)
+        enc_plans = plan_sections(cfg, kinds=enc_kinds,
+                                  mode_of=lambda i: cfg.residual_mode)
+        params["encoder"] = dict(
+            sections=tuple(
+                _init_section(ks[5], cfg, plan, dtype)
+                for plan in enc_plans),
+            final_norm=init_rmsnorm(cfg.d_model, dtype),
+        )
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Shape/dtype pytree of the full parameters — no allocation."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FwdCtx:
+    cfg: ModelConfig
+    env: AxisEnv
+    positions: jnp.ndarray
+    train: bool = False
+    enc_out: Optional[jnp.ndarray] = None
+    enc_mask: Optional[jnp.ndarray] = None
+
+
+def _make_subblock_fn(ctx: FwdCtx, sub: str, slot: str, shared_params=None):
+    cfg, env = ctx.cfg, ctx.env
+    eps = cfg.norm_eps
+    pallas = cfg.use_pallas
+
+    def norm_in(p, x):
+        return rmsnorm(x, p["norm"], eps, use_pallas=pallas)
+
+    if sub in ("attn", "local_attn", "enc_attn", "shared_attn"):
+        window = cfg.sliding_window if sub == "local_attn" else 0
+
+        def fn(params, x, state):
+            p = shared_params["attn"] if sub == "shared_attn" else params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            if sub == "enc_attn":
+                k = (h @ p["wk"]).reshape(*h.shape[:2], -1, cfg.head_dim)
+                v = (h @ p["wv"]).reshape(*h.shape[:2], -1, cfg.head_dim)
+                q = (h @ p["wq"]).reshape(*h.shape[:2], -1, cfg.head_dim)
+                out = attn_mod.blocked_causal_attention(
+                    q, k, v, scale=cfg.head_dim ** -0.5,
+                    softcap=cfg.attn_logit_softcap, causal=False)
+                out = out.reshape(*h.shape[:2], -1) @ p["wo"]
+                return out, state, jnp.zeros((), jnp.float32)
+            out, new_cache = attn_mod.attention(
+                p, h, ctx.positions, env, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, window=window,
+                softcap=cfg.attn_logit_softcap, use_pallas=pallas,
+                cache=state)
+            return out, new_cache, jnp.zeros((), jnp.float32)
+        return fn
+
+    if sub == "xattn":
+        def fn(params, x, state):
+            from repro.serving.kv_cache import KVCache
+            p = params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            if isinstance(state, KVCache):
+                # decode: cross K/V cached heads-major at prefill; encoder
+                # positions always precede decoder positions so the cached
+                # path's slot_pos<=cur mask admits the full encoder context
+                q = (h @ p["wq"]).reshape(*h.shape[:2], -1, cfg.head_dim)
+                # match the prefill path: rope on q only (keys are encoder
+                # states, cached un-roped)
+                from repro.models.layers import apply_rope
+                q = apply_rope(q, ctx.positions, cfg.rope_theta)
+                out = attn_mod._cached_attention(
+                    q * cfg.head_dim ** -0.5, state, ctx.positions, env,
+                    softcap=cfg.attn_logit_softcap)
+                out = out.reshape(*h.shape[:2], -1) @ p["wo"]
+                return out, state, jnp.zeros((), jnp.float32)
+            k = (ctx.enc_out @ p["wk"]).reshape(
+                *ctx.enc_out.shape[:2], -1, cfg.head_dim)
+            v = (ctx.enc_out @ p["wv"]).reshape(
+                *ctx.enc_out.shape[:2], -1, cfg.head_dim)
+            if state is not None:  # prefill: fill the cross cache
+                # slot_pos=0 everywhere: encoder context is visible from
+                # every decoder position (0 <= cur always holds)
+                state = KVCache(k=k.swapaxes(1, 2), v=v.swapaxes(1, 2),
+                                slot_pos=jnp.zeros((k.shape[1],), jnp.int32),
+                                ring=False, seq_sharded=False)
+            out, _ = attn_mod.attention(
+                p, h, ctx.positions, env, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, kv_override=(k, v, ctx.enc_mask))
+            return out, state, jnp.zeros((), jnp.float32)
+        return fn
+
+    if sub == "mla":
+        def fn(params, x, state):
+            p = params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            out, new_cache = attn_mod.mla_attention(
+                p, h, ctx.positions, env, mla=cfg.mla,
+                rope_theta=cfg.rope_theta, cache=state)
+            return out, new_cache, jnp.zeros((), jnp.float32)
+        return fn
+
+    if sub in ("mlp", "dense_mlp", "shared_mlp"):
+        def fn(params, x, state):
+            p = shared_params["mlp"] if sub == "shared_mlp" else params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            return mlp(p, h, gated=cfg.gated_mlp), state, \
+                jnp.zeros((), jnp.float32)
+        return fn
+
+    if sub == "moe":
+        m = cfg.moe
+
+        def fn(params, x, state):
+            p = params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            out, aux = moe_mod.moe_ffn(
+                p, h, env, top_k=m.top_k, num_experts=m.num_experts,
+                capacity_factor=m.capacity_factor, gated=cfg.gated_mlp,
+                aux_loss_weight=m.aux_loss_weight if ctx.train else 0.0,
+                train=ctx.train)
+            return out, state, aux
+        return fn
+
+    if sub == "mamba":
+        def fn(params, x, state):
+            p = params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            out, new_state = ssm_mod.mamba2(p, h, env, ssm=cfg.ssm,
+                                            state=state)
+            return out, new_state, jnp.zeros((), jnp.float32)
+        return fn
+
+    if sub == "rwkv_tmix":
+        def fn(params, x, state):
+            p = params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            out, new_state = rwkv_mod.time_mix(
+                p, h, env, head_dim=cfg.rwkv.head_dim, use_pallas=pallas,
+                state=state)
+            return out, new_state, jnp.zeros((), jnp.float32)
+        return fn
+
+    if sub == "rwkv_cmix":
+        def fn(params, x, state):
+            p = params[slot]
+            h = env.sp_gather(norm_in(p, x))
+            out, new_state = rwkv_mod.channel_mix(p, h, env, state=state)
+            return out, new_state, jnp.zeros((), jnp.float32)
+        return fn
+
+    raise ValueError(sub)
+
+
+def _section_fns(ctx: FwdCtx, plan: SectionPlan, shared_params):
+    """Build (possibly parallel-fused) sub-block fns for one group."""
+    fns = []
+    j = 0
+    for kind in plan.kinds:
+        subs = subblocks_of(kind)
+        kind_fns = [
+            _make_subblock_fn(ctx, sub, f"sub{j + i}", shared_params)
+            for i, sub in enumerate(subs)]
+        j += len(subs)
+        if plan.mode == ResidualMode.PARALLEL and len(kind_fns) >= 2:
+            fused = kind_fns[0]
+            for g in kind_fns[1:]:
+                fused = topo.fuse_parallel(fused, g)
+            fns.append(fused)
+        else:
+            fns.extend(kind_fns)
+    return fns
+
+
+def _parallel_pack_states(plan: SectionPlan, states):
+    """PARALLEL mode fuses sub-block states into nested pairs to match
+    fuse_parallel's (st1, st2) convention."""
+    if states is None:
+        return None
+    packed = []
+    j = 0
+    for kind in plan.kinds:
+        k = len(subblocks_of(kind))
+        if k >= 2:
+            cur = states[j]
+            for i in range(1, k):
+                cur = (cur, states[j + i])
+            packed.append(cur)
+        else:
+            packed.append(states[j])
+        j += k
+    return tuple(packed)
+
+
+def _parallel_unpack_states(plan: SectionPlan, packed):
+    if packed is None:
+        return None
+    flat = []
+    for kind, st in zip(plan.kinds, packed):
+        k = len(subblocks_of(kind))
+        if k >= 2:
+            stack = []
+            cur = st
+            for _ in range(k - 1):
+                cur, s = cur
+                stack.append(s)
+            stack.append(cur)
+            flat.extend(reversed(stack))
+        else:
+            flat.append(st)
+    return tuple(flat)
+
+
+def run_stack(ctx: FwdCtx, sections_params, x, *, caches=None,
+              plans=None, shared_params=None, section_gathers=None,
+              unroll: bool = False):
+    """Run all sections; returns (hidden, new_caches, aux).
+
+    unroll: python-loop the groups instead of scanning — used for decode
+    steps, where scanning would double-buffer the full KV cache through the
+    loop's xs/ys while the per-layer compute is tiny (production decode
+    graphs are unrolled for the same reason).
+    """
+    cfg, env = ctx.cfg, ctx.env
+    plans = plans if plans is not None else plan_sections(cfg)
+    remat = cfg.remat if ctx.train else "none"
+
+    mode0 = plans[0].mode
+    carry = topo.init_carry(mode0, x)
+    new_caches = []
+    prev_mode = mode0
+    for sec_i, (plan, sec_params) in enumerate(zip(plans, sections_params)):
+        if plan.mode != prev_mode:
+            # topology change (hybrid adaptation): flush pendings, restart
+            r, aux = topo.finalize_carry(prev_mode, carry, env)
+            carry = topo.init_carry(plan.mode, r)
+            carry.aux = carry.aux + aux
+            prev_mode = plan.mode
+        fns = _section_fns(ctx, plan, shared_params)
+        sec_caches = caches.pop(0) if caches is not None else None
+        if plan.mode == ResidualMode.PARALLEL and sec_caches is not None:
+            sec_caches = _parallel_pack_states(plan, sec_caches)
+        carry, ns = topo.run_section(
+            plan.mode, fns, sec_params, carry, env, states=sec_caches,
+            sub_idx0=plan.sub_idx0, remat=remat,
+            use_scan=(plan.n_groups > 1 and not unroll),
+            gather=(section_gathers[sec_i] if section_gathers else None))
+        if plan.mode == ResidualMode.PARALLEL and ns is not None:
+            ns = _parallel_unpack_states(plan, ns)
+        new_caches.append(ns)
+        prev_mode = plan.mode
+    r, aux = topo.finalize_carry(prev_mode, carry, env)
+    return r, (new_caches if caches is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# top-level model functions
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, tokens, env: AxisEnv,
+                 frontend_embeds=None):
+    """Token embedding (+ prepended frontend embeddings for VLM/audio)."""
+    x = embed_lookup(params["embed"], tokens, env)
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def encode(cfg: ModelConfig, params, frames, env: AxisEnv, train=False):
+    """Whisper-style encoder over precomputed frame embeddings."""
+    enc_kinds = tuple(["ENC_ATTN_MLP"] * cfg.encoder_layers)
+    plans = plan_sections(cfg, kinds=enc_kinds,
+                          mode_of=lambda i: cfg.residual_mode)
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ctx = FwdCtx(cfg=cfg, env=env, positions=positions, train=train)
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    hidden, _, aux = run_stack(ctx, params["encoder"]["sections"], x,
+                               plans=plans)
+    hidden = rmsnorm(hidden, params["encoder"]["final_norm"], cfg.norm_eps)
+    return hidden, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, env: AxisEnv, *,
+            positions=None, caches=None, frontend_embeds=None,
+            train: bool = False, section_gathers=None,
+            unroll: bool = False):
+    """Decoder forward.  Returns (hidden, new_caches, aux_loss).
+
+    caches: list per section of per-group-stacked state pytrees (or None).
+    """
+    enc_out = enc_mask = None
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.encoder_layers and frontend_embeds is not None:
+        # encoder runs at train/prefill; decode reuses cached cross-K/V
+        enc_out, aux0 = encode(cfg, params, frontend_embeds, env, train)
+
+    x = embed_inputs(cfg, params, tokens, env, frontend_embeds
+                     if cfg.family == "vlm" else None)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if env.sp and env.model and s > 1:
+        # sequence parallelism: residual stream lives seq-sharded
+        tp, ti = env.tp, env.model_axis_index()
+        x = jax.lax.dynamic_slice_in_dim(x, ti * (s // tp), s // tp, axis=1)
+
+    ctx = FwdCtx(cfg=cfg, env=env, positions=positions, train=train,
+                 enc_out=enc_out, enc_mask=enc_mask)
+    hidden, new_caches, aux = run_stack(
+        ctx, params["sections"], x,
+        caches=list(caches) if caches is not None else None,
+        shared_params=params.get("shared_block"),
+        section_gathers=section_gathers, unroll=unroll)
+
+    if env.sp and env.model and s > 1:
+        hidden = jax.lax.all_gather(hidden, env.model, axis=1, tiled=True)
+
+    hidden = rmsnorm(hidden, params["final_norm"], cfg.norm_eps,
+                     use_pallas=cfg.use_pallas)
+    return hidden, new_caches, aux + aux0
+
+
+def logits_shard(cfg: ModelConfig, params, hidden):
+    table = params["embed"] if cfg.tie_embeddings else \
+        params.get("lm_head", params["embed"])
+    return lm_head_logits(hidden, table)

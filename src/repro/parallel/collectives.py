@@ -1,0 +1,136 @@
+"""Axis-aware collective wrappers.
+
+All model code is written against an :class:`AxisEnv` instead of hard-coded
+axis names.  When an axis is ``None`` (running outside ``shard_map``, e.g. in
+single-device tests) every collective degrades to the identity, so the same
+model function runs unchanged on one device and on a 512-chip mesh.
+
+This module is also where the paper's mechanism lives operationally: the
+``reduce_block_output`` family is the AllReduce that the Ladder topology
+de-couples from the critical path.  On TPU, XLA's latency-hiding scheduler
+lowers these ``psum``s to async ``all-reduce-start``/``all-reduce-done`` pairs
+and sinks the ``done`` to the consumer — the JAX analogue of the paper's
+``AsyncAllReduce`` handle (DESIGN.md §Hardware-adaptation).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AxisEnv:
+    """Names of the live mesh axes inside the current shard_map (or None)."""
+
+    model: Optional[str] = None   # tensor-parallel axis
+    data: Optional[str] = None    # data-parallel axis
+    pod: Optional[str] = None     # pod axis (extra DP or pipeline stages)
+    sp: bool = False              # Megatron-style sequence parallelism on/off
+
+    @property
+    def tp(self) -> int:
+        return jax.lax.axis_size(self.model) if self.model else 1
+
+    @property
+    def dp(self) -> int:
+        return jax.lax.axis_size(self.data) if self.data else 1
+
+    def model_axis_index(self):
+        return jax.lax.axis_index(self.model) if self.model else 0
+
+    def data_axis_index(self):
+        return jax.lax.axis_index(self.data) if self.data else 0
+
+    # ---- collectives over the tensor-parallel axis ------------------------
+    def psum_model(self, x):
+        return jax.lax.psum(x, self.model) if self.model else x
+
+    def pmax_model(self, x):
+        """Differentiation-safe max over the model axis (pmax lacks a JVP
+        rule; all_gather has one and the gradient of max-of-gather is what we
+        want for stop-gradient uses anyway)."""
+        if not self.model:
+            return x
+        return jnp.max(jax.lax.all_gather(x, self.model), axis=0)
+
+    def all_gather_model(self, x, axis: int = 0, tiled: bool = True):
+        if not self.model:
+            return x
+        return jax.lax.all_gather(x, self.model, axis=axis, tiled=tiled)
+
+    def reduce_scatter_model(self, x, axis: int = 0):
+        if not self.model:
+            return x
+        return jax.lax.psum_scatter(x, self.model, scatter_dimension=axis,
+                                    tiled=True)
+
+    # ---- collectives over the data axes ----------------------------------
+    def _dp_axes(self):
+        # pod-major ordering matches mesh axis order (pod, data, model)
+        axes = tuple(a for a in (self.pod, self.data) if a)
+        return axes
+
+    @property
+    def dp_total(self) -> int:
+        n = 1
+        for a in self._dp_axes():
+            n *= jax.lax.axis_size(a)
+        return n
+
+    def dp_shard_index(self):
+        """Linear index over the joint (pod, data) grid."""
+        idx = 0
+        for a in self._dp_axes():
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+    def all_gather_dp(self, x, axis: int = 0, tiled: bool = False):
+        axes = self._dp_axes()
+        return jax.lax.all_gather(x, axes, axis=axis, tiled=tiled) \
+            if axes else x
+
+    def psum_dp(self, x):
+        axes = self._dp_axes()
+        return jax.lax.psum(x, axes) if axes else x
+
+    def pmean_grads(self, tree):
+        axes = self._dp_axes()
+        if not axes:
+            return tree
+        return jax.tree.map(lambda g: jax.lax.pmean(g, axes), tree)
+
+    def psum_data(self, x):
+        axes = self._dp_axes()
+        return jax.lax.psum(x, axes) if axes else x
+
+    def pmean_data(self, x):
+        axes = self._dp_axes()
+        return jax.lax.pmean(x, axes) if axes else x
+
+    def all_gather_data(self, x, axis: int = 0, tiled: bool = True):
+        if not self.data:
+            return x
+        return jax.lax.all_gather(x, self.data, axis=axis, tiled=tiled)
+
+    # ---- sequence parallelism ---------------------------------------------
+    # With SP on, the residual stream lives seq-sharded across the model axis.
+    # Blocks all-gather the sequence at entry and reduce-scatter at exit;
+    # the reduce-scatter plays the AllReduce's role in the Ladder schedule.
+    def sp_gather(self, x, seq_axis: int = 1):
+        if self.sp and self.model:
+            return jax.lax.all_gather(x, self.model, axis=seq_axis, tiled=True)
+        return x
+
+    def sp_reduce(self, x, seq_axis: int = 1):
+        if self.sp and self.model:
+            return jax.lax.psum_scatter(x, self.model,
+                                        scatter_dimension=seq_axis, tiled=True)
+        return self.psum_model(x)
+
+
+# A null environment for single-device execution / oracles.
+NULL_ENV = AxisEnv()

@@ -1,0 +1,102 @@
+"""Pipeline parallelism over the pod axis (GPipe-style, shard_map manual).
+
+For multi-pod runs the 'pod' axis can carry pipeline stages instead of extra
+DP: each pod holds a contiguous slice of layer groups (params arrive sliced
+via P("pod", ...) on the stack dim) and microbatches flow stage-to-stage via
+collective_permute over the inter-pod links.
+
+Schedule: GPipe with M microbatches over P stages: T = M + P - 1 ticks.
+At tick t, stage s computes microbatch (t - s) when 0 <= t - s < M.
+Bubble fraction = (P-1)/(M+P-1); the driver exposes M so callers trade
+bubble for activation memory.  The whole schedule is differentiable
+(collective_permute transposes to the reverse permute), so the same driver
+serves training.
+
+The residual-topology CARRY (including the Ladder pending pair) travels
+through the inter-stage permute, so pipelined Ladder is mathematically
+identical to the single-stage model — the in-flight psum of the stage's
+last sub-block overlaps with the ppermute hop, compounding the paper's
+overlap across the slowest links.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ResidualMode
+from repro.core import residual as topo
+from repro.parallel.collectives import AxisEnv
+
+
+def pipeline_stack(mode: ResidualMode, fns: Sequence, params_stage,
+                   x_micro, env: AxisEnv, *, n_stages: int,
+                   remat: str = "none"):
+    """Run the layer stack split across pipeline stages.
+
+    params_stage: this stage's stacked group params (G_local, ...) — the
+      global stack sharded P("pod", ...) on dim 0.
+    x_micro: (M, B_micro, S, D) microbatched embeddings (replicated across
+      stages; only stage 0 consumes them).
+    Returns ((M, B_micro, S, D) final hidden states [valid on all stages],
+             aux loss).
+    """
+    m = x_micro.shape[0]
+    stage = jax.lax.axis_index(env.pod)
+    ticks = m + n_stages - 1
+    subs_per_stage = len(fns) * jax.tree.leaves(params_stage)[0].shape[0]
+    perm_fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def run_groups(carry_tuple, base_idx):
+        c = topo._carry_from_tuple(mode, carry_tuple)
+        c, _ = topo.run_section(mode, fns, params_stage, c, env,
+                                sub_idx0=base_idx, remat=remat,
+                                use_scan=True)
+        return c.tree()
+
+    proto = topo.init_carry(mode, x_micro[0]).tree()
+
+    def tick(state, t):
+        buf, outs, aux_acc = state          # buf: carry tuple in flight
+        mb_idx = t - stage
+        active = (mb_idx >= 0) & (mb_idx < m)
+        fresh = topo.init_carry(mode, x_micro[jnp.clip(mb_idx, 0, m - 1)])
+        carry_in = jax.tree.map(
+            lambda f, b: jnp.where(stage == 0, f, b), fresh.tree(), buf)
+        # NOTE: desync phases need subs_per_stage % desync_n == 0; the
+        # launcher asserts this when selecting PP for desync configs.
+        carry_out = run_groups(carry_in, 0)
+        carry_out = jax.tree.map(
+            lambda y, b: jnp.where(active, y, b), carry_out, buf)
+        # last stage flushes pendings and records the finished microbatch
+        c_fin = topo._carry_from_tuple(mode, carry_out)
+        r, aux = topo.finalize_carry(mode, c_fin, env)
+        out_idx = t - (n_stages - 1)
+        record = (stage == n_stages - 1) & (out_idx >= 0) & (out_idx < m)
+        outs = outs.at[jnp.clip(out_idx, 0, m - 1)].set(
+            jnp.where(record, r, outs[jnp.clip(out_idx, 0, m - 1)]))
+        aux_acc = aux_acc + jnp.where(record, aux, 0.0)
+        # hand the carry to the next stage
+        buf = jax.tree.map(
+            lambda y: jax.lax.ppermute(y, env.pod, perm=perm_fwd), carry_out)
+        return (buf, outs, aux_acc), None
+
+    outs0 = jnp.zeros_like(x_micro)
+    (_, outs, aux), _ = jax.lax.scan(
+        tick, (proto, outs0, jnp.zeros((), jnp.float32)), jnp.arange(ticks))
+    # broadcast the last stage's results to every stage (SPMD uniformity):
+    # masked psum — every other stage contributes zeros
+    last = stage == n_stages - 1
+    outs = jax.lax.psum(jnp.where(last, outs, jnp.zeros_like(outs)), env.pod)
+    aux = jax.lax.psum(jnp.where(last, aux, 0.0), env.pod)
+    return outs, aux
+
+
+def stage_param_spec(spec):
+    """Turn a stacked-section PartitionSpec into its pipeline version:
+    the group-stack dim (dim 0) is sharded over 'pod'."""
+    from jax.sharding import PartitionSpec as P
+    rest = tuple(spec)[1:]
+    return P("pod", *rest)

@@ -1,0 +1,251 @@
+"""Parameter sharding rules and TP preparation.
+
+Three jobs:
+
+1. ``tp_head_plan`` — decide how attention heads map onto the model axis
+   when head counts don't divide TP (phi4: 24H/kv8, gemma3: 8H/kv4,
+   whisper: 12H MHA at TP=16).  KV heads are replicated (standard Megatron
+   GQA serving practice) and query heads zero-padded; padded-head parameters
+   are frozen via ``param_masks`` so training at TP stays mathematically
+   identical to the unpadded model.  The padding overhead is visible in the
+   roofline's MODEL_FLOPS/HLO_FLOPs ratio by construction (honest
+   accounting).
+
+2. ``prepare_params_for_tp`` — rewrite full parameters into the padded /
+   replicated layout (on real systems this happens once at checkpoint load).
+
+3. ``param_pspecs`` — name-based PartitionSpec rules for every leaf.  Leading
+   stack dims (scan groups, experts handled explicitly) map to None.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# head planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HeadPlan:
+    tp: int
+    h_eff: int                 # padded query-head count (divisible by tp)
+    kv_eff: int                # replicated/padded kv-head count
+    q_map: Tuple[int, ...]     # eff q slot -> orig q head (-1 = zero pad)
+    kv_map: Tuple[int, ...]    # eff kv slot -> orig kv head (-1 = zero pad)
+
+    @property
+    def padded(self) -> bool:
+        return self.q_map != tuple(range(self.h_eff)) or \
+            self.kv_map != tuple(range(self.kv_eff))
+
+
+def tp_head_plan(n_heads: int, n_kv: int, tp: int) -> HeadPlan:
+    g = n_heads // n_kv
+    if n_kv % tp == 0:
+        return HeadPlan(tp, n_heads, n_kv, tuple(range(n_heads)),
+                        tuple(range(n_kv)))
+    if n_kv < tp and tp % n_kv == 0:
+        r = tp // n_kv                     # kv replication factor
+        g_eff = -(-g // r)                 # q heads per kv replica
+        q_map, kv_map = [], []
+        for kv in range(n_kv):
+            for rep in range(r):
+                kv_map.append(kv)
+                for t in range(g_eff):
+                    q = kv * g + rep * g_eff + t
+                    q_map.append(q if rep * g_eff + t < g else -1)
+        return HeadPlan(tp, len(q_map), len(kv_map), tuple(q_map),
+                        tuple(kv_map))
+    if n_heads == n_kv:                    # MHA with awkward head count
+        h_eff = -(-n_heads // tp) * tp
+        m = tuple(i if i < n_heads else -1 for i in range(h_eff))
+        return HeadPlan(tp, h_eff, h_eff, m, m)
+    raise ValueError(f"unsupported head layout: H={n_heads} KV={n_kv} tp={tp}")
+
+
+def _remap_cols(w, head_map, hd, orig_heads):
+    """w: (..., in, orig_heads*hd) -> (..., in, len(head_map)*hd)."""
+    ws = w.reshape(*w.shape[:-1], orig_heads, hd)
+    idx = np.asarray([h if h >= 0 else 0 for h in head_map])
+    out = jnp.take(ws, idx, axis=-2)
+    mask = np.asarray([h >= 0 for h in head_map])
+    out = out * jnp.asarray(mask, out.dtype)[..., None]
+    return out.reshape(*w.shape[:-1], len(head_map) * hd)
+
+
+def _remap_rows(w, head_map, hd, orig_heads):
+    """w: (..., orig_heads*hd, out) -> padded rows.  Padded slots are zero;
+    replicated slots would double-count, but q heads are never replicated."""
+    ws = w.reshape(*w.shape[:-2], orig_heads, hd, w.shape[-1])
+    idx = np.asarray([h if h >= 0 else 0 for h in head_map])
+    out = jnp.take(ws, idx, axis=-3)
+    mask = np.asarray([h >= 0 for h in head_map])
+    out = out * jnp.asarray(mask, out.dtype)[..., None, None]
+    return out.reshape(*w.shape[:-2], len(head_map) * hd, w.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# leaf rules
+# ---------------------------------------------------------------------------
+
+# name -> (shard dim counted from the end, kind)
+_COL = {"wq", "wk", "wv", "wg", "wr", "up", "gate", "wk_up", "in_z", "in_x",
+        "in_b", "in_c", "in_dt", "w2", "wkv_b"}
+_ROW = {"wo", "down", "wv_down", "out_proj"}
+_VEC = {"w_bias", "ln_w", "norm_w", "a_log", "dt_bias", "d_skip", "conv_x",
+        "conv_b", "conv_c"}        # shard last dim (per-head vectors/convs)
+_HEAD0 = {"u"}                     # (H, hd): shard dim -2
+_VOCAB = {"embed", "lm_head"}      # (V, D): shard dim -2
+_REPL = {"norm", "final_norm", "router", "wkv_a", "w1", "mu_r", "mu_k",
+         "mu_v", "mu_g", "mu_w"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
+def _leaf_spec(path, leaf, axis: str = "model") -> P:
+    names = _path_names(path)
+    name = names[-1]
+    nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    under_experts = "experts" in names
+
+    def at(dim_from_end: int) -> P:
+        spec = [None] * nd
+        spec[nd - dim_from_end] = axis
+        return P(*spec)
+
+    if under_experts:
+        # stacked (..., E, in, out): expert-parallel on the E dim
+        return at(3)
+    if name in _COL:
+        return at(1)
+    if name in _ROW:
+        return at(2)
+    if name in _VEC:
+        return at(1)
+    if name in _HEAD0:
+        return at(2)
+    if name in _VOCAB:
+        return at(2)
+    return P()  # replicated
+
+
+def spec_has(spec: P, axis: str) -> bool:
+    """True when `axis` appears in the PartitionSpec (P is a single pytree
+    leaf, so jax.tree.leaves cannot be used to inspect it)."""
+    for e in tuple(spec):
+        if e == axis:
+            return True
+        if isinstance(e, (tuple, list)) and axis in e:
+            return True
+    return False
+
+
+def param_pspecs(params_or_specs, axis: str = "model"):
+    """PartitionSpec pytree matching the params structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_or_specs)
+    specs = [_leaf_spec(path, leaf, axis) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# TP preparation (padding + replication) and masks
+# ---------------------------------------------------------------------------
+
+def prepare_params_for_tp(params, cfg: ModelConfig, tp: int):
+    """Pad/replicate attention heads so all sharded dims divide ``tp``.
+
+    Returns (prepared_params, masks) where masks is a pytree of {0,1}
+    float multipliers freezing padded-head weights during training (None
+    when no padding was needed).
+    """
+    plan = tp_head_plan(cfg.n_heads, cfg.n_kv_heads, tp)
+    if not plan.padded:
+        return params, None
+    hd = cfg.head_dim
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, masks = [], []
+    for path, leaf in flat:
+        names = _path_names(path)
+        name = names[-1]
+        is_mla = cfg.mla is not None
+        new = leaf
+        if not is_mla and name == "wq":
+            new = _remap_cols(leaf, plan.q_map, hd, cfg.n_heads)
+        elif not is_mla and name in ("wk", "wv") and "tmix" not in names:
+            new = _remap_cols(leaf, plan.kv_map, hd, cfg.n_kv_heads)
+        elif not is_mla and name == "wo" and "tmix" not in names:
+            new = _remap_rows(leaf, plan.q_map, hd, cfg.n_heads)
+        out.append(new)
+        if new.shape == leaf.shape:
+            masks.append(jnp.ones((), leaf.dtype))  # scalar -> broadcast
+        else:
+            masks.append(_pad_mask(new, leaf, name, plan, hd, cfg))
+    prepared = jax.tree_util.tree_unflatten(treedef, out)
+    mask_tree = jax.tree_util.tree_unflatten(treedef, masks)
+    return prepared, mask_tree
+
+
+def _pad_mask(new, old, name, plan: HeadPlan, hd, cfg):
+    if name == "wq":
+        keep = np.repeat(np.asarray([h >= 0 for h in plan.q_map]), hd)
+        return jnp.asarray(keep, new.dtype)            # bcast over rows
+    if name in ("wk", "wv"):
+        keep = np.repeat(np.asarray([h >= 0 for h in plan.kv_map]), hd)
+        return jnp.asarray(keep, new.dtype)
+    if name == "wo":
+        keep = np.repeat(np.asarray([h >= 0 for h in plan.q_map]), hd)
+        return jnp.asarray(keep, new.dtype)[:, None]   # rows
+    return jnp.ones((), new.dtype)
+
+
+def apply_masks(tree, masks):
+    if masks is None:
+        return tree
+    return jax.tree.map(lambda t, m: t * m.astype(t.dtype), tree, masks)
+
+
+def kv_replica_grad_sync(grads, cfg: ModelConfig, tp: int):
+    """Average wk/wv gradients across replicas of the same original KV head.
+
+    When tp > n_kv_heads the prepared layout replicates KV projections; each
+    replica is a distinct slice of the padded weight and would receive a
+    different gradient.  Averaging keeps replicas bit-identical (they start
+    equal at preparation time), so training at high TP matches the unpadded
+    model exactly.
+    """
+    plan = tp_head_plan(cfg.n_heads, cfg.n_kv_heads, tp)
+    r = plan.kv_eff // max(cfg.n_kv_heads, 1)
+    if not plan.padded or r <= 1 or cfg.mla is not None:
+        return grads
+    hd = cfg.head_dim
+
+    def fix(path, g):
+        name = _path_names(path)[-1]
+        if name in ("wk", "wv") and g.shape[-1] == plan.kv_eff * hd:
+            gs = g.reshape(*g.shape[:-1], cfg.n_kv_heads, r, hd)
+            gs = jnp.broadcast_to(gs.mean(axis=-2, keepdims=True), gs.shape)
+            return gs.reshape(g.shape)
+        return g
+
+    return jax.tree_util.tree_map_with_path(fix, grads)
+
+
+# ---------------------------------------------------------------------------
+# input/activation specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(pods: bool = True) -> P:
+    """Global-batch inputs: sharded over (pod, data) on dim 0."""
+    return P(("pod", "data")) if pods else P("data")

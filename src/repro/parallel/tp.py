@@ -1,0 +1,289 @@
+"""Sharded step builders: explicit shard_map tensor parallelism.
+
+Everything runs manually partitioned over the full mesh: the model axis
+carries Megatron-style TP (with the residual topology owning the psums —
+the paper's mechanism), the data (+pod) axes carry DP.  Collective placement
+is therefore deterministic and countable, which the roofline analysis relies
+on.
+
+Subtleties handled here:
+* TP-aware gradient global-norm: sharded leaves need a psum over the model
+  axis; replicated leaves must not be double counted.
+* Replicated-parameter gradients (norms, routers) are identical across model
+  shards under STANDARD topology but diverge under DESYNC (per-shard
+  activations differ) and under sequence parallelism — those modes pmean
+  them over the model axis (the Megatron SP rule).
+* KV-head replicas (tp > n_kv_heads) get gradient-averaged so replicas stay
+  bit-identical (sharding.kv_replica_grad_sync).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ParallelConfig, ResidualMode,
+                                TrainConfig)
+from repro.models import transformer as tfm
+from repro.models.layers import sharded_cross_entropy
+from repro.parallel import sharding
+from repro.parallel.collectives import AxisEnv
+from repro.training import optimizer as opt
+
+
+def make_axis_env(pcfg: ParallelConfig) -> AxisEnv:
+    return AxisEnv(
+        model="model" if pcfg.tp > 1 else None,
+        data="data" if pcfg.dp > 1 else None,
+        pod="pod" if (pcfg.pods > 1 or pcfg.pp > 1) else None,
+        sp=pcfg.use_sp)
+
+
+def _dp_axes_present(pcfg: ParallelConfig):
+    axes = []
+    if pcfg.pods > 1:
+        axes.append("pod")
+    if pcfg.dp > 1:
+        axes.append("data")
+    return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            env: AxisEnv, tcfg: Optional[TrainConfig] = None,
+            train: bool = True, section_gathers=None):
+    """Causal LM loss with vocab-sharded logits (never materialises the full
+    logits tensor).  Returns (loss, metrics)."""
+    kw = {}
+    if cfg.family == "vlm":
+        kw["frontend_embeds"] = batch["patches"]
+    if cfg.encoder_layers:
+        kw["frontend_embeds"] = batch["frames"]
+    hidden, _, aux = tfm.forward(cfg, params, batch["tokens"], env,
+                                 train=train, section_gathers=section_gathers,
+                                 **kw)
+    if cfg.family == "vlm":
+        hidden = hidden[:, -batch["tokens"].shape[1]:]
+    logits = tfm.logits_shard(cfg, params, hidden)
+    z_loss = tcfg.z_loss if tcfg else 0.0
+    nll = sharded_cross_entropy(logits, batch["targets"], env, z_loss=z_loss,
+                                true_vocab=cfg.vocab_size)
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    else:
+        loss = jnp.mean(nll)
+    loss = loss + aux
+    return loss, dict(nll=jnp.mean(nll), aux=aux)
+
+
+def _grad_square_sum(grads, specs, env: AxisEnv):
+    """Sharding-correct sum of squared gradients.
+
+    Each leaf's squares are summed over exactly the mesh axes its spec
+    shards it on (model, data, or both for FSDP flat leaves); replicated
+    leaves are counted once."""
+    buckets = {}
+    for g, s in zip(jax.tree.leaves(grads), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))):
+        axes = []
+        if sharding.spec_has(s, "model") and env.model:
+            axes.append(env.model)
+        if sharding.spec_has(s, "data") and env.data:
+            axes.append(env.data)
+        key = tuple(axes)
+        buckets[key] = buckets.get(key, 0.0) + jnp.sum(
+            jnp.square(g.astype(jnp.float32)))
+    tot = jnp.zeros((), jnp.float32)
+    for axes, sq in buckets.items():
+        tot = tot + (jax.lax.psum(sq, axes) if axes else sq)
+    return tot
+
+
+def _sync_replicated_grads(grads, specs, env: AxisEnv):
+    def fix(g, s):
+        if sharding.spec_has(s, "model"):
+            return g
+        return jax.lax.pmean(g, env.model) if env.model else g
+    return jax.tree.map(fix, grads, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh, pcfg: ParallelConfig,
+                     tcfg: TrainConfig, *, zero1: bool = False,
+                     fsdp: bool = False):
+    """Returns (step_fn, in_specs, out_specs).
+
+    step_fn(params, opt_state, batch, step) -> (params, opt_state, metrics)
+    and is already shard_map'ped (call under ``jax.jit`` with the mesh set).
+
+    fsdp: store section params flat-sharded over data (ZeRO-3); gradients
+    for them arrive DP-reduced via the all_gather transpose and the AdamW
+    states are implicitly ZeRO-sharded.
+    """
+    env = make_axis_env(pcfg)
+    specs_tree = tfm.param_specs(cfg)
+    pspecs = sharding.param_pspecs(specs_tree)
+    lr_fn = opt.lr_schedule(tcfg)
+    dp_axes = _dp_axes_present(pcfg)
+    needs_repl_sync = env.sp or cfg.residual_mode in (
+        ResidualMode.DESYNC2, ResidualMode.DESYNC4)
+
+    gathers = None
+    if fsdp:
+        from repro.parallel import fsdp as fsdp_mod
+        # prepared (padded) section specs + their flat sharded layout
+        prep_specs = jax.eval_shape(
+            lambda: sharding.prepare_params_for_tp(
+                tfm.init_params(cfg, jax.random.key(0)), cfg, pcfg.tp)[0])
+        sec_pspecs = sharding.param_pspecs(prep_specs)["sections"]
+        meta = fsdp_mod.sections_meta(prep_specs["sections"], sec_pspecs,
+                                      pcfg.tp, pcfg.dp)
+        pspecs = dict(sharding.param_pspecs(prep_specs))
+        pspecs["sections"] = fsdp_mod.flat_pspecs(sec_pspecs)
+        gathers = fsdp_mod.make_section_gathers(list(meta), env)
+
+    def loss_fn(params, batch):
+        return lm_loss(cfg, params, batch, env, tcfg, train=True,
+                       section_gathers=gathers)
+
+    def step(params, opt_state, batch, step_idx):
+        if tcfg.grad_accum > 1:
+            def micro(accum, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                return jax.tree.map(jnp.add, accum,
+                                    (g, l, m["nll"])), None
+            zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params), jnp.zeros(()), jnp.zeros(()))
+            mbs = jax.tree.map(
+                lambda t: t.reshape(tcfg.grad_accum,
+                                    t.shape[0] // tcfg.grad_accum,
+                                    *t.shape[1:]), batch)
+            (grads, loss, nll), _ = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss, nll = loss / tcfg.grad_accum, nll / tcfg.grad_accum
+            metrics = dict(nll=nll)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if needs_repl_sync:
+            grads = _sync_replicated_grads(grads, pspecs, env)
+        if pcfg.tp > 1 and not fsdp:
+            grads = sharding.kv_replica_grad_sync(grads, cfg, pcfg.tp)
+
+        lr = lr_fn(step_idx)
+        if fsdp:
+            # Section grads arrived DP-SUMMED via the all_gather transpose
+            # (reduce-scatter); scale them to the DP mean.  Everything else
+            # still needs the explicit DP mean.
+            def fix(path, g):
+                keys = [str(getattr(p, "key", "")) for p in path]
+                if keys and keys[0] == "sections":
+                    g = g / max(pcfg.dp, 1)
+                    if pcfg.pods > 1:
+                        g = jax.lax.pmean(g, "pod")
+                    return g
+                return jax.lax.pmean(g, dp_axes) if dp_axes else g
+            grads = jax.tree_util.tree_map_with_path(fix, grads)
+            gn = jnp.sqrt(_grad_square_sum(grads, pspecs, env))
+            scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+            params2, opt_state2 = opt.adamw_update(
+                grads, opt_state, params, lr=lr, cfg=tcfg)
+        elif zero1:
+            # DP mean happens inside the reduce-scatter
+            gsq = _grad_square_sum(grads, pspecs, env)
+            gsq = env.psum_data(gsq) / max(
+                pcfg.dp * pcfg.pods, 1)  # approx pre-reduction norm
+            gn = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+            params2, opt_state2 = opt.zero1_update(
+                grads, opt_state, params, lr=lr, cfg=tcfg, env=env)
+        else:
+            if dp_axes:
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, dp_axes),
+                                     grads)
+            gn = jnp.sqrt(_grad_square_sum(grads, pspecs, env))
+            scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+            params2, opt_state2 = opt.adamw_update(
+                grads, opt_state, params, lr=lr, cfg=tcfg)
+
+        loss = env.pmean_data(loss)
+        metrics = dict(loss=loss, grad_norm=gn, lr=lr,
+                       nll=env.pmean_data(metrics["nll"]))
+        return params2, opt_state2, metrics
+
+    batch_spec = _batch_specs(cfg, pcfg)
+    opt_specs = opt_state_pspecs(cfg, pspecs, zero1=zero1 and not fsdp,
+                                 pcfg=pcfg)
+    in_specs = (pspecs, opt_specs, batch_spec, P())
+    out_specs = (pspecs, opt_specs,
+                 dict(loss=P(), grad_norm=P(), lr=P(), nll=P()))
+    mapped = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+    return mapped, in_specs, out_specs
+
+
+def _batch_specs(cfg: ModelConfig, pcfg: ParallelConfig):
+    b = P(("pod", "data")) if (pcfg.pods > 1 or pcfg.pp > 1) else \
+        (P("data") if pcfg.dp > 1 else P())
+    spec = dict(tokens=b, targets=b)
+    if cfg.family == "vlm":
+        spec["patches"] = b
+    if cfg.encoder_layers:
+        spec["frames"] = b
+    return spec
+
+
+def opt_state_pspecs(cfg: ModelConfig, pspecs, *, zero1: bool,
+                     pcfg: ParallelConfig):
+    if not zero1:
+        return opt.AdamWState(
+            step=P(), mu=jax.tree.map(lambda s: s, pspecs),
+            nu=jax.tree.map(lambda s: s, pspecs),
+            master=jax.tree.map(lambda s: s, pspecs))
+
+    def flat_spec(s):
+        return P(("model", "data")) if sharding.spec_has(s, "model") \
+            else P("data")
+
+    fs = jax.tree.map(flat_spec, pspecs,
+                      is_leaf=lambda x: isinstance(x, P))
+    return opt.AdamWState(step=P(), mu=fs, nu=jax.tree.map(lambda s: s, fs),
+                          master=jax.tree.map(lambda s: s, fs))
+
+
+def init_train_state(cfg: ModelConfig, pcfg: ParallelConfig, key,
+                     zero1: bool = False, fsdp: bool = False):
+    """Host-side init of (params, opt_state) in the prepared TP layout."""
+    params = tfm.init_params(cfg, key)
+    params, masks = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
+    if fsdp:
+        from repro.parallel import fsdp as fsdp_mod
+        sec_pspecs = sharding.param_pspecs(params)["sections"]
+        flat, _ = fsdp_mod.flatten_sections_host(
+            params["sections"], sec_pspecs, pcfg.tp, pcfg.dp)
+        params = dict(params)
+        params["sections"] = flat
+        state = opt.adamw_init(params)
+    elif zero1:
+        pspecs = sharding.param_pspecs(params)
+        state = opt.zero1_init(params, pspecs, pcfg.tp, pcfg.dp)
+    else:
+        state = opt.adamw_init(params)
+    return params, state, masks

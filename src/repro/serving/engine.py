@@ -1,0 +1,220 @@
+"""Serving engine: prefill / decode steps over the sharded mesh.
+
+``build_caches`` mirrors the assembler's section plan so cache pytrees line
+up with the scanned parameter stacks.  ``build_serve_steps`` returns
+shard_map'ped prefill/decode functions plus the global specs of every input —
+the multi-pod dry-run lowers exactly these.
+
+Long-context decode (long_500k, global_batch=1) cannot use the data axis for
+batch DP, so the KV cache is sharded over the *sequence* on the data axis and
+attention decode runs flash-decoding style (partial softmax stats combined
+with a psum over 'data') — see models/attention._cached_attention.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.parallel import sharding
+from repro.parallel.collectives import AxisEnv
+from repro.parallel.tp import make_axis_env
+from repro.serving import kv_cache as kvc
+from repro.serving import sampler
+
+
+def _batch_axes(pcfg: ParallelConfig):
+    return ("pod", "data") if pcfg.pods > 1 else ("data",) if pcfg.dp > 1 else ()
+
+
+def build_caches(cfg: ModelConfig, batch: int, s_max: int,
+                 pcfg: ParallelConfig, *, for_decode: bool,
+                 seq_shard_data: bool = False, enc_s: int = 0,
+                 structs_only: bool = False):
+    """Build (caches, cache_pspecs) as GLOBAL pytrees.
+
+    seq_shard_data: shard KV sequence over the data axis (flash decoding) —
+    used when the batch is too small for data parallelism (long_500k).
+    enc_s: encoder context length for cross-attention caches (enc-dec).
+    structs_only: produce ShapeDtypeStructs (dry-run — no allocation).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    alloc = kvc.struct_alloc if structs_only else kvc._alloc_default
+    plan = tfm.plan_sections(cfg)
+    hp = sharding.tp_head_plan(cfg.n_heads, cfg.n_kv_heads, pcfg.tp)
+    b_axes = _batch_axes(pcfg)
+    # bax: mesh axes sharding the batch dim (None when batch is replicated,
+    # e.g. batch=1 long-context where the data axis shards the sequence)
+    bax = b_axes if (b_axes and not seq_shard_data) else None
+    seq_shards = (pcfg.dp if seq_shard_data else 1)
+    sspec = "data" if seq_shard_data and pcfg.dp > 1 else None
+    tp_ax = "model" if pcfg.tp > 1 else None
+
+    caches, specs = [], []
+    for sec in plan:
+        lead = (sec.n_groups,)
+        sec_caches, sec_specs = [], []
+        for kind in sec.kinds:
+            for sub in tfm.subblocks_of(kind):
+                if sub in ("attn", "shared_attn"):
+                    c = kvc.make_kv_cache(batch, s_max, hp.kv_eff,
+                                          cfg.head_dim, dtype, alloc=alloc,
+                                          seq_shards=seq_shards, lead=lead)
+                    s = kvc.KVCache(k=P(None, bax, tp_ax, sspec, None),
+                                    v=P(None, bax, tp_ax, sspec, None),
+                                    slot_pos=P(None, sspec),
+                                    ring=c.ring, seq_sharded=c.seq_sharded)
+                elif sub == "local_attn":
+                    c = kvc.make_kv_cache(batch, s_max, hp.kv_eff,
+                                          cfg.head_dim, dtype, alloc=alloc,
+                                          window=cfg.sliding_window, lead=lead)
+                    s = kvc.KVCache(k=P(None, bax, tp_ax, None, None),
+                                    v=P(None, bax, tp_ax, None, None),
+                                    slot_pos=P(None, None),
+                                    ring=c.ring, seq_sharded=False)
+                elif sub == "mla":
+                    ssm_flag = getattr(cfg, "mla_flash_decode", False) and \
+                        pcfg.tp > 1
+                    c = kvc.make_mla_cache(batch, s_max, cfg.mla.kv_lora_rank,
+                                           cfg.mla.qk_rope_head_dim, dtype,
+                                           lead=lead, alloc=alloc,
+                                           seq_sharded_model=ssm_flag)
+                    mtp = "model" if ssm_flag else None
+                    s = kvc.MLACache(c_kv=P(None, bax, mtp, None),
+                                     k_rope=P(None, bax, mtp, None),
+                                     slot_pos=P(None, mtp),
+                                     seq_sharded_model=ssm_flag)
+                elif sub == "xattn":
+                    if for_decode:
+                        es = enc_s or s_max  # encoder context length
+                        c = kvc.KVCache(
+                            k=alloc((*lead, batch, hp.h_eff, es,
+                                     cfg.head_dim), dtype),
+                            v=alloc((*lead, batch, hp.h_eff, es,
+                                     cfg.head_dim), dtype),
+                            slot_pos=alloc((*lead, es), jnp.int32),
+                            ring=False, seq_sharded=False)
+                        s = kvc.KVCache(k=P(None, bax, tp_ax, None, None),
+                                        v=P(None, bax, tp_ax, None, None),
+                                        slot_pos=P(None, None),
+                                        ring=False, seq_sharded=False)
+                    else:
+                        c, s = {}, {}
+                elif sub == "mamba":
+                    nh = cfg.ssm.n_heads(cfg.d_model)
+                    c = kvc.make_mamba_state(batch, nh, cfg.ssm.d_state,
+                                             cfg.ssm.head_dim, cfg.ssm.d_conv,
+                                             dtype, lead=lead, alloc=alloc)
+                    s = dict(h=P(None, bax, tp_ax, None, None),
+                             conv=(P(None, bax, None, tp_ax),
+                                   P(None, bax, None, tp_ax),
+                                   P(None, bax, None, tp_ax)))
+                elif sub == "rwkv_tmix":
+                    nh = cfg.d_model // cfg.rwkv.head_dim
+                    c = kvc.make_rwkv_tmix_state(batch, nh, cfg.rwkv.head_dim,
+                                                 cfg.d_model, dtype,
+                                                 lead=lead, alloc=alloc)
+                    s = dict(wkv=P(None, bax, tp_ax, None, None),
+                             shift=P(None, bax, None))
+                elif sub == "rwkv_cmix":
+                    c = kvc.make_rwkv_cmix_state(batch, cfg.d_model, dtype,
+                                                 lead=lead, alloc=alloc)
+                    s = dict(shift=P(None, bax, None))
+                else:  # mlp / moe / dense_mlp / shared_mlp: stateless
+                    c, s = None, None
+                sec_caches.append(c)
+                sec_specs.append(s)
+        caches.append(tuple(sec_caches))
+        specs.append(tuple(sec_specs))
+    return list(caches), list(specs)
+
+
+def cache_struct(cfg, batch, s_max, pcfg, **kw):
+    """ShapeDtypeStruct version (dry-run: no allocation)."""
+    return jax.eval_shape(
+        lambda: build_caches(cfg, batch, s_max, pcfg, **kw)[0])
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def serve_needs_fsdp(cfg: ModelConfig, pcfg: ParallelConfig,
+                     hbm_bytes: float = 16e9) -> bool:
+    """True when bf16 weights / tp exceed ~60% of HBM (dbrx-132b): weights
+    must be flat-sharded over the data axis and gathered per layer group."""
+    from repro.models.model import count_params
+    return count_params(cfg) * 2 / pcfg.tp > 0.6 * hbm_bytes
+
+
+def build_serve_steps(cfg: ModelConfig, mesh, pcfg: ParallelConfig, *,
+                      seq_shard_data: bool = False, fsdp: bool = False,
+                      fsdp_q8: bool = False):
+    """Returns dict with prefill/decode shard_map'ped fns and spec builders.
+
+    fsdp: weights stored flat-sharded over 'data', gathered per layer group
+    inside the scan — the fit strategy for models whose TP-local weights
+    exceed HBM (dbrx-132b on 16 GB v5e).  Costs one weight all-gather per
+    step; the roofline reports it honestly as collective time.
+    """
+    env = make_axis_env(pcfg)
+    pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
+    gathers = None
+    if fsdp:
+        from repro.parallel import fsdp as fsdp_mod
+        prep_specs = jax.eval_shape(
+            lambda: sharding.prepare_params_for_tp(
+                tfm.init_params(cfg, jax.random.key(0)), cfg, pcfg.tp)[0])
+        sec_pspecs = sharding.param_pspecs(prep_specs)["sections"]
+        pspecs = dict(sharding.param_pspecs(prep_specs))
+        if fsdp_q8:
+            meta = fsdp_mod.sections_meta_q8(prep_specs["sections"],
+                                             sec_pspecs, pcfg.tp, pcfg.dp)
+            pspecs["sections"] = fsdp_mod.flat_pspecs_q8(sec_pspecs)
+            gathers = fsdp_mod.make_section_gathers_q8(list(meta), env)
+        else:
+            meta = fsdp_mod.sections_meta(prep_specs["sections"], sec_pspecs,
+                                          pcfg.tp, pcfg.dp)
+            pspecs["sections"] = fsdp_mod.flat_pspecs(sec_pspecs)
+            gathers = fsdp_mod.make_section_gathers(list(meta), env)
+    b_axes = _batch_axes(pcfg)
+    tok_spec = P(b_axes) if b_axes and not seq_shard_data else P()
+
+    def prefill(params, tokens, caches, extra):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.family == "vlm" and "patches" in extra:
+            positions = jnp.broadcast_to(
+                jnp.arange(s + cfg.num_patches)[None],
+                (b, s + cfg.num_patches))
+        hidden, new_caches, _ = tfm.forward(
+            cfg, params, tokens, env, positions=positions, caches=caches,
+            frontend_embeds=extra.get("patches", extra.get("frames")),
+            section_gathers=gathers)
+        logits = tfm.logits_shard(cfg, params, hidden[:, -1:])
+        next_tok = sampler.greedy(logits[:, 0], env, cfg.vocab_size)
+        return new_caches, next_tok
+
+    def decode(params, tokens, caches, pos):
+        b = tokens.shape[0]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        hidden, new_caches, _ = tfm.forward(
+            cfg, params, tokens[:, None], env, positions=positions,
+            caches=caches, section_gathers=gathers, unroll=True)
+        logits = tfm.logits_shard(cfg, params, hidden)
+        next_tok = sampler.greedy(logits[:, 0], env, cfg.vocab_size)
+        return new_caches, next_tok
+
+    return dict(prefill=prefill, decode=decode, env=env, pspecs=pspecs,
+                tok_spec=tok_spec)
+
+
+def shard_mapped(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)

@@ -1,0 +1,199 @@
+"""KV caches and recurrent states for serving.
+
+Cache classes are registered dataclass pytrees whose *meta* fields (ring,
+seq_sharded) are static — they survive scan/jit boundaries while the array
+fields are traced.  Uniform-length batches are assumed (all sequences in a
+batch share positions), matching the paper's benchmark setup; ragged batching
+is an engine-level concern (DESIGN.md §Serving).
+
+Cache kinds
+-----------
+* KVCache        full attention; optionally a ring buffer (sliding window —
+                 gemma3 local layers) and/or sequence-sharded over the data
+                 axis (flash-decoding for long_500k, where batch=1 cannot
+                 use the data axis for DP).
+* MLACache       DeepSeek MLA: stores only the compressed latent + shared
+                 rope key (kv_lora_rank + rope_dim per token).
+* Mamba / RWKV   plain dicts of recurrent state (O(1) per layer).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import AxisEnv
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["k", "v", "slot_pos"],
+         meta_fields=["ring", "seq_sharded"])
+@dataclass
+class KVCache:
+    # Layout (B, Hkv_local, S_slots, hd): heads-major so the decode
+    # attention dot consumes the cache WITHOUT a transpose copy (at 32k
+    # context a transpose would copy the full cache every decode step).
+    k: jnp.ndarray            # (B, Hkv_local, S_slots, hd)
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray     # (S_slots,) absolute position in slot, -1 empty
+    ring: bool = False
+    seq_sharded: bool = False
+
+    def get(self, name, default=None):  # duck-type the old dict interface
+        if name == "seq_sharded":
+            return self.seq_sharded
+        return default
+
+    def __getitem__(self, name):
+        return getattr(self, name)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["c_kv", "k_rope", "slot_pos"],
+         meta_fields=["seq_sharded_model"])
+@dataclass
+class MLACache:
+    c_kv: jnp.ndarray         # (B, S_slots, kv_lora_rank)
+    k_rope: jnp.ndarray       # (B, S_slots, rope_dim)
+    slot_pos: jnp.ndarray
+    # MLA flash-decode: latent cache sharded over the MODEL axis on the
+    # sequence dim (heads are gathered instead — they are tiny in latent
+    # space), cutting per-device cache memory and decode reads by tp.
+    seq_sharded_model: bool = False
+
+    def __getitem__(self, name):
+        return getattr(self, name)
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+def _alloc_default(shape, dtype, fill=0):
+    return jnp.full(shape, fill, dtype) if fill else jnp.zeros(shape, dtype)
+
+
+def struct_alloc(shape, dtype, fill=0):
+    """Allocation-free stand-in (dry-run)."""
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_kv_cache(batch: int, s_max: int, hkv: int, hd: int, dtype,
+                  window: int = 0, seq_shards: int = 1,
+                  lead: Tuple[int, ...] = (), alloc=_alloc_default) -> KVCache:
+    """`lead` prepends group-stacking dims (for scan sections).
+
+    seq_shards only sets the seq_sharded flag — the GLOBAL array keeps all
+    slots; the PartitionSpec's 'data' entry provides the division (in-step
+    code sees the local slice and offsets by dp_shard_index)."""
+    slots = min(window, s_max) if window else s_max
+    shape = (*lead, batch, hkv, slots, hd)
+    return KVCache(
+        k=alloc(shape, dtype), v=alloc(shape, dtype),
+        slot_pos=alloc((*lead, slots), jnp.int32, fill=-1),
+        ring=bool(window) and window < s_max,
+        seq_sharded=seq_shards > 1)
+
+
+def make_mla_cache(batch: int, s_max: int, lora: int, rope_d: int, dtype,
+                   lead: Tuple[int, ...] = (), alloc=_alloc_default,
+                   seq_sharded_model: bool = False) -> MLACache:
+    return MLACache(
+        c_kv=alloc((*lead, batch, s_max, lora), dtype),
+        k_rope=alloc((*lead, batch, s_max, rope_d), dtype),
+        slot_pos=alloc((*lead, s_max), jnp.int32, fill=-1),
+        seq_sharded_model=seq_sharded_model)
+
+
+def make_mamba_state(batch: int, n_heads: int, d_state: int, hd: int,
+                     d_conv: int, dtype, lead=(), alloc=_alloc_default):
+    d_inner = n_heads * hd
+    return dict(
+        h=alloc((*lead, batch, n_heads, d_state, hd), jnp.float32),
+        conv=(alloc((*lead, batch, d_conv - 1, d_inner), dtype),
+              alloc((*lead, batch, d_conv - 1, n_heads * d_state), dtype),
+              alloc((*lead, batch, d_conv - 1, n_heads * d_state), dtype)))
+
+
+def make_rwkv_tmix_state(batch: int, n_heads: int, hd: int, d_model: int,
+                         dtype, lead=(), alloc=_alloc_default):
+    return dict(wkv=alloc((*lead, batch, n_heads, hd, hd), jnp.float32),
+                shift=alloc((*lead, batch, d_model), dtype))
+
+
+def make_rwkv_cmix_state(batch: int, d_model: int, dtype, lead=(),
+                         alloc=_alloc_default):
+    return dict(shift=alloc((*lead, batch, d_model), dtype))
+
+
+# ---------------------------------------------------------------------------
+# updates
+# ---------------------------------------------------------------------------
+
+def _write(buf, slots, new, drop_hi: int):
+    """buf: (B, S_slots, ...); slots: (S,) int32; new: (B, S, ...)."""
+    slots = jnp.where((slots >= 0) & (slots < drop_hi), slots, drop_hi)
+    return buf.at[:, slots].set(new, mode="drop")
+
+
+def _write_hs(buf, slots, new, drop_hi: int):
+    """buf: (B, H, S_slots, hd); slots: (S,); new: (B, S, H, hd)."""
+    slots = jnp.where((slots >= 0) & (slots < drop_hi), slots, drop_hi)
+    return buf.at[:, :, slots].set(new.swapaxes(1, 2), mode="drop")
+
+
+def cache_update(cache: KVCache, k_new, v_new, positions,
+                 env: AxisEnv) -> KVCache:
+    """Write new K/V at `positions` (uniform across batch).
+
+    prefill: positions = (B, S) arange; decode: (B, 1) current position.
+    Ring caches keep the last `slots` tokens; seq-sharded caches write only
+    the slice owned by this data shard.
+    """
+    slots_total = cache.k.shape[2]
+    pos = positions[0]                              # uniform batch
+    s = pos.shape[0]
+
+    if cache.ring and s > slots_total:
+        # prefill longer than the window: only the last `slots_total` tokens
+        # can ever be read again
+        k_new = k_new[:, -slots_total:]
+        v_new = v_new[:, -slots_total:]
+        pos = pos[-slots_total:]
+        s = slots_total
+
+    if cache.seq_sharded and env._dp_axes():
+        shard_lo = env.dp_shard_index() * slots_total
+        slot = pos - shard_lo
+    elif cache.ring:
+        slot = pos % slots_total
+    else:
+        slot = pos
+
+    k = _write_hs(cache.k, slot, k_new, slots_total)
+    v = _write_hs(cache.v, slot, v_new, slots_total)
+    sp = cache.slot_pos.at[jnp.where((slot >= 0) & (slot < slots_total),
+                                     slot, slots_total)].set(
+        pos, mode="drop")
+    return KVCache(k=k, v=v, slot_pos=sp, ring=cache.ring,
+                   seq_sharded=cache.seq_sharded)
+
+
+def mla_cache_update(cache: MLACache, c_kv, k_rope, positions,
+                     env: AxisEnv = None) -> MLACache:
+    slots_total = cache.c_kv.shape[1]
+    pos = positions[0]
+    if cache.seq_sharded_model and env is not None and env.model:
+        slot = pos - env.model_axis_index() * slots_total
+    else:
+        slot = pos
+    ck = _write(cache.c_kv, slot, c_kv, slots_total)
+    kr = _write(cache.k_rope, slot, k_rope, slots_total)
+    sp = cache.slot_pos.at[jnp.where((slot >= 0) & (slot < slots_total),
+                                     slot, slots_total)].set(pos, mode="drop")
+    return MLACache(c_kv=ck, k_rope=kr, slot_pos=sp,
+                    seq_sharded_model=cache.seq_sharded_model)

@@ -1,0 +1,43 @@
+"""Sampling over vocab-sharded logits (full logits never materialised)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import AxisEnv
+
+
+def _mask_padded(logits_shard, env: AxisEnv, true_vocab: int):
+    v = logits_shard.shape[-1]
+    col = jnp.arange(v) + env.model_axis_index() * v
+    return jnp.where(col < true_vocab, logits_shard.astype(jnp.float32), -1e30)
+
+
+def greedy(logits_shard, env: AxisEnv, true_vocab: int):
+    """Argmax across vocab shards: local top-1 then a tiny all-gather."""
+    lf = _mask_padded(logits_shard, env, true_vocab)
+    v = lf.shape[-1]
+    loc_val = jnp.max(lf, axis=-1)                       # (B,) or (B,S)
+    loc_idx = jnp.argmax(lf, axis=-1) + env.model_axis_index() * v
+    if env.model:
+        vals = jax.lax.all_gather(loc_val, env.model)    # (tp, ...)
+        idxs = jax.lax.all_gather(loc_idx, env.model)
+        win = jnp.argmax(vals, axis=0)
+        return jnp.take_along_axis(idxs, win[None], axis=0)[0]
+    return loc_idx
+
+
+def sample(logits_shard, env: AxisEnv, true_vocab: int, key,
+           temperature: float = 1.0):
+    """Gumbel-max sampling: per-token Gumbel noise keyed by GLOBAL vocab id,
+    so shards draw consistent noise and the global argmax is a faithful
+    categorical sample."""
+    lf = _mask_padded(logits_shard, env, true_vocab) / max(temperature, 1e-6)
+    v = lf.shape[-1]
+    shard = env.model_axis_index()
+    # fold the shard id into the key so each shard draws its own columns
+    k = jax.random.fold_in(key, shard)
+    g = jax.random.gumbel(k, lf.shape, jnp.float32)
+    return greedy((lf + g), AxisEnv(model=env.model), true_vocab=10**9) \
+        if env.model else jnp.argmax(lf + g, axis=-1)

@@ -1,0 +1,119 @@
+"""Checkpointing: atomic, keep-k, elastic (mesh-shape independent).
+
+Checkpoints store FULL (unsharded) arrays host-side as one ``.npz`` payload
+per pytree plus a JSON manifest.  Because arrays are saved unsharded, a
+restart may use a *different* mesh (elastic scaling after a node failure):
+the launcher reshards on load via shard_map in_specs exactly as at init.
+
+Write protocol: serialize to ``<dir>/tmp-<step>``, fsync, then atomically
+rename to ``step-<step>`` — a crash mid-write never corrupts the latest
+checkpoint.  ``keep`` oldest checkpoints are garbage-collected after a
+successful rename, newest-first retention.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(proto, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(proto)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != "
+                f"expected {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, params, opt_state=None,
+             extra: Optional[dict] = None) -> Path:
+        tmp = self.dir / f"tmp-{step}"
+        final = self.dir / f"step-{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "params.npz", **_flatten(params))
+        if opt_state is not None:
+            np.savez(tmp / "opt_state.npz", **_flatten(opt_state))
+        manifest = dict(step=step, time=time.time(), extra=extra or {})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # fsync the directory entries before the atomic publish
+        for f in tmp.iterdir():
+            fd = os.open(f, os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step-{s}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step-*"):
+            try:
+                out.append(int(p.name.split("-", 1)[1]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, params_proto, opt_proto=None,
+                step: Optional[int] = None) -> Tuple[int, Any, Any, dict]:
+        """Returns (step, params, opt_state, extra).  Protos supply the
+        pytree structure and dtypes (possibly under a NEW mesh layout —
+        arrays are full-size so any layout reshards on the way in)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step-{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        with np.load(d / "params.npz") as z:
+            params = _unflatten_like(params_proto, dict(z))
+        opt_state = None
+        if opt_proto is not None and (d / "opt_state.npz").exists():
+            with np.load(d / "opt_state.npz") as z:
+                opt_state = _unflatten_like(opt_proto, dict(z))
+        return step, params, opt_state, manifest.get("extra", {})

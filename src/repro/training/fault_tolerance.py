@@ -1,0 +1,138 @@
+"""Fault tolerance: heartbeats, straggler detection, restart policy.
+
+On a real multi-pod deployment every host runs this monitor beside the
+training loop.  The mechanisms are host-level (files + wall clock), so they
+work identically in the single-process simulation used by the tests:
+
+* Heartbeat: each host touches ``<dir>/hb-<host>`` every step.  A host whose
+  heartbeat is older than ``dead_after_s`` is declared failed; the controller
+  responds by triggering checkpoint-restart with the surviving host set
+  (elastic: the mesh is rebuilt via launch.mesh.make_mesh_for and the
+  checkpoint reshards on load — arrays are stored unsharded).
+
+* Straggler detection: an EMA of step time per host; a host slower than
+  ``straggler_factor`` x the fleet median for ``patience`` consecutive steps
+  is flagged.  Policy hooks: "report" (default), "exclude" (treat as failed
+  -> elastic restart without it), mirroring TPU fleet practice where a
+  degraded host is drained rather than load-balanced around (SPMD steps are
+  lockstep — one slow host stalls every chip, so exclusion is the only
+  effective mitigation).
+
+* Restart budget: crash-looping guard — at most ``max_restarts`` within
+  ``window_s`` seconds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+@dataclass
+class FTConfig:
+    dead_after_s: float = 60.0
+    straggler_factor: float = 1.5
+    patience: int = 5
+    max_restarts: int = 10
+    window_s: float = 3600.0
+    policy: str = "exclude"          # report | exclude
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host: str):
+        self.path = Path(directory) / f"hb-{host}"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def beat(self, step: int):
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(dict(step=step, time=time.time())))
+        tmp.replace(self.path)
+
+    @staticmethod
+    def scan(directory: str, dead_after_s: float,
+             now: Optional[float] = None) -> Dict[str, bool]:
+        """host -> alive?"""
+        now = now if now is not None else time.time()
+        out = {}
+        for p in Path(directory).glob("hb-*"):
+            host = p.name[3:]
+            try:
+                t = json.loads(p.read_text())["time"]
+            except Exception:
+                out[host] = False
+                continue
+            out[host] = (now - t) < dead_after_s
+        return out
+
+
+class StragglerMonitor:
+    """Per-host step-time EMA vs fleet median."""
+
+    def __init__(self, cfg: FTConfig):
+        self.cfg = cfg
+        self.ema: Dict[str, float] = {}
+        self.strikes: Dict[str, int] = {}
+
+    def observe(self, host: str, step_time_s: float):
+        prev = self.ema.get(host, step_time_s)
+        self.ema[host] = 0.9 * prev + 0.1 * step_time_s
+
+    def flagged(self) -> List[str]:
+        if len(self.ema) < 2:
+            return []
+        times = sorted(self.ema.values())
+        median = times[len(times) // 2]
+        out = []
+        for host, t in self.ema.items():
+            if t > self.cfg.straggler_factor * median:
+                self.strikes[host] = self.strikes.get(host, 0) + 1
+            else:
+                self.strikes[host] = 0
+            if self.strikes.get(host, 0) >= self.cfg.patience:
+                out.append(host)
+        return out
+
+
+class RestartBudget:
+    def __init__(self, cfg: FTConfig):
+        self.cfg = cfg
+        self.events: List[float] = []
+
+    def allow(self, now: Optional[float] = None) -> bool:
+        now = now if now is not None else time.time()
+        self.events = [t for t in self.events
+                       if now - t < self.cfg.window_s]
+        if len(self.events) >= self.cfg.max_restarts:
+            return False
+        self.events.append(now)
+        return True
+
+
+@dataclass
+class FleetController:
+    """Decides the surviving host set after failures/stragglers.
+
+    ``plan_restart`` returns the new world size (hosts x chips_per_host) to
+    hand to launch.mesh.make_mesh_for — the elastic-scaling entry point.
+    """
+
+    cfg: FTConfig
+    hosts: List[str]
+    chips_per_host: int = 8
+
+    def plan_restart(self, hb_dir: str,
+                     stragglers: Optional[List[str]] = None,
+                     now: Optional[float] = None):
+        alive = Heartbeat.scan(hb_dir, self.cfg.dead_after_s, now=now)
+        survivors = [h for h in self.hosts if alive.get(h, False)]
+        if self.cfg.policy == "exclude":
+            for s in (stragglers or []):
+                if s in survivors and len(survivors) > 1:
+                    survivors.remove(s)
+        return dict(survivors=survivors,
+                    world=len(survivors) * self.chips_per_host,
+                    lost=[h for h in self.hosts if h not in survivors])

@@ -1,0 +1,231 @@
+"""Optimizers, built from scratch on pytrees (no optax dependency).
+
+``adamw`` runs identically inside shard_map (states inherit the parameter
+sharding: each device updates its slice with its gradient slice).
+
+``sharded_adamw`` is the ZeRO-1 variant for the data axis: optimizer moments
+live sharded across data-parallel ranks; each step does
+reduce-scatter(grad) -> local moment update -> all-gather(param delta),
+trading the DP all-reduce for the same bytes split as RS+AG while cutting
+optimizer-state memory by dp.  Master weights are kept in fp32 when params
+are bf16 (mixed-precision training discipline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.parallel.collectives import AxisEnv
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Any          # fp32 master copy (None leaves if params are fp32)
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / per-head vectors."""
+    names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+    last = names[-1] if names else ""
+    nd_keys = {"norm", "final_norm", "norm_w", "ln_w", "w_bias", "dt_bias",
+               "a_log", "d_skip", "u", "mu_r", "mu_k", "mu_v", "mu_g", "mu_w"}
+    return last not in nd_keys
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype != jnp.float32 else None,
+        params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 cfg: TrainConfig, masks=None):
+    """One AdamW step.  Returns (new_params, new_state).
+
+    grads may be lower precision; moments and master weights are fp32.
+    masks: optional {0,1} pytree freezing padded-head weights.
+    """
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    flat_ma = jax.tree.leaves(state.master, is_leaf=lambda x: x is None)
+    flat_mk = (jax.tree.leaves(masks) if masks is not None
+               else [None] * len(flat_p))
+
+    new_p, new_mu, new_nu, new_ma = [], [], [], []
+    for (path, g), p, mu, nu, ma, mk in zip(flat_g, flat_p, flat_mu, flat_nu,
+                                            flat_ma, flat_mk):
+        gf = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * gf
+        nu = b2 * nu + (1 - b2) * jnp.square(gf)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        upd = mhat / (jnp.sqrt(nhat) + 1e-8)
+        w = ma if ma is not None else p.astype(jnp.float32)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * w
+        w = w - lr * upd
+        if mk is not None:
+            w = w * mk.astype(w.dtype)
+            mu = mu * mk.astype(mu.dtype)
+            nu = nu * mk.astype(nu.dtype)
+        new_mu.append(mu)
+        new_nu.append(nu)
+        new_ma.append(w if ma is not None else None)
+        new_p.append(w.astype(p.dtype))
+
+    unf = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    return unf(new_p), AdamWState(
+        step=step, mu=unf(new_mu), nu=unf(new_nu),
+        master=jax.tree_util.tree_unflatten(treedef, new_ma))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer states sharded over the data axis
+# ---------------------------------------------------------------------------
+
+def _flat_size(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def zero1_init(params, pspecs, tp: int, dp: int) -> AdamWState:
+    """GLOBAL zero-1 state arrays (host side, before sharding).
+
+    Layout per leaf: the fp32 master/moments live as a permuted flat vector
+    partitioned jointly over (model, data) for TP-sharded leaves — shape
+    (tp * dp * chunk,) with spec P(("model","data")) — and over data only
+    for replicated leaves — shape (dp * chunk,) with spec P("data").
+    ``chunk = ceil(tp_local_size / dp)`` so each device holds exactly
+    (chunk,) regardless of leaf kind.  The permutation is irrelevant:
+    AdamW is elementwise and the gradient is partitioned identically by the
+    in-step reduce-scatter.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import spec_has
+
+    def mk(p, spec):
+        sharded = spec_has(spec, "model")
+        local = _flat_size(p.shape) // (tp if sharded else 1)
+        chunk = -(-local // dp)
+        n = (tp if sharded else 1) * dp * chunk
+        return jnp.zeros((n,), jnp.float32)
+
+    zeros = jax.tree.map(mk, params, pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros),
+                      master=jax.tree.map(jnp.copy, zeros))
+
+
+def zero1_seed_master(params, state: AdamWState, env: AxisEnv) -> AdamWState:
+    """Populate master shards from the (replicated) params."""
+    dp = env.dp
+
+    def seed(p, _):
+        n = -(-_flat_size(p.shape) // dp)
+        flat = jnp.pad(p.astype(jnp.float32).reshape(-1),
+                       (0, n * dp - _flat_size(p.shape)))
+        i = env.data_axis_index()
+        return jax.lax.dynamic_slice_in_dim(flat, i * n, n)
+    return state._replace(master=jax.tree.map(seed, params, state.master))
+
+
+def zero1_update(grads, state: AdamWState, params, *, lr, cfg: TrainConfig,
+                 env: AxisEnv, masks=None):
+    """ZeRO-1 AdamW step inside shard_map.
+
+    grads: per-device *unreduced* DP gradients (the reduce-scatter performs
+    the DP mean).  Returns (new_params, new_state).
+    """
+    dp = env.dp
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    flat_ma = jax.tree.leaves(state.master)
+    flat_mk = (jax.tree.leaves(masks) if masks is not None
+               else [None] * len(flat_p))
+
+    new_p, new_mu, new_nu, new_ma = [], [], [], []
+    for (path, g), p, mu, nu, ma, mk in zip(flat_g, flat_p, flat_mu, flat_nu,
+                                            flat_ma, flat_mk):
+        n = mu.shape[0]
+        gf = g.astype(jnp.float32).reshape(-1)
+        gf = jnp.pad(gf, (0, n * dp - gf.shape[0]))
+        # DP mean fused into the reduce-scatter
+        if env.data:
+            gsh = jax.lax.psum_scatter(gf, env.data, scatter_dimension=0,
+                                       tiled=True) / dp
+        else:
+            gsh = gf
+        if env.pod:
+            gsh = jax.lax.pmean(gsh, env.pod)
+        mu = b1 * mu + (1 - b1) * gsh
+        nu = b2 * nu + (1 - b2) * jnp.square(gsh)
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + 1e-8)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * ma
+        w = ma - lr * upd
+        full = jax.lax.all_gather(w, env.data, tiled=True) if env.data else w
+        full = full[:_flat_size(p.shape)].reshape(p.shape)
+        if mk is not None:
+            full = full * mk.astype(full.dtype)
+        new_p.append(full.astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+        new_ma.append(w)
+
+    unf = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    return unf(new_p), AdamWState(step=step, mu=unf(new_mu), nu=unf(new_nu),
+                                  master=unf(new_ma))
+
+
+def lr_schedule(cfg: TrainConfig):
+    """Cosine decay with linear warmup (the paper's §4.1 recipe)."""
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.learning_rate * warm * (cfg.min_lr / cfg.learning_rate +
+                                           (1 - cfg.min_lr / cfg.learning_rate) * cos)
+    return lr

@@ -1,0 +1,109 @@
+"""Training loop: sharded step + checkpointing + fault-tolerance hooks.
+
+The Trainer is deliberately thin: all math lives in parallel/tp.py
+(build_train_step) and optimizer.py; this class owns the run lifecycle —
+resume, heartbeats, straggler monitoring, periodic checkpoints, metrics.
+It runs identically on a 4-device test mesh and the 512-chip production
+mesh (the step function is mesh-agnostic).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.parallel import tp as tpmod
+from repro.training import optimizer as opt
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault_tolerance import (FTConfig, Heartbeat,
+                                            StragglerMonitor)
+
+
+@dataclass
+class TrainerState:
+    step: int
+    params: Any
+    opt_state: Any
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, pcfg: ParallelConfig,
+                 tcfg: TrainConfig, *, ckpt_dir: Optional[str] = None,
+                 zero1: bool = False, fsdp: bool = False,
+                 host: str = "host0", hb_dir: Optional[str] = None,
+                 log: Callable[[str], None] = print):
+        self.cfg, self.mesh, self.pcfg, self.tcfg = cfg, mesh, pcfg, tcfg
+        self.zero1, self.fsdp = zero1, fsdp
+        self.log = log
+        step_fn, in_specs, _ = tpmod.build_train_step(
+            cfg, mesh, pcfg, tcfg, zero1=zero1, fsdp=fsdp)
+        self.in_specs = in_specs
+        with jax.set_mesh(mesh):
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.ckpt = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints) \
+            if ckpt_dir else None
+        self.hb = Heartbeat(hb_dir, host) if hb_dir else None
+        self.straggler = StragglerMonitor(FTConfig())
+        self.host = host
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0) -> TrainerState:
+        params, opt_state, _ = tpmod.init_train_state(
+            self.cfg, self.pcfg, jax.random.key(seed), zero1=self.zero1,
+            fsdp=self.fsdp)
+        if self.zero1:
+            env = tpmod.make_axis_env(self.pcfg)
+            seed_fn = jax.shard_map(
+                lambda p, s: opt.zero1_seed_master(p, s, env),
+                mesh=self.mesh,
+                in_specs=(self.in_specs[0], self.in_specs[1]),
+                out_specs=self.in_specs[1], check_vma=False)
+            with jax.set_mesh(self.mesh):
+                opt_state = jax.jit(seed_fn)(params, opt_state)
+        return TrainerState(0, params, opt_state)
+
+    def resume_or_init(self, seed: int = 0) -> TrainerState:
+        state = self.init_state(seed)
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            step, params, opt_state, _ = self.ckpt.restore(
+                state.params, state.opt_state)
+            self.log(f"[trainer] resumed from step {step}")
+            return TrainerState(step, params, opt_state)
+        return state
+
+    # ------------------------------------------------------------------
+    def fit(self, state: TrainerState, loader, steps: int,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None
+            ) -> TrainerState:
+        tc = self.tcfg
+        with jax.set_mesh(self.mesh):
+            for local in range(steps):
+                step = state.step
+                batch = {k: jnp.asarray(v)
+                         for k, v in loader.batch_at(step).items()}
+                t0 = time.time()
+                params, opt_state, metrics = self.step_fn(
+                    state.params, state.opt_state, batch,
+                    jnp.asarray(step, jnp.int32))
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                state = TrainerState(step + 1, params, opt_state)
+
+                if self.hb:
+                    self.hb.beat(step)
+                self.straggler.observe(self.host, dt)
+
+                if step % tc.log_every == 0 and on_metrics is None:
+                    self.log(f"[trainer] step {step} loss={metrics['loss']:.4f} "
+                             f"gnorm={metrics['grad_norm']:.3f} "
+                             f"lr={metrics['lr']:.2e} {dt*1e3:.0f}ms")
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+                if self.ckpt and (step + 1) % tc.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, state.params, state.opt_state)
+        return state

@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+1 device; multi-device tests spawn subprocesses or use their own module
+(tests/test_tp_equivalence.py sets the flag before importing jax, so run it
+in its own process: pytest handles this because it is imported first only
+when collected — we guard with an env check)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,31 @@
+"""Multi-device equivalence tests (TP / FSDP / ZeRO-1 / SP / padded heads /
+flash-decode / pipeline / compression).
+
+These need 4 fake XLA devices set BEFORE jax initialises, so each group runs
+in a subprocess (tests/distributed_impl.py) — the rest of the suite keeps
+its single real device."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+IMPL = os.path.join(os.path.dirname(__file__), "distributed_impl.py")
+
+
+def _run(which: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, IMPL, which], env=env,
+                       capture_output=True, text=True, timeout=1500)
+    print(r.stdout)
+    print(r.stderr[-3000:] if r.returncode else "", file=sys.stderr)
+    assert r.returncode == 0, f"{which} failed:\n{r.stdout}\n{r.stderr[-2000:]}"
+    assert "FAIL" not in r.stdout
+
+
+@pytest.mark.parametrize("which", ["tp", "fsdp", "zero1", "sp", "padded",
+                                   "flashdec", "pp", "compress", "q8"])
+def test_distributed(which):
+    _run(which)

@@ -1,0 +1,219 @@
+"""Training substrate: optimizer math, LR schedule, loss goes down,
+checkpoint-restart bitwise equivalence, data determinism."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, ResidualMode, TrainConfig, ParallelConfig
+from repro.models import transformer as tfm
+from repro.parallel import tp as tpmod
+from repro.parallel.collectives import NULL_ENV
+from repro.training import optimizer as opt
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import SyntheticLM
+
+
+def test_adamw_against_reference():
+    """Single-tensor AdamW vs a hand NumPy implementation, 5 steps."""
+    cfg = TrainConfig(learning_rate=1e-2, weight_decay=0.1, beta1=0.9,
+                      beta2=0.95)
+    w = jnp.asarray([[1.0, -2.0], [0.5, 3.0]])
+    params = {"up": w}
+    state = opt.adamw_init(params)
+    wn = np.asarray(w, np.float64)
+    mu = np.zeros_like(wn)
+    nu = np.zeros_like(wn)
+    for t in range(1, 6):
+        g = {"up": jnp.asarray(np.full((2, 2), 0.1 * t, np.float32))}
+        params, state = opt.adamw_update(g, state, params, lr=1e-2, cfg=cfg)
+        gn = np.full((2, 2), 0.1 * t)
+        mu = 0.9 * mu + 0.1 * gn
+        nu = 0.95 * nu + 0.05 * gn ** 2
+        mh = mu / (1 - 0.9 ** t)
+        nh = nu / (1 - 0.95 ** t)
+        wn = wn - 1e-2 * (mh / (np.sqrt(nh) + 1e-8) + 0.1 * wn)
+    np.testing.assert_allclose(np.asarray(params["up"]), wn, atol=1e-5)
+
+
+def test_no_weight_decay_on_norms():
+    cfg = TrainConfig(learning_rate=0.0, weight_decay=1.0)
+    params = {"norm": jnp.ones((4,)), "up": jnp.ones((4,))}
+    state = opt.adamw_init(params)
+    g = jax.tree.map(jnp.zeros_like, params)
+    p2, _ = opt.adamw_update(g, state, params, lr=0.0, cfg=cfg)
+    # lr=0: nothing moves regardless; use lr>0 to see decay only on "up"
+    p3, _ = opt.adamw_update(g, opt.adamw_init(params), params, lr=0.1,
+                             cfg=cfg)
+    assert jnp.allclose(p3["norm"], params["norm"])
+    assert not jnp.allclose(p3["up"], params["up"])
+
+
+def test_lr_schedule_shape():
+    cfg = TrainConfig(learning_rate=1e-3, min_lr=1e-4, warmup_steps=10,
+                      total_steps=100)
+    lr = opt.lr_schedule(cfg)
+    assert float(lr(jnp.asarray(0))) == pytest.approx(0.0, abs=1e-9)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-2)
+    assert float(lr(jnp.asarray(55))) < 1e-3
+
+
+@pytest.mark.parametrize("mode", ["standard", "ladder"])
+def test_loss_decreases(mode):
+    """~100 steps on structured synthetic data: loss must drop clearly."""
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=128
+    ).replace(residual_mode=ResidualMode(mode))
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10, total_steps=120,
+                       weight_decay=0.0)
+    loader = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32,
+                         global_batch=8, seed=0)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    state = opt.adamw_init(params)
+    lr_fn = opt.lr_schedule(tcfg)
+
+    @jax.jit
+    def step(params, state, batch, i):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: tpmod.lm_loss(cfg, p, batch, NULL_ENV, tcfg, True),
+            has_aux=True)(params)
+        grads, _ = opt.clip_by_global_norm(grads, tcfg.grad_clip)
+        params, state = opt.adamw_update(grads, state, params,
+                                         lr=lr_fn(i), cfg=tcfg)
+        return params, state, loss
+
+    losses = []
+    for i in range(120):
+        batch = {k: jnp.asarray(v) for k, v in loader.batch_at(i).items()}
+        params, state, loss = step(params, state, batch,
+                                   jnp.asarray(i, jnp.int32))
+        losses.append(float(loss))
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first - 0.25, (first, last)
+
+
+def test_checkpoint_restart_bitwise():
+    """Train 6 steps; vs train 3, checkpoint, restore, train 3 — identical
+    parameters (the loader being a pure function of step makes this hold)."""
+    cfg = REGISTRY["stablelm-3b"].reduced(n_layers=2, d_model=32,
+                                          n_heads=2, d_ff=64, vocab_size=64)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10,
+                       weight_decay=0.01)
+    loader = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16,
+                         global_batch=4, seed=1)
+    lr_fn = opt.lr_schedule(tcfg)
+
+    @jax.jit
+    def step(params, state, batch, i):
+        (_, _), grads = jax.value_and_grad(
+            lambda p: tpmod.lm_loss(cfg, p, batch, NULL_ENV, tcfg, True),
+            has_aux=True)(params)
+        return opt.adamw_update(grads, state, params, lr=lr_fn(i), cfg=tcfg)
+
+    def run(n0, params, state):
+        for i in range(n0, n0 + 3):
+            batch = {k: jnp.asarray(v)
+                     for k, v in loader.batch_at(i).items()}
+            params, state = step(params, state, batch,
+                                 jnp.asarray(i, jnp.int32))
+        return params, state
+
+    p0 = tfm.init_params(cfg, jax.random.key(0))
+    s0 = opt.adamw_init(p0)
+
+    pa, sa = run(0, p0, s0)
+    pa, sa = run(3, pa, sa)
+
+    pb, sb = run(0, p0, s0)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(3, pb, sb)
+        step_r, pc, sc, _ = mgr.restore(pb, sb)
+        assert step_r == 3
+        pc, sc = run(3, pc, sc)
+
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_atomicity():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        p = {"w": jnp.ones((2,))}
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, p)
+        assert mgr.steps() == [3, 4]
+        assert not list(os.scandir(os.path.join(d))) == []
+        # tmp dirs never survive
+        assert not [f for f in os.listdir(d) if f.startswith("tmp-")]
+
+
+def test_data_determinism_and_shardability():
+    ld = SyntheticLM(vocab_size=100, seq_len=8, global_batch=4, seed=7)
+    a = ld.batch_at(5)
+    b = ld.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ld.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(a["targets"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_fault_tolerance_units():
+    import time as _time
+    from repro.training.fault_tolerance import (FTConfig, FleetController,
+                                                Heartbeat, RestartBudget,
+                                                StragglerMonitor)
+    with tempfile.TemporaryDirectory() as d:
+        hb0 = Heartbeat(d, "h0")
+        hb1 = Heartbeat(d, "h1")
+        hb0.beat(1)
+        hb1.beat(1)
+        now = _time.time()
+        alive = Heartbeat.scan(d, dead_after_s=60, now=now)
+        assert alive == {"h0": True, "h1": True}
+        alive = Heartbeat.scan(d, dead_after_s=0.0, now=now + 10)
+        assert alive == {"h0": False, "h1": False}
+
+        mon = StragglerMonitor(FTConfig(patience=2, straggler_factor=1.5))
+        for _ in range(4):
+            mon.observe("h0", 1.0)
+            mon.observe("h1", 1.0)
+            mon.observe("h2", 10.0)
+            mon.flagged()
+        assert "h2" in mon.flagged()
+
+        hb0.beat(2)
+        hb1.beat(2)
+        fc = FleetController(FTConfig(policy="exclude"),
+                             hosts=["h0", "h1", "h2"], chips_per_host=8)
+        plan = fc.plan_restart(d, stragglers=["h1"])
+        assert plan["survivors"] == ["h0"]
+        assert plan["world"] == 8
+        assert "h2" in plan["lost"]
+
+        rb = RestartBudget(FTConfig(max_restarts=2, window_s=100))
+        t0 = 1000.0
+        assert rb.allow(t0) and rb.allow(t0 + 1)
+        assert not rb.allow(t0 + 2)
+        assert rb.allow(t0 + 200)  # window expired
+
+
+def test_elastic_checkpoint_resharding():
+    """Save under one layout, restore into protos of another world size —
+    full-array checkpoints are mesh-independent by construction."""
+    cfg = REGISTRY["stablelm-3b"].reduced(n_layers=2, d_model=32,
+                                          n_heads=2, d_ff=64, vocab_size=64)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, params)
+        _, restored, _, _ = mgr.restore(params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
