@@ -1,10 +1,11 @@
-"""Batched serving example: prefill a batch of prompts, decode with the
-KV-cache engine, compare Standard vs Ladder step latency structure.
+"""Continuous-batching serving example: variable-length prompts arrive over
+time, are admitted into a fixed slot pool, decode as ONE mixed-age batch, and
+retire independently on length cap — through the public engine API.
 
 On CPU at TP=1 there is no communication to overlap — the point of this
-example is the END-TO-END serving path (cache build, prefill, decode loop,
-greedy sampling) through the public API.  The modeled TP-8/TP-16 latencies
-come from core/schedule.py (printed at the end).
+example is the END-TO-END serving path (ragged caches, scheduler admission,
+interleaved prefill/decode, per-request sampling).  The modeled TP-8/TP-16
+latencies come from core/schedule.py (printed at the end).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -16,13 +17,13 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import REGISTRY, ParallelConfig, ResidualMode
+from repro.configs import REGISTRY, ResidualMode
 from repro.core import schedule as sched
 from repro.models import transformer as tfm
-from repro.parallel.collectives import NULL_ENV
-from repro.serving import engine, sampler
+from repro.serving.scheduler import (ContinuousServingEngine, Request,
+                                     SamplingParams)
 
 
 def main():
@@ -30,53 +31,45 @@ def main():
         n_layers=4, d_model=256, n_heads=8, d_ff=1024, vocab_size=4096
     ).replace(residual_mode=ResidualMode.LADDER)
     params = tfm.init_params(cfg, jax.random.key(0))
-    pcfg = ParallelConfig()
 
-    b, prompt_len, gen = 4, 64, 24
-    s_max = prompt_len + gen
-    prompts = jax.random.randint(jax.random.key(1), (b, prompt_len), 0,
-                                 cfg.vocab_size)
+    rng = np.random.default_rng(1)
+    engine = ContinuousServingEngine(cfg, params, batch_slots=3, s_max=96)
 
-    caches, _ = engine.build_caches(cfg, b, s_max, pcfg, for_decode=False)
+    # 6 requests, ragged prompts, mixed sampling; more requests than slots so
+    # the queue drains through slot reuse
+    requests = []
+    for rid, (lp, gen) in enumerate([(9, 12), (33, 8), (17, 16),
+                                     (50, 10), (5, 20), (24, 6)]):
+        samp = SamplingParams() if rid % 2 == 0 else \
+            SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=rid)
+        requests.append(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, lp).tolist(),
+            max_new_tokens=gen, sampling=samp))
 
-    @jax.jit
-    def prefill(params, tokens, caches):
-        hidden, caches, _ = tfm.forward(cfg, params, tokens, NULL_ENV,
-                                        caches=caches)
-        tok = sampler.greedy(
-            tfm.logits_shard(cfg, params, hidden[:, -1:])[:, 0], NULL_ENV,
-            cfg.vocab_size)
-        return caches, tok
-
-    @jax.jit
-    def decode(params, tok, caches, pos):
-        positions = jnp.full((b, 1), pos, jnp.int32)
-        hidden, caches, _ = tfm.forward(cfg, params, tok[:, None], NULL_ENV,
-                                        positions=positions, caches=caches,
-                                        unroll=True)
-        tok = sampler.greedy(tfm.logits_shard(cfg, params, hidden)[:, 0],
-                             NULL_ENV, cfg.vocab_size)
-        return caches, tok
-
+    # stagger arrivals: two up front, the rest submitted mid-flight
+    engine.submit(requests[0])
+    engine.submit(requests[1])
     t0 = time.time()
-    caches, tok = prefill(params, prompts, caches)
-    tok.block_until_ready()
-    t_pref = time.time() - t0
+    steps = 0
+    next_arrival = 2
+    while engine.has_work() or next_arrival < len(requests):
+        if next_arrival < len(requests) and steps % 2 == 0:
+            engine.submit(requests[next_arrival])
+            next_arrival += 1
+        engine.step()
+        steps += 1
+    wall = time.time() - t0
 
-    seqs = [tok]
-    t0 = time.time()
-    for i in range(gen - 1):
-        caches, tok = decode(params, tok, caches,
-                             jnp.asarray(prompt_len + i, jnp.int32))
-        seqs.append(tok)
-    tok.block_until_ready()
-    t_dec = time.time() - t0
-
-    out = jnp.stack(seqs, 1)
-    print(f"prefill {prompt_len}x{b} tokens: {t_pref*1e3:.1f} ms")
-    print(f"decode  {gen-1} steps:          {t_dec*1e3:.1f} ms "
-          f"({(gen-1)*b/t_dec:.0f} tok/s on 1 CPU core)")
-    print(f"sample continuation ids: {out[0, :12].tolist()}")
+    finished = {f.rid: f for f in engine.scheduler.finished}
+    n_tok = sum(len(f.tokens) for f in finished.values())
+    print(f"served {len(finished)} ragged requests on 3 slots in {steps} "
+          f"engine steps: {n_tok} tokens, {wall:.2f}s "
+          f"({n_tok / max(wall, 1e-9):.0f} tok/s on 1 CPU core)")
+    for f in finished.values():
+        kind = "greedy " if f.rid % 2 == 0 else "sampled"
+        print(f"  rid={f.rid} {kind} prompt={len(f.prompt):2d} "
+              f"-> {len(f.tokens):2d} toks ({f.finish_reason}): "
+              f"{f.tokens[:8]}")
 
     # modeled production latency (stablelm-3b full config, TP16 on v5e)
     full = REGISTRY["stablelm-3b"]

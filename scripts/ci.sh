@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Canonical pre-merge check: the FAST test tier (see pyproject.toml and
+# tests/conftest.py).  Single-process tests only — the multi-device
+# subprocess suites are `slow`-marked and run in the full tier:
+#
+#   scripts/ci.sh            # fast tier (pre-merge gate)
+#   scripts/ci.sh --full     # fast + slow (everything)
+#
+# Extra args are forwarded to pytest, e.g. `scripts/ci.sh -k scheduler`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MARK=(-m "not slow")
+if [[ "${1:-}" == "--full" ]]; then
+    MARK=()
+    shift
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q "${MARK[@]}" "$@"

@@ -38,6 +38,7 @@ from repro.configs import (ALL_SHAPES, ASSIGNED_ARCHS, REGISTRY,
                            SHAPES_BY_NAME, ResidualMode, TrainConfig,
                            get_config)
 from repro.launch import roofline as rl
+from repro.parallel import compat
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (dec_seq, plan_parallel, serve_input_specs,
                                 train_input_specs)
@@ -110,7 +111,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                                    fsdp=True)
         params_s, opt_s = _train_structs(cfg, pcfg, fsdp=True)
         batch_s = train_input_specs(cfg, shape)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             # donate params + opt state: updated in place on real hardware
             lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
                 params_s, opt_s, batch_s, jax.ShapeDtypeStruct((), jnp.int32))
@@ -149,7 +150,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                     jax.ShapeDtypeStruct((), jnp.int32))
             mf = model_flops(cfg, shape.global_batch, train=False,
                              decode_context=shape.seq_len)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             # donate the KV caches: updated in place on real hardware
             lowered = jax.jit(fn, donate_argnums=(2,)).lower(*args)
 

@@ -15,14 +15,13 @@ onto one ICI torus dimension; 'data' carries DP; 'pod' is either extra DP
 
 from __future__ import annotations
 
-import jax
+from repro.parallel import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh_for(world: int, tp: int, pods: int = 1):
@@ -31,10 +30,8 @@ def make_mesh_for(world: int, tp: int, pods: int = 1):
     assert world % (tp * pods) == 0, (world, tp, pods)
     dp = world // (tp * pods)
     if pods > 1:
-        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return compat.make_mesh((dp, tp), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

@@ -1,8 +1,13 @@
-"""Serving driver: load (or init) a model, prefill a batch of prompts,
-decode N tokens greedily.
+"""Serving driver: continuous batching over a fixed slot pool.
+
+Loads (or inits) a model, submits a stream of variable-length synthetic
+requests, and serves them through the continuous-batching engine
+(serving/scheduler.py): prefill of newly admitted requests interleaves with
+batched decode of in-flight ones, retired slots are refilled from the queue,
+and every request samples with its own temperature / top-k / top-p / seed.
 
   PYTHONPATH=src python -m repro.launch.serve --arch ladder-1b \
-      --residual ladder --reduced --prompt-len 64 --gen 32 --batch 4
+      --residual ladder --reduced --slots 4 --requests 12 --gen 32
 """
 
 import argparse
@@ -17,9 +22,19 @@ def main():
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--devices", type=int, default=0)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slot pool size (max concurrent requests)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="max prompt length (lengths are uniform in "
+                         "[prompt-len//4, prompt-len])")
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at once")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
@@ -29,13 +44,12 @@ def main():
             f" --xla_force_host_platform_device_count={args.devices}"
 
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
+    import numpy as np
     from repro.configs import ParallelConfig, get_config
     from repro.launch.mesh import make_mesh_for
     from repro.models import transformer as tfm
     from repro.parallel import sharding
-    from repro.serving import engine
+    from repro.serving import scheduler as sched
     from repro.training.checkpoint import CheckpointManager
 
     cfg = get_config(args.arch, residual=args.residual)
@@ -43,7 +57,7 @@ def main():
         cfg = cfg.reduced(n_layers=4, d_model=256, n_heads=4, d_ff=512,
                           vocab_size=2048)
     pcfg = ParallelConfig(tp=args.tp, dp=args.dp)
-    mesh = make_mesh_for(pcfg.world, args.tp)
+    mesh = make_mesh_for(pcfg.world, args.tp) if pcfg.world > 1 else None
 
     params = tfm.init_params(cfg, jax.random.key(0))
     if args.ckpt:
@@ -52,45 +66,47 @@ def main():
         print(f"[serve] restored step {mgr.latest_step()}")
     params, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
 
-    b = args.batch
-    s_max = args.prompt_len + args.gen
-    prompts = jax.random.randint(jax.random.key(1), (b, args.prompt_len),
-                                 0, cfg.vocab_size)
-    caches, cache_specs = engine.build_caches(cfg, b, s_max, pcfg,
-                                              for_decode=False)
-    steps = engine.build_serve_steps(cfg, mesh, pcfg)
-    out_cache_specs = engine.build_caches(cfg, b, s_max, pcfg,
-                                          for_decode=True,
-                                          structs_only=True)[1]
-    prefill = engine.shard_mapped(
-        steps["prefill"], mesh,
-        (steps["pspecs"], steps["tok_spec"], cache_specs, {}),
-        (out_cache_specs, steps["tok_spec"]))
-    decode = engine.shard_mapped(
-        steps["decode"], mesh,
-        (steps["pspecs"], steps["tok_spec"], out_cache_specs, P()),
-        (out_cache_specs, steps["tok_spec"]))
+    s_max = args.prompt_len + args.gen + 1
+    engine = sched.ContinuousServingEngine(
+        cfg, params, batch_slots=args.slots, s_max=s_max, pcfg=pcfg,
+        mesh=mesh)
 
-    with jax.set_mesh(mesh):
+    rng = np.random.default_rng(1)
+    sampling = lambda rid: sched.SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=rid)
+    if args.rate > 0:
+        trace = sched.poisson_trace(
+            args.requests, args.rate, seed=1,
+            prompt_lens=(max(1, args.prompt_len // 4), args.prompt_len),
+            max_new=(max(1, args.gen // 2), args.gen),
+            vocab=cfg.vocab_size, sampling=sampling)
         t0 = time.time()
-        caches, tok = jax.jit(prefill)(params, prompts, caches, {})
-        tok.block_until_ready()
-        t_prefill = time.time() - t0
-        gen = [tok]
-        jd = jax.jit(decode, donate_argnums=(2,))
+        finished, tok_times = sched.serve_trace(engine, trace)
+        wall = time.time() - t0
+    else:
+        trace = []
+        for rid in range(args.requests):
+            lp = int(rng.integers(max(1, args.prompt_len // 4),
+                                  args.prompt_len + 1))
+            trace.append(sched.Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, lp).tolist(),
+                max_new_tokens=args.gen, sampling=sampling(rid)))
+        for r in trace:
+            engine.submit(r)
         t0 = time.time()
-        for i in range(args.gen - 1):
-            caches, tok = jd(params, tok, caches,
-                             jnp.asarray(args.prompt_len + i, jnp.int32))
-            gen.append(tok)
-        tok.block_until_ready()
-        t_decode = time.time() - t0
+        finished = engine.run()
+        wall = time.time() - t0
 
-    toks = jnp.stack(gen, axis=1)
-    print(f"[serve] prefill {args.prompt_len} toks x{b}: {t_prefill*1e3:.1f}ms")
-    print(f"[serve] decode {args.gen - 1} steps: {t_decode*1e3:.1f}ms "
-          f"({(args.gen - 1) * b / max(t_decode, 1e-9):.1f} tok/s)")
-    print(f"[serve] sample output ids: {toks[0][:16].tolist()}")
+    n_tok = sum(len(f.tokens) for f in finished.values())
+    print(f"[serve] {len(finished)}/{len(trace)} requests, {n_tok} tokens "
+          f"in {wall:.2f}s ({n_tok / max(wall, 1e-9):.1f} tok/s) "
+          f"slots={args.slots} tp={args.tp} dp={args.dp}")
+    for f in list(finished.values())[:4]:
+        print(f"[serve] rid={f.rid} prompt={len(f.prompt)} "
+              f"-> {len(f.tokens)} toks ({f.finish_reason}): "
+              f"{f.tokens[:12]}")
 
 
 if __name__ == "__main__":

@@ -249,16 +249,17 @@ def _cached_attention(q, cache, positions, env: AxisEnv, *, softcap: float):
     partial softmax statistics are combined with a psum over the data axis.
     """
     k, v = cache["k"], cache["v"]         # heads-major: (B, Hkv, Sk, hd)
-    slot_pos = cache["slot_pos"]          # (S_slots,) absolute pos or -1
+    slot_pos = cache["slot_pos"]          # (S_slots,) or ragged (B, S_slots)
     b, s, hq, hd = q.shape
     hkv = k.shape[1]
     qg = q.reshape(b, s, hkv, hq // hkv, hd)
 
+    sp = slot_pos if slot_pos.ndim == 2 else slot_pos[None, :]  # (B|1, Sk)
     cur = positions[:, -1][:, None]        # (B,1) current absolute position
-    valid = (slot_pos[None, :] >= 0) & (slot_pos[None, :] <= cur)  # (B,Sk)
+    valid = (sp >= 0) & (sp <= cur)        # (B,Sk)
     if s > 1:  # prefill into cache: causal among the new tokens
-        valid = (slot_pos[None, None, :] >= 0) & \
-                (slot_pos[None, None, :] <= positions[:, :, None])
+        valid = (sp[:, None, :] >= 0) & \
+                (sp[:, None, :] <= positions[:, :, None])
         mask = valid[:, None, None]
     else:
         mask = valid[:, None, None, None]   # (B,1,1,1,Sk)
@@ -380,13 +381,10 @@ def mla_attention(params, x, positions, env: AxisEnv, *, mla, rope_theta: float,
         s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
                             preferred_element_type=jnp.float32)
         scores = (s_nope + s_rope) * scale
-        if s > 1:
-            mask = (slot_pos[None, None, None, :] >= 0) & \
-                   (slot_pos[None, None, None, :] <= positions[:, None, :, None])
-        else:
-            cur = positions[:, -1][:, None]
-            mask = ((slot_pos[None, :] >= 0) &
-                    (slot_pos[None, :] <= cur))[:, None, None]
+        # this branch only runs at s == 1 (absorbed decode)
+        sp = slot_pos if slot_pos.ndim == 2 else slot_pos[None, :]
+        cur = positions[:, -1][:, None]
+        mask = ((sp >= 0) & (sp <= cur))[:, None, None]
         scores = jnp.where(mask, scores, NEG_INF)
         p = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhqk,bkl->bqhl", p.astype(c_kv.dtype), c_kv)

@@ -22,6 +22,15 @@ import jax
 import jax.numpy as jnp
 
 
+def _axis_size(name) -> int:
+    """Static mesh-axis size.  Version shim: ``jax.lax.axis_size`` is
+    recent; on older jax a psum of a python scalar constant-folds to the
+    axis size."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 @dataclass(frozen=True)
 class AxisEnv:
     """Names of the live mesh axes inside the current shard_map (or None)."""
@@ -33,11 +42,11 @@ class AxisEnv:
 
     @property
     def tp(self) -> int:
-        return jax.lax.axis_size(self.model) if self.model else 1
+        return _axis_size(self.model) if self.model else 1
 
     @property
     def dp(self) -> int:
-        return jax.lax.axis_size(self.data) if self.data else 1
+        return _axis_size(self.data) if self.data else 1
 
     def model_axis_index(self):
         return jax.lax.axis_index(self.model) if self.model else 0
@@ -78,14 +87,14 @@ class AxisEnv:
     def dp_total(self) -> int:
         n = 1
         for a in self._dp_axes():
-            n *= jax.lax.axis_size(a)
+            n *= _axis_size(a)
         return n
 
     def dp_shard_index(self):
         """Linear index over the joint (pod, data) grid."""
         idx = 0
         for a in self._dp_axes():
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * _axis_size(a) + jax.lax.axis_index(a)
         return idx
 
     def all_gather_dp(self, x, axis: int = 0, tiled: bool = False):

@@ -1,0 +1,42 @@
+"""Version shims for jax APIs that moved between releases.
+
+The codebase targets the modern spellings (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``); on older
+runtimes (0.4.x) these fall back to the experimental/legacy equivalents.
+Everything mesh- or shard_map-shaped must go through this module so the
+whole repo degrades together.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` for jit'ed sharded computations."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # legacy global-mesh path: Mesh is itself a context manager
+    return mesh if hasattr(mesh, "__enter__") else contextlib.nullcontext()
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map without value-and-replication checking (our step functions
+    return TP-partial values on purpose)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

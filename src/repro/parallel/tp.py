@@ -234,8 +234,8 @@ def build_train_step(cfg: ModelConfig, mesh, pcfg: ParallelConfig,
     in_specs = (pspecs, opt_specs, batch_spec, P())
     out_specs = (pspecs, opt_specs,
                  dict(loss=P(), grad_norm=P(), lr=P(), nll=P()))
-    mapped = jax.shard_map(step, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+    from repro.parallel import compat
+    mapped = compat.shard_map(step, mesh, in_specs, out_specs)
     return mapped, in_specs, out_specs
 
 

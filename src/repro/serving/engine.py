@@ -36,14 +36,22 @@ def _batch_axes(pcfg: ParallelConfig):
 def build_caches(cfg: ModelConfig, batch: int, s_max: int,
                  pcfg: ParallelConfig, *, for_decode: bool,
                  seq_shard_data: bool = False, enc_s: int = 0,
-                 structs_only: bool = False):
+                 structs_only: bool = False, ragged: bool = False):
     """Build (caches, cache_pspecs) as GLOBAL pytrees.
 
     seq_shard_data: shard KV sequence over the data axis (flash decoding) —
     used when the batch is too small for data parallelism (long_500k).
     enc_s: encoder context length for cross-attention caches (enc-dec).
     structs_only: produce ShapeDtypeStructs (dry-run — no allocation).
+    ragged: per-batch-row position tracking (continuous batching) — every
+    cache leaf carries the batch on axis 1, so slots can be sliced/reset
+    independently (DESIGN.md §Serving).  Incompatible with seq_shard_data.
     """
+    if ragged and seq_shard_data:
+        raise NotImplementedError("ragged + seq-sharded caches")
+    if ragged and cfg.encoder_layers:
+        raise NotImplementedError("ragged caches for enc-dec models "
+                                  "(cross-attention slots are per-utterance)")
     dtype = jnp.dtype(cfg.dtype)
     alloc = kvc.struct_alloc if structs_only else kvc._alloc_default
     plan = tfm.plan_sections(cfg)
@@ -55,6 +63,9 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
     seq_shards = (pcfg.dp if seq_shard_data else 1)
     sspec = "data" if seq_shard_data and pcfg.dp > 1 else None
     tp_ax = "model" if pcfg.tp > 1 else None
+    # ragged slot_pos carries (group, batch, slots) — batch sharded like k/v
+    sp_spec = (lambda tail: P(None, bax, tail)) if ragged else \
+        (lambda tail: P(None, tail))
 
     caches, specs = [], []
     for sec in plan:
@@ -65,30 +76,33 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
                 if sub in ("attn", "shared_attn"):
                     c = kvc.make_kv_cache(batch, s_max, hp.kv_eff,
                                           cfg.head_dim, dtype, alloc=alloc,
-                                          seq_shards=seq_shards, lead=lead)
+                                          seq_shards=seq_shards, lead=lead,
+                                          ragged=ragged)
                     s = kvc.KVCache(k=P(None, bax, tp_ax, sspec, None),
                                     v=P(None, bax, tp_ax, sspec, None),
-                                    slot_pos=P(None, sspec),
+                                    slot_pos=sp_spec(sspec),
                                     ring=c.ring, seq_sharded=c.seq_sharded)
                 elif sub == "local_attn":
                     c = kvc.make_kv_cache(batch, s_max, hp.kv_eff,
                                           cfg.head_dim, dtype, alloc=alloc,
-                                          window=cfg.sliding_window, lead=lead)
+                                          window=cfg.sliding_window, lead=lead,
+                                          ragged=ragged)
                     s = kvc.KVCache(k=P(None, bax, tp_ax, None, None),
                                     v=P(None, bax, tp_ax, None, None),
-                                    slot_pos=P(None, None),
+                                    slot_pos=sp_spec(None),
                                     ring=c.ring, seq_sharded=False)
                 elif sub == "mla":
                     ssm_flag = getattr(cfg, "mla_flash_decode", False) and \
-                        pcfg.tp > 1
+                        pcfg.tp > 1 and not ragged
                     c = kvc.make_mla_cache(batch, s_max, cfg.mla.kv_lora_rank,
                                            cfg.mla.qk_rope_head_dim, dtype,
                                            lead=lead, alloc=alloc,
-                                           seq_sharded_model=ssm_flag)
+                                           seq_sharded_model=ssm_flag,
+                                           ragged=ragged)
                     mtp = "model" if ssm_flag else None
                     s = kvc.MLACache(c_kv=P(None, bax, mtp, None),
                                      k_rope=P(None, bax, mtp, None),
-                                     slot_pos=P(None, mtp),
+                                     slot_pos=sp_spec(mtp),
                                      seq_sharded_model=ssm_flag)
                 elif sub == "xattn":
                     if for_decode:
@@ -215,6 +229,88 @@ def build_serve_steps(cfg: ModelConfig, mesh, pcfg: ParallelConfig, *,
                 tok_spec=tok_spec)
 
 
+def build_continuous_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
+                           batch_slots: int, rng_seed: int = 0):
+    """Steps for the continuous-batching engine (ragged caches; see
+    serving/scheduler.py for the host-side slot management).
+
+    prefill(params, caches, tokens, length, slot, temp, top_k, top_p, seed)
+        Admit ONE request into slot `slot`: reset the slot's state, run the
+        prompt (right-padded to tokens.shape[1]; positions -1 beyond
+        `length` so padded K/V writes are dropped), scatter the slot back
+        and sample the first generated token.  Returns (caches, tok (1,)).
+
+    decode(params, caches, tokens, pos, active, temp, top_k, top_p, seeds)
+        One token for EVERY slot at its own position (all (B,)-vectors).
+        Inactive slots run at position -1: their K/V writes are dropped and
+        their sampled token is discarded by the host.  Returns
+        (caches, toks (B,)).
+
+    Sampling keys depend only on (request seed, absolute position), so a
+    request's tokens are bit-identical whether it is decoded alone or inside
+    a mixed-age continuous batch.
+    """
+    env = make_axis_env(pcfg)
+    pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
+    b_axes = _batch_axes(pcfg)
+    vec_spec = P(b_axes) if b_axes else P()
+    dp_deg = max(1, pcfg.dp) * max(1, pcfg.pods)
+    local_slots = batch_slots // dp_deg if b_axes else batch_slots
+    base_key = jax.random.key(rng_seed)
+
+    def _sample(params, hidden_last, keys, temp, top_k, top_p):
+        logits = tfm.logits_shard(cfg, params, hidden_last)
+        return sampler.sample_tokens(logits[:, 0], env, cfg.vocab_size,
+                                     keys, temp, top_k, top_p)
+
+    def prefill(params, caches, tokens, length, slot, temp, top_k, top_p,
+                seed):
+        lp = tokens.shape[1]
+        slot_l = slot - env.dp_shard_index() * local_slots
+        own = (slot_l >= 0) & (slot_l < local_slots)
+        safe = jnp.clip(slot_l, 0, local_slots - 1)
+        sub = kvc.reset_slot_state(kvc.slice_slot(caches, safe))
+        ar = jnp.arange(lp)
+        positions = jnp.where(ar < length, ar, -1)[None]        # (1, lp)
+        hidden, sub, _ = tfm.forward(cfg, params, tokens, env,
+                                     positions=positions, caches=sub)
+        h_last = jax.lax.dynamic_slice_in_dim(hidden, length - 1, 1, axis=1)
+        keys = sampler.request_keys(base_key, seed, length[None])
+        tok = _sample(params, h_last, keys, temp, top_k, top_p)
+        new_caches = kvc.insert_slot(caches, sub, safe)
+        if b_axes:
+            # batch sharded over data: only the owner shard keeps the write
+            new_caches = jax.tree.map(
+                lambda n, o: jnp.where(own, n, o), new_caches, caches)
+        return new_caches, tok
+
+    def _decode_body(params, caches, tokens, pos, active):
+        positions = jnp.where(active, pos, -1)[:, None]          # (B, 1)
+        hidden, caches, _ = tfm.forward(cfg, params, tokens[:, None], env,
+                                        positions=positions, caches=caches,
+                                        unroll=True)
+        return hidden, caches
+
+    def decode(params, caches, tokens, pos, active, temp, top_k, top_p,
+               seeds):
+        hidden, caches = _decode_body(params, caches, tokens, pos, active)
+        keys = sampler.request_keys(base_key, seeds, pos + 1)
+        toks = _sample(params, hidden, keys, temp, top_k, top_p)
+        return caches, toks
+
+    def decode_greedy(params, caches, tokens, pos, active):
+        # hot default path (temperature 0 everywhere): shard-local argmax +
+        # tiny all-gather; skips the full-vocab sorts/gumbel of sample_tokens
+        hidden, caches = _decode_body(params, caches, tokens, pos, active)
+        logits = tfm.logits_shard(cfg, params, hidden)
+        toks = sampler.greedy(logits[:, 0], env, cfg.vocab_size)
+        return caches, toks
+
+    return dict(prefill=prefill, decode=decode, decode_greedy=decode_greedy,
+                env=env, pspecs=pspecs, vec_spec=vec_spec,
+                local_slots=local_slots)
+
+
 def shard_mapped(fn, mesh, in_specs, out_specs):
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    from repro.parallel import compat
+    return compat.shard_map(fn, mesh, in_specs, out_specs)

@@ -2,9 +2,18 @@
 
 Cache classes are registered dataclass pytrees whose *meta* fields (ring,
 seq_sharded) are static — they survive scan/jit boundaries while the array
-fields are traced.  Uniform-length batches are assumed (all sequences in a
-batch share positions), matching the paper's benchmark setup; ragged batching
-is an engine-level concern (DESIGN.md §Serving).
+fields are traced.
+
+Two batching regimes share these classes, distinguished by the rank of
+``slot_pos``:
+
+* uniform  — ``slot_pos: (S_slots,)``; every sequence in the batch shares
+  positions (the paper's benchmark setup).
+* ragged   — ``slot_pos: (B, S_slots)``; every batch row tracks its own
+  positions, so a single decode step can serve a mixed-age continuous batch
+  (requests admitted at different times, different prompt lengths).  Writes
+  at position -1 are dropped, which is how inactive slots and prompt
+  padding are expressed (DESIGN.md §Serving).
 
 Cache kinds
 -----------
@@ -84,28 +93,40 @@ def struct_alloc(shape, dtype, fill=0):
 
 def make_kv_cache(batch: int, s_max: int, hkv: int, hd: int, dtype,
                   window: int = 0, seq_shards: int = 1,
-                  lead: Tuple[int, ...] = (), alloc=_alloc_default) -> KVCache:
+                  lead: Tuple[int, ...] = (), alloc=_alloc_default,
+                  ragged: bool = False) -> KVCache:
     """`lead` prepends group-stacking dims (for scan sections).
 
     seq_shards only sets the seq_sharded flag — the GLOBAL array keeps all
     slots; the PartitionSpec's 'data' entry provides the division (in-step
-    code sees the local slice and offsets by dp_shard_index)."""
+    code sees the local slice and offsets by dp_shard_index).
+
+    ragged: per-batch-row position tracking (slot_pos gains a batch dim);
+    required by the continuous-batching engine, incompatible with
+    seq_shards > 1."""
+    if ragged and seq_shards > 1:
+        raise NotImplementedError("ragged + seq-sharded caches")
     slots = min(window, s_max) if window else s_max
     shape = (*lead, batch, hkv, slots, hd)
+    sp_shape = (*lead, batch, slots) if ragged else (*lead, slots)
     return KVCache(
         k=alloc(shape, dtype), v=alloc(shape, dtype),
-        slot_pos=alloc((*lead, slots), jnp.int32, fill=-1),
+        slot_pos=alloc(sp_shape, jnp.int32, fill=-1),
         ring=bool(window) and window < s_max,
         seq_sharded=seq_shards > 1)
 
 
 def make_mla_cache(batch: int, s_max: int, lora: int, rope_d: int, dtype,
                    lead: Tuple[int, ...] = (), alloc=_alloc_default,
-                   seq_sharded_model: bool = False) -> MLACache:
+                   seq_sharded_model: bool = False,
+                   ragged: bool = False) -> MLACache:
+    if ragged and seq_sharded_model:
+        raise NotImplementedError("ragged + model-seq-sharded MLA cache")
+    sp_shape = (*lead, batch, s_max) if ragged else (*lead, s_max)
     return MLACache(
         c_kv=alloc((*lead, batch, s_max, lora), dtype),
         k_rope=alloc((*lead, batch, s_max, rope_d), dtype),
-        slot_pos=alloc((*lead, s_max), jnp.int32, fill=-1),
+        slot_pos=alloc(sp_shape, jnp.int32, fill=-1),
         seq_sharded_model=seq_sharded_model)
 
 
@@ -146,15 +167,62 @@ def _write_hs(buf, slots, new, drop_hi: int):
     return buf.at[:, :, slots].set(new.swapaxes(1, 2), mode="drop")
 
 
+def _write_ragged(buf, slots, new, drop_hi: int):
+    """Per-row scatter.  buf: (B, S_slots, ...); slots: (B, S); new (B, S, ...)."""
+    def one(bufb, slotb, newb):
+        s = jnp.where((slotb >= 0) & (slotb < drop_hi), slotb, drop_hi)
+        return bufb.at[s].set(newb, mode="drop")
+    return jax.vmap(one)(buf, slots, new)
+
+
+def _write_hs_ragged(buf, slots, new, drop_hi: int):
+    """Per-row scatter, heads-major.  buf: (B, H, S_slots, hd);
+    slots: (B, S); new: (B, S, H, hd)."""
+    def one(bufb, slotb, newb):
+        s = jnp.where((slotb >= 0) & (slotb < drop_hi), slotb, drop_hi)
+        return bufb.at[:, s].set(newb.swapaxes(0, 1), mode="drop")
+    return jax.vmap(one)(buf, slots, new)
+
+
+def _slot_pos_scatter(slot_pos, slot, pos, slots_total: int):
+    """Record absolute positions at the written slots (1-D or per-row 2-D)."""
+    idx = jnp.where((slot >= 0) & (slot < slots_total), slot, slots_total)
+    if slot_pos.ndim == 2:
+        return jax.vmap(lambda spb, ib, pb: spb.at[ib].set(pb, mode="drop"))(
+            slot_pos, idx, pos)
+    return slot_pos.at[idx].set(pos, mode="drop")
+
+
 def cache_update(cache: KVCache, k_new, v_new, positions,
                  env: AxisEnv) -> KVCache:
-    """Write new K/V at `positions` (uniform across batch).
+    """Write new K/V at `positions`.
 
     prefill: positions = (B, S) arange; decode: (B, 1) current position.
     Ring caches keep the last `slots` tokens; seq-sharded caches write only
-    the slice owned by this data shard.
+    the slice owned by this data shard.  Ragged caches (slot_pos has a batch
+    dim) write per-row — positions may differ across the batch and entries
+    at position -1 are dropped (inactive slots / prompt padding).
     """
     slots_total = cache.k.shape[2]
+
+    if cache.slot_pos.ndim == 2:                    # ragged: per-row writes
+        pos = positions                             # (B, S)
+        if cache.ring:
+            # prefill longer than the window: only each row's last
+            # `slots_total` positions may land (duplicate ring slots in one
+            # scatter would be order-undefined)
+            row_max = jnp.max(pos, axis=1, keepdims=True)
+            pos = jnp.where(pos > row_max - slots_total, pos, -1)
+            slot = pos % slots_total
+        else:
+            slot = pos
+        slot = jnp.where(pos >= 0, slot, -1)
+        k = _write_hs_ragged(cache.k, slot, k_new, slots_total)
+        v = _write_hs_ragged(cache.v, slot, v_new, slots_total)
+        sp = _slot_pos_scatter(cache.slot_pos, slot, pos, slots_total)
+        return KVCache(k=k, v=v, slot_pos=sp, ring=cache.ring,
+                       seq_sharded=cache.seq_sharded)
+
     pos = positions[0]                              # uniform batch
     s = pos.shape[0]
 
@@ -186,6 +254,13 @@ def cache_update(cache: KVCache, k_new, v_new, positions,
 def mla_cache_update(cache: MLACache, c_kv, k_rope, positions,
                      env: AxisEnv = None) -> MLACache:
     slots_total = cache.c_kv.shape[1]
+    if cache.slot_pos.ndim == 2:                    # ragged: per-row writes
+        slot = positions                            # (B, S)
+        ck = _write_ragged(cache.c_kv, slot, c_kv, slots_total)
+        kr = _write_ragged(cache.k_rope, slot, k_rope, slots_total)
+        sp = _slot_pos_scatter(cache.slot_pos, slot, positions, slots_total)
+        return MLACache(c_kv=ck, k_rope=kr, slot_pos=sp,
+                        seq_sharded_model=cache.seq_sharded_model)
     pos = positions[0]
     if cache.seq_sharded_model and env is not None and env.model:
         slot = pos - env.model_axis_index() * slots_total
@@ -197,3 +272,48 @@ def mla_cache_update(cache: MLACache, c_kv, k_rope, positions,
                                      slot, slots_total)].set(pos, mode="drop")
     return MLACache(c_kv=ck, k_rope=kr, slot_pos=sp,
                     seq_sharded_model=cache.seq_sharded_model)
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle (continuous batching; DESIGN.md §Serving)
+# ---------------------------------------------------------------------------
+# Ragged section caches are pytrees in which EVERY array leaf carries the
+# batch on axis 1 (axis 0 is the scan group-stacking dim), so one slot's
+# state can be sliced out / scattered back generically.
+
+_CACHE_TYPES = (KVCache, MLACache)
+
+
+def _is_state(x):
+    return isinstance(x, _CACHE_TYPES)
+
+
+def reset_slot_state(slot_caches):
+    """Fresh per-request state for a just-sliced slot: KV-style caches get
+    slot_pos = -1 (entries masked out; stale K/V rows are unreachable),
+    recurrent states (mamba/rwkv dicts) are zeroed."""
+    def reset(c):
+        if isinstance(c, KVCache):
+            return KVCache(k=c.k, v=c.v,
+                           slot_pos=jnp.full_like(c.slot_pos, -1),
+                           ring=c.ring, seq_sharded=c.seq_sharded)
+        if isinstance(c, MLACache):
+            return MLACache(c_kv=c.c_kv, k_rope=c.k_rope,
+                            slot_pos=jnp.full_like(c.slot_pos, -1),
+                            seq_sharded_model=c.seq_sharded_model)
+        return jax.tree.map(jnp.zeros_like, c)
+    return jax.tree.map(reset, slot_caches, is_leaf=_is_state)
+
+
+def slice_slot(caches, slot):
+    """Extract slot `slot` (batch axis 1) as a batch-1 view of the caches."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), caches)
+
+
+def insert_slot(caches, slot_caches, slot):
+    """Scatter a batch-1 slot state back into the full-batch caches."""
+    return jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=1),
+        caches, slot_caches)

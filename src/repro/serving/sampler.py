@@ -1,4 +1,13 @@
-"""Sampling over vocab-sharded logits (full logits never materialised)."""
+"""Sampling over vocab-sharded logits.
+
+``greedy`` and ``sample`` (Gumbel-max) never materialise the full logits —
+each TP shard works on its vocab slice and a tiny all-gather combines the
+winners.  ``sample_tokens`` adds per-request temperature / top-k / top-p
+with seeded PRNG for the continuous-batching engine; top-k/top-p need a
+global sort, so under TP it gathers the full (B, V) logits first — an
+accepted cost: B is the slot count and the gather is off the ladder's
+critical path (it happens after the final block's AllReduce).
+"""
 
 from __future__ import annotations
 
@@ -6,6 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.collectives import AxisEnv
+
+NEG_INF = -1e30
+GREEDY_EPS = 1e-5   # temperature at or below this means argmax decoding
 
 
 def _mask_padded(logits_shard, env: AxisEnv, true_vocab: int):
@@ -41,3 +53,66 @@ def sample(logits_shard, env: AxisEnv, true_vocab: int, key,
     g = jax.random.gumbel(k, lf.shape, jnp.float32)
     return greedy((lf + g), AxisEnv(model=env.model), true_vocab=10**9) \
         if env.model else jnp.argmax(lf + g, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling (continuous batching)
+# ---------------------------------------------------------------------------
+
+def request_keys(base_key, seeds, steps):
+    """Per-row PRNG keys: fold the request seed then the absolute position of
+    the token being generated.  A request's random stream therefore depends
+    only on (seed, position) — NOT on which slot it occupies or which other
+    requests share the batch, which is what makes continuous-batching output
+    bit-identical to isolated decoding."""
+    return jax.vmap(lambda s, t: jax.random.fold_in(
+        jax.random.fold_in(base_key, s), t))(seeds, steps)
+
+
+def _apply_top_k(logits, top_k):
+    """Mask all but each row's top-k logits.  top_k: (B,) int32; <=0 keeps
+    the full distribution."""
+    v = logits.shape[-1]
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    kk = jnp.clip(top_k, 1, v)
+    thresh = jnp.take_along_axis(sorted_desc, kk[:, None] - 1, axis=-1)
+    keep = (logits >= thresh) | (top_k <= 0)[:, None]
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def _apply_top_p(logits, top_p):
+    """Nucleus filtering.  top_p: (B,) float; >=1 keeps everything.  A row
+    keeps the smallest prefix of the sorted distribution whose exclusive
+    cumulative probability is < top_p (the top-1 token always survives)."""
+    idx = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, idx, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum_excl = jnp.cumsum(probs, axis=-1) - probs
+    keep_sorted = (cum_excl < top_p[:, None]) | (top_p >= 1.0)[:, None]
+    inv = jnp.argsort(idx, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def sample_tokens(logits_shard, env: AxisEnv, true_vocab: int, keys,
+                  temperature, top_k, top_p):
+    """Sample one token per batch row with per-row parameters.
+
+    logits_shard: (B, V_local) — this TP shard's vocab slice.
+    keys: (B,) typed PRNG keys (see ``request_keys``).
+    temperature/top_k/top_p: (B,) vectors.  temperature <= GREEDY_EPS decodes
+    greedily for that row (exactly matching ``greedy``).
+    Returns (B,) int32 global token ids, identical on every shard.
+    """
+    lf = _mask_padded(logits_shard, env, true_vocab)
+    if env.model:
+        # full vocab in shard order: shard i owns columns [i*v, (i+1)*v)
+        lf = jax.lax.all_gather(lf, env.model, axis=-1, tiled=True)
+    greedy_tok = jnp.argmax(lf, axis=-1)
+
+    scaled = lf / jnp.maximum(temperature, GREEDY_EPS)[:, None]
+    filtered = _apply_top_p(_apply_top_k(scaled, top_k), top_p)
+    gumbel = jax.vmap(
+        lambda k: jax.random.gumbel(k, (lf.shape[-1],), jnp.float32))(keys)
+    sampled_tok = jnp.argmax(filtered + gumbel, axis=-1)
+    return jnp.where(temperature <= GREEDY_EPS, greedy_tok, sampled_tok)

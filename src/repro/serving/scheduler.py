@@ -1,0 +1,382 @@
+"""Continuous-batching request scheduler and serving engine.
+
+The paper's wall-clock win is a per-step property; this module is what makes
+it matter under real traffic: a fixed pool of ``batch_slots`` decode slots
+stays full by admitting variable-length requests as they arrive, interleaving
+prefill of new requests with decode of in-flight ones, retiring sequences on
+EOS or length cap, and refilling freed slots (DESIGN.md §Serving).
+
+Split of responsibilities:
+
+* ``Scheduler``  — pure host-side bookkeeping (FIFO admission queue, slot
+  lifecycle, retirement rules).  No jax; unit-testable in microseconds.
+* ``ContinuousServingEngine`` — owns the device state (ragged caches, jitted
+  prefill/decode from ``engine.build_continuous_steps``) and drives the
+  scheduler.  One jitted decode graph serves a mixed-age batch under any
+  ``ResidualMode`` and TP/DP sharding.
+
+Determinism contract: a request's output tokens depend only on (prompt,
+sampling params, seed) — never on which slot it lands in or what else is in
+flight — because attention masks key on per-row ``slot_pos`` and sampling
+keys fold (seed, absolute position).  ``tests/test_scheduler.py`` asserts
+bit-identity between continuous and isolated decoding.  (MoE models with
+finite expert capacity are the documented exception: routing competes across
+the batch, so outputs can differ at capacity.)
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls.  temperature <= sampler.GREEDY_EPS
+    decodes greedily; top_k <= 0 and top_p >= 1 disable the filters."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    arrival: float = 0.0          # bench bookkeeping (seconds or step index)
+
+
+@dataclass
+class _Slot:
+    request: Request
+    pos: int                      # absolute position of the LAST sampled token
+    tokens: List[int]             # generated so far (first token from prefill)
+
+
+@dataclass
+class FinishedRequest:
+    rid: int
+    prompt: List[int]
+    tokens: List[int]
+    finish_reason: str            # "eos" | "length" | "cache_full"
+
+
+class Scheduler:
+    """FIFO admission into a fixed slot pool, with per-slot retirement.
+
+    The scheduler never touches arrays: callers report sampled tokens via
+    ``start``/``observe`` and receive retirement decisions back.
+    """
+
+    def __init__(self, n_slots: int, s_max: int, eos_id: Optional[int] = None,
+                 max_prefills_per_step: int = 1):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.eos_id = eos_id
+        self.max_prefills_per_step = max_prefills_per_step
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.finished: List[FinishedRequest] = []
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, request: Request):
+        if not request.prompt:
+            raise ValueError(f"request {request.rid}: empty prompt")
+        if len(request.prompt) > self.s_max - 1:
+            raise ValueError(
+                f"request {request.rid}: prompt {len(request.prompt)} "
+                f"does not fit s_max={self.s_max} (need prompt <= s_max-1)")
+        self.queue.append(request)
+
+    # -- admission ----------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admissions(self) -> List[Tuple[int, Request]]:
+        """Pick (slot, request) pairs to prefill this step: FIFO order, at
+        most ``max_prefills_per_step`` (so one queue burst cannot starve
+        in-flight decodes — prefill interleaves with decode)."""
+        out = []
+        for slot in self.free_slots()[:self.max_prefills_per_step]:
+            if not self.queue:
+                break
+            out.append((slot, self.queue.popleft()))
+        return out
+
+    def start(self, slot: int, request: Request, first_token: int) -> bool:
+        """Mark `slot` active after its prefill sampled `first_token`.
+        Returns True if the request retired immediately."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        self.slots[slot] = _Slot(request=request, pos=len(request.prompt),
+                                 tokens=[first_token])
+        return self._maybe_retire(slot)
+
+    # -- decode bookkeeping -------------------------------------------------
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def observe(self, slot: int, token: int) -> bool:
+        """Record one decoded token for an active slot.  Returns True if the
+        request retired (slot is freed)."""
+        st = self.slots[slot]
+        assert st is not None, f"slot {slot} inactive"
+        st.pos += 1
+        st.tokens.append(token)
+        return self._maybe_retire(slot)
+
+    def _maybe_retire(self, slot: int) -> bool:
+        st = self.slots[slot]
+        reason = None
+        if self.eos_id is not None and st.tokens[-1] == self.eos_id:
+            reason = "eos"
+        elif len(st.tokens) >= st.request.max_new_tokens:
+            reason = "length"
+        elif st.pos + 1 >= self.s_max:
+            # the NEXT decode would write K/V past the last cache slot
+            reason = "cache_full"
+        if reason is None:
+            return False
+        self.finished.append(FinishedRequest(
+            rid=st.request.rid, prompt=list(st.request.prompt),
+            tokens=list(st.tokens), finish_reason=reason))
+        self.slots[slot] = None
+        return True
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+
+# ---------------------------------------------------------------------------
+# device-side engine
+# ---------------------------------------------------------------------------
+
+def _bucket(n: int, lo: int = 16) -> int:
+    """Round the prompt length up to a power-of-two bucket, bounding jit
+    recompiles to O(log s_max) prefill shapes."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ContinuousServingEngine:
+    """Drives ``Scheduler`` against the jitted ragged-cache steps.
+
+    One ``step()`` = up to ``max_prefills_per_step`` prefills (admitting new
+    requests into freed slots) + one batched decode of every in-flight slot.
+    """
+
+    def __init__(self, cfg, params, *, batch_slots: int, s_max: int,
+                 pcfg=None, mesh=None, eos_id: Optional[int] = None,
+                 rng_seed: int = 0, max_prefills_per_step: int = 1,
+                 prefill_bucket_min: int = 16):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import ParallelConfig
+        from repro.parallel import compat
+        from repro.serving import engine as engine_mod
+
+        if cfg.encoder_layers or cfg.family == "vlm":
+            raise NotImplementedError(
+                "continuous batching currently targets decoder-only token "
+                "models (enc-dec / VLM requests carry per-request frontend "
+                "state the slot pool does not manage yet)")
+
+        self._jnp, self._np = jnp, np
+        self.cfg = cfg
+        self.params = params
+        self.batch_slots = batch_slots
+        self.s_max = s_max
+        self.prefill_bucket_min = prefill_bucket_min
+        # Recurrent sub-blocks (mamba/rwkv) consume every input token into
+        # their state regardless of position masking, so right-padding the
+        # prompt would corrupt the state the decode steps start from.  Those
+        # families prefill at EXACT length (one jit compile per distinct
+        # prompt length) instead of power-of-two buckets.
+        from repro.models import transformer as _tfm
+        self._exact_prefill = any(
+            sub in ("mamba", "rwkv_tmix", "rwkv_cmix")
+            for kind in _tfm.effective_kinds(cfg)
+            for sub in _tfm.subblocks_of(kind))
+        pcfg = pcfg if pcfg is not None else ParallelConfig()
+        self.scheduler = Scheduler(batch_slots, s_max, eos_id=eos_id,
+                                   max_prefills_per_step=max_prefills_per_step)
+
+        steps = engine_mod.build_continuous_steps(
+            cfg, pcfg, batch_slots=batch_slots, rng_seed=rng_seed)
+        self.caches, cache_specs = engine_mod.build_caches(
+            cfg, batch_slots, s_max, pcfg, for_decode=False, ragged=True)
+
+        if mesh is not None and pcfg.world > 1:
+            vs, ps = steps["vec_spec"], steps["pspecs"]
+            scalar = P()
+            prefill = compat.shard_map(
+                steps["prefill"], mesh,
+                (ps, cache_specs, scalar, scalar, scalar, scalar, scalar,
+                 scalar, scalar),
+                (cache_specs, scalar))
+            decode = compat.shard_map(
+                steps["decode"], mesh,
+                (ps, cache_specs, vs, vs, vs, vs, vs, vs, vs),
+                (cache_specs, vs))
+            decode_greedy = compat.shard_map(
+                steps["decode_greedy"], mesh,
+                (ps, cache_specs, vs, vs, vs), (cache_specs, vs))
+            self._mesh_ctx = lambda: compat.set_mesh(mesh)
+        else:
+            prefill, decode = steps["prefill"], steps["decode"]
+            decode_greedy = steps["decode_greedy"]
+            import contextlib
+            self._mesh_ctx = contextlib.nullcontext
+        self._prefill = jax.jit(prefill, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
+
+        # host-side per-slot vectors fed to the decode step
+        z = lambda dt, fill=0: np.full((batch_slots,), fill, dt)
+        self._tokens = z(np.int32)
+        self._pos = z(np.int32)
+        self._active = z(bool, False)
+        self._temp = z(np.float32, 0.0)
+        self._top_k = z(np.int32)
+        self._top_p = z(np.float32, 1.0)
+        self._seeds = z(np.int32)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, request: Request):
+        self.scheduler.submit(request)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration.  Returns (rid, token) events emitted."""
+        jnp, np = self._jnp, self._np
+        events: List[Tuple[int, int]] = []
+
+        with self._mesh_ctx():
+            for slot, req in self.scheduler.admissions():
+                tok = self._run_prefill(slot, req)
+                events.append((req.rid, tok))
+                if not self.scheduler.start(slot, req, tok):
+                    sp = req.sampling
+                    self._tokens[slot] = tok
+                    self._pos[slot] = len(req.prompt)
+                    self._active[slot] = True
+                    self._temp[slot] = sp.temperature
+                    self._top_k[slot] = sp.top_k
+                    self._top_p[slot] = sp.top_p
+                    self._seeds[slot] = sp.seed
+
+            live = self.scheduler.active_slots()
+            if live:
+                from repro.serving.sampler import GREEDY_EPS
+                if all(self._temp[s] <= GREEDY_EPS for s in live):
+                    # hot default: every in-flight request decodes greedily
+                    self.caches, toks = self._decode_greedy(
+                        self.params, self.caches,
+                        jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                        jnp.asarray(self._active))
+                else:
+                    self.caches, toks = self._decode(
+                        self.params, self.caches,
+                        jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                        jnp.asarray(self._active), jnp.asarray(self._temp),
+                        jnp.asarray(self._top_k), jnp.asarray(self._top_p),
+                        jnp.asarray(self._seeds))
+                toks = np.asarray(toks)
+                for slot in live:
+                    tok = int(toks[slot])
+                    rid = self.scheduler.slots[slot].request.rid
+                    events.append((rid, tok))
+                    if self.scheduler.observe(slot, tok):
+                        self._active[slot] = False
+                    else:
+                        self._tokens[slot] = tok
+                        self._pos[slot] += 1
+        return events
+
+    def run(self) -> Dict[int, FinishedRequest]:
+        """Drain the queue completely; returns rid -> FinishedRequest."""
+        while self.has_work():
+            self.step()
+        return {f.rid: f for f in self.scheduler.finished}
+
+    # -- internals ----------------------------------------------------------
+    def _run_prefill(self, slot: int, req: Request) -> int:
+        jnp, np = self._jnp, self._np
+        sp = req.sampling
+        length = len(req.prompt)
+        lb = length if self._exact_prefill else \
+            _bucket(length, self.prefill_bucket_min)
+        toks = np.zeros((1, lb), np.int32)
+        toks[0, :length] = req.prompt
+        self.caches, tok = self._prefill(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(length, jnp.int32), jnp.asarray(slot, jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray([sp.seed], jnp.int32))
+        return int(tok[0])
+
+
+# ---------------------------------------------------------------------------
+# synthetic traffic (benchmarks)
+# ---------------------------------------------------------------------------
+
+def poisson_trace(n_requests: int, rate: float, seed: int, *,
+                  prompt_lens=(8, 96), max_new=(4, 48),
+                  vocab: int = 1024, sampling: Optional[Callable[[int],
+                                                     SamplingParams]] = None):
+    """Synthetic Poisson arrival trace: exponential inter-arrival times at
+    `rate` req/s, uniform prompt lengths and generation budgets."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        lp = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        out.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, size=lp).tolist(),
+            max_new_tokens=int(rng.integers(max_new[0], max_new[1] + 1)),
+            sampling=sampling(rid) if sampling else SamplingParams(),
+            arrival=t))
+    return out
+
+
+def serve_trace(engine: "ContinuousServingEngine", trace: List[Request],
+                *, now: Optional[Callable[[], float]] = None):
+    """Replay an arrival trace against a live engine, recording per-token
+    wall-clock timestamps.  Returns (finished, per-request token times)."""
+    clock = now or time.monotonic
+    t0 = clock()
+    pending = sorted(trace, key=lambda r: r.arrival)
+    tok_times: Dict[int, List[float]] = {r.rid: [] for r in trace}
+    i = 0
+    while i < len(pending) or engine.has_work():
+        t = clock() - t0
+        while i < len(pending) and pending[i].arrival <= t:
+            engine.submit(pending[i])
+            i += 1
+        if not engine.has_work():
+            # idle: sleep until the next arrival (keeps TTFT honest)
+            dt = pending[i].arrival - (clock() - t0)
+            if dt > 0:
+                time.sleep(dt)
+            continue
+        for rid, _tok in engine.step():
+            tok_times[rid].append(clock() - t0)
+    finished = {f.rid: f for f in engine.scheduler.finished}
+    return finished, tok_times

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.parallel import compat
 from repro.parallel import tp as tpmod
 from repro.training import optimizer as opt
 from repro.training.checkpoint import CheckpointManager
@@ -43,7 +44,7 @@ class Trainer:
         step_fn, in_specs, _ = tpmod.build_train_step(
             cfg, mesh, pcfg, tcfg, zero1=zero1, fsdp=fsdp)
         self.in_specs = in_specs
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
         self.ckpt = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints) \
             if ckpt_dir else None
@@ -58,12 +59,12 @@ class Trainer:
             fsdp=self.fsdp)
         if self.zero1:
             env = tpmod.make_axis_env(self.pcfg)
-            seed_fn = jax.shard_map(
+            seed_fn = compat.shard_map(
                 lambda p, s: opt.zero1_seed_master(p, s, env),
-                mesh=self.mesh,
-                in_specs=(self.in_specs[0], self.in_specs[1]),
-                out_specs=self.in_specs[1], check_vma=False)
-            with jax.set_mesh(self.mesh):
+                self.mesh,
+                (self.in_specs[0], self.in_specs[1]),
+                self.in_specs[1])
+            with compat.set_mesh(self.mesh):
                 opt_state = jax.jit(seed_fn)(params, opt_state)
         return TrainerState(0, params, opt_state)
 
@@ -81,7 +82,7 @@ class Trainer:
             on_metrics: Optional[Callable[[int, Dict], None]] = None
             ) -> TrainerState:
         tc = self.tcfg
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             for local in range(steps):
                 step = state.step
                 batch = {k: jnp.asarray(v)

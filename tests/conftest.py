@@ -1,8 +1,18 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
-1 device; multi-device tests spawn subprocesses or use their own module
-(tests/test_tp_equivalence.py sets the flag before importing jax, so run it
-in its own process: pytest handles this because it is imported first only
-when collected — we guard with an env check)."""
+"""Shared fixtures and test tiering.
+
+Tiers (markers registered here AND in pyproject.toml so either entry point
+works):
+
+  fast tier   PYTHONPATH=src python -m pytest -m "not slow" -q
+              single-process tests only; a few minutes on one CPU.  This is
+              the canonical pre-merge check — scripts/ci.sh runs exactly it.
+  full tier   PYTHONPATH=src python -m pytest -q
+              adds the `slow` suites: multi-device subprocess groups
+              (tests/test_distributed.py) that spawn 4 fake XLA devices.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches see 1 device; multi-device
+tests spawn subprocesses (tests/distributed_impl.py sets the flag before
+importing jax)."""
 
 import os
 import sys
@@ -11,6 +21,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    # defensive re-registration: keeps `-m "not slow"` working even when
+    # pytest is invoked from a cwd where pyproject.toml is not picked up
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy multi-device / subprocess tests, excluded from the "
+        "fast tier (-m 'not slow')")
 
 
 @pytest.fixture(scope="session")

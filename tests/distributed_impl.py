@@ -19,13 +19,13 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import REGISTRY, ParallelConfig, ResidualMode, TrainConfig
+from repro.parallel import compat
 from repro.models import transformer as tfm
 from repro.parallel import sharding, tp as tpmod
 from repro.parallel.collectives import AxisEnv, NULL_ENV
 from repro.training import optimizer as opt
 
-MESH = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+MESH = compat.make_mesh((2, 2), ("data", "model"))
 OK = True
 
 
@@ -75,7 +75,7 @@ def tp_equivalence():
         loss_ref, _ = tpmod.lm_loss(cfg, params, batch, NULL_ENV, tcfg, True)
         step_fn, in_specs, _ = tpmod.build_train_step(cfg, MESH, pcfg, tcfg)
         state = opt.adamw_init(params)
-        with jax.set_mesh(MESH):
+        with compat.set_mesh(MESH):
             _, _, m = jax.jit(step_fn)(params, state, batch,
                                        jnp.zeros((), jnp.int32))
         dl = abs(float(m["loss"]) - float(loss_ref))
@@ -93,7 +93,7 @@ def fsdp_equivalence():
         p1, s1, _ = tpmod.init_train_state(cfg, pcfg, jax.random.key(0),
                                            fsdp=True)
         f1, *_ = tpmod.build_train_step(cfg, MESH, pcfg, tcfg, fsdp=True)
-        with jax.set_mesh(MESH):
+        with compat.set_mesh(MESH):
             a = jax.jit(f0)(p0, s0, batch, jnp.zeros((), jnp.int32))
             b = jax.jit(f1)(p1, s1, batch, jnp.zeros((), jnp.int32))
         dl = abs(float(a[2]["loss"]) - float(b[2]["loss"]))
@@ -114,10 +114,9 @@ def zero1_equivalence():
                                        zero1=True)
     f1, in1, _ = tpmod.build_train_step(cfg, MESH, pcfg, tcfg, zero1=True)
     env = tpmod.make_axis_env(pcfg)
-    seed = jax.shard_map(lambda p, s: opt.zero1_seed_master(p, s, env),
-                         mesh=MESH, in_specs=(in1[0], in1[1]),
-                         out_specs=in1[1], check_vma=False)
-    with jax.set_mesh(MESH):
+    seed = compat.shard_map(lambda p, s: opt.zero1_seed_master(p, s, env),
+                            MESH, (in1[0], in1[1]), in1[1])
+    with compat.set_mesh(MESH):
         s1 = jax.jit(seed)(p1, s1)
         a = jax.jit(f0)(p0, s0, batch, jnp.zeros((), jnp.int32))
         b = jax.jit(f1)(p1, s1, batch, jnp.zeros((), jnp.int32))
@@ -136,7 +135,7 @@ def sp_equivalence():
     p, s, _ = tpmod.init_train_state(cfg, pcfg0, jax.random.key(0))
     f0, *_ = tpmod.build_train_step(cfg, MESH, pcfg0, tcfg)
     f1, *_ = tpmod.build_train_step(cfg, MESH, pcfg1, tcfg)
-    with jax.set_mesh(MESH):
+    with compat.set_mesh(MESH):
         a = jax.jit(f0)(p, s, batch, jnp.zeros((), jnp.int32))
         b = jax.jit(f1)(jax.tree.map(jnp.copy, p), opt.adamw_init(p), batch,
                         jnp.zeros((), jnp.int32))
@@ -147,8 +146,7 @@ def sp_equivalence():
 def padded_heads():
     """tp > n_kv (replication) and MHA padding: sharded == single device."""
     pcfg = ParallelConfig(tp=4, dp=1)
-    mesh4 = jax.make_mesh((1, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh4 = compat.make_mesh((1, 4), ("data", "model"))
     tcfg = TrainConfig(grad_clip=1e9, warmup_steps=1, total_steps=10)
     # llava reduced: n_kv=1 < tp=4 -> replication; whisper: MHA padding
     for arch in ["llava-next-mistral-7b", "whisper-small"]:
@@ -161,7 +159,7 @@ def padded_heads():
         loss_pad, _ = tpmod.lm_loss(cfg, prepared, batch, NULL_ENV, tcfg,
                                     True)
         step_fn, *_ = tpmod.build_train_step(cfg, mesh4, pcfg, tcfg)
-        with jax.set_mesh(mesh4):
+        with compat.set_mesh(mesh4):
             _, _, m = jax.jit(step_fn)(prepared, opt.adamw_init(prepared),
                                        batch, jnp.zeros((), jnp.int32))
         d1 = abs(float(loss_pad) - float(loss_ref))
@@ -205,11 +203,10 @@ def flash_decode_seq_sharded():
         # No: build caches OUTSIDE; here we only run the model.
         return None
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda pr, tk, cs: _seqshard_body(cfg, env, pr, tk, cs, s0, b),
-        mesh=MESH, in_specs=(pspecs, P(), specs2),
-        out_specs=P(), check_vma=False)
-    with jax.set_mesh(MESH):
+        MESH, (pspecs, P(), specs2), P())
+    with compat.set_mesh(MESH):
         h_sh = jax.jit(fn)(params, tokens, caches2)
     d = float(jnp.max(jnp.abs(h_ref - h_sh)))
     check(f"flash_decode_seq_sharded d={d:.2e}", d < 1e-3)
@@ -228,8 +225,7 @@ def _seqshard_body(cfg, env, params, tokens, caches, s0, b):
 def pipeline_parity():
     """2-stage GPipe over 'pod' == single-stage stack, standard + ladder."""
     from repro.parallel import pp
-    mesh_pp = jax.make_mesh((2, 2), ("pod", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_pp = compat.make_mesh((2, 2), ("pod", "model"))
     d, n_groups, bsz, s = 16, 4, 2, 8
     key = jax.random.key(0)
     w1 = jax.random.normal(key, (n_groups, d, 2 * d)) * 0.2
@@ -257,11 +253,11 @@ def pipeline_parity():
             return y
 
         xm = x.reshape(2, bsz, s, d)  # 2 microbatches
-        fn = jax.shard_map(run_pp, mesh=mesh_pp,
-                           in_specs=(dict(sub0=dict(w_in=P("pod"),
-                                                    w_out=P("pod"))), P()),
-                           out_specs=P(), check_vma=False)
-        with jax.set_mesh(mesh_pp):
+        fn = compat.shard_map(run_pp, mesh_pp,
+                              (dict(sub0=dict(w_in=P("pod"),
+                                              w_out=P("pod"))), P()),
+                              P())
+        with compat.set_mesh(mesh_pp):
             got = jax.jit(fn)(params, xm).reshape(2 * bsz, s, d)
         d_ = float(jnp.max(jnp.abs(got - ref)))
         check(f"pipeline_parity {mode.value} d={d_:.2e}", d_ < 1e-4)
@@ -271,17 +267,15 @@ def grad_compression():
     """EF-int8 pmean over a 2-axis: error feedback keeps long-run mean
     unbiased and single-step error bounded by the quantization step."""
     from repro.parallel import compression
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((4,), ("pod",))
     g = jax.random.normal(jax.random.key(0), (4, 64)) * 0.1
 
     def body(g):
         red, err = compression.compressed_pmean({"w": g}, "pod")
         return red["w"], err["w"]
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
-                       out_specs=(P("pod"), P("pod")), check_vma=False)
-    with jax.set_mesh(mesh):
+    fn = compat.shard_map(body, mesh, P("pod"), (P("pod"), P("pod")))
+    with compat.set_mesh(mesh):
         red, err = jax.jit(fn)(g)
     true_mean = jnp.broadcast_to(jnp.mean(g.reshape(4, 1, 64), axis=0),
                                  (4, 1, 64)).reshape(4, 64)
@@ -319,20 +313,57 @@ def q8_weight_gather():
         h, _, _ = tfm.forward(cfg, p, tokens, env, section_gathers=gathers)
         return h
 
-    fn = jax.shard_map(body, mesh=MESH, in_specs=(pspecs, P("data")),
-                       out_specs=P("data"), check_vma=False)
-    with jax.set_mesh(MESH):
+    fn = compat.shard_map(body, MESH, (pspecs, P("data")), P("data"))
+    with compat.set_mesh(MESH):
         h_q8 = jax.jit(fn)(pq8, tokens)
     rel = float(jnp.max(jnp.abs(h_q8 - h_ref)) /
                 (jnp.max(jnp.abs(h_ref)) + 1e-9))
     check(f"q8_weight_gather rel_err={rel:.3f}", rel < 0.08)
 
 
+def serve_continuous_batching():
+    """Continuous-batching engine on a TP=2 x DP=2 mesh emits bit-identical
+    tokens to isolated TP=1 decoding — ragged caches, per-slot prefill
+    inserts into a data-sharded slot pool, per-request sampling."""
+    from repro.serving.scheduler import (ContinuousServingEngine, Request,
+                                         SamplingParams)
+    cfg = _cfg("stablelm-3b", "ladder", d_model=64, n_heads=4, d_ff=128,
+               vocab_size=256)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, lp).tolist(),
+                    max_new_tokens=g, sampling=s)
+            for i, (lp, g, s) in enumerate([
+                (5, 6, SamplingParams()),
+                (11, 4, SamplingParams(temperature=0.7, top_k=12, seed=3)),
+                (19, 5, SamplingParams(temperature=1.0, top_p=0.9, seed=8))])]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+
+    iso = {}
+    for r in reqs:
+        e = ContinuousServingEngine(cfg, params, batch_slots=1, s_max=48)
+        e.submit(clone(r))
+        iso[r.rid] = e.run()[r.rid].tokens
+
+    pcfg = ParallelConfig(tp=2, dp=2)
+    p2, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
+    eng = ContinuousServingEngine(cfg, p2, batch_slots=4, s_max=48,
+                                  pcfg=pcfg, mesh=MESH)
+    for r in reqs:
+        eng.submit(clone(r))
+    cont = eng.run()
+    for rid, toks in iso.items():
+        check(f"serve_cb tp2dp2 rid={rid}", toks == cont[rid].tokens)
+
+
 CHECKS = dict(tp=tp_equivalence, fsdp=fsdp_equivalence,
               zero1=zero1_equivalence, sp=sp_equivalence,
               padded=padded_heads, flashdec=flash_decode_seq_sharded,
               pp=pipeline_parity, compress=grad_compression,
-              q8=q8_weight_gather)
+              q8=q8_weight_gather, serve_cb=serve_continuous_batching)
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"

@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess suites; full tier only
+
 IMPL = os.path.join(os.path.dirname(__file__), "distributed_impl.py")
 
 
@@ -26,6 +28,7 @@ def _run(which: str):
 
 
 @pytest.mark.parametrize("which", ["tp", "fsdp", "zero1", "sp", "padded",
-                                   "flashdec", "pp", "compress", "q8"])
+                                   "flashdec", "pp", "compress", "q8",
+                                   "serve_cb"])
 def test_distributed(which):
     _run(which)

@@ -1,9 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+hypothesis is an OPTIONAL dev dependency (requirements-dev.txt): when it is
+absent this module must SKIP, not error the whole collection — tier-1 runs
+on the bare runtime image."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import ResidualMode
 from repro.core import residual as topo
