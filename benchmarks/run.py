@@ -14,7 +14,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.configs import REGISTRY, ResidualMode, get_config  # noqa: E402
+from repro.configs import REGISTRY  # noqa: E402
 from repro.core import schedule as sched                       # noqa: E402
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"

@@ -1,14 +1,23 @@
-"""Engine-level serving benchmark: Ladder vs Standard residual under a
-synthetic Poisson arrival trace through the continuous-batching engine.
+"""Engine-level serving benchmark: Ladder vs Standard residual under
+synthetic traffic through the continuous-batching engines.
 
 Unlike benchmarks/run.py (per-step analytical timeline), this measures the
-SERVING system end-to-end on real executed steps: request admission, ragged
-prefill/decode interleaving, slot reuse — and reports tokens/sec plus
-p50/p99 per-token latency (time between consecutive tokens of a request,
-first token measured from arrival, i.e. TTFT).  On CPU at TP=1 the two
-residual modes execute the same collectives (none), so the comparison is an
-engine-overhead / correctness harness here and becomes a communication-
-overlap measurement on a real TP mesh.
+SERVING system end-to-end on real executed steps: request admission, paged
+(or ragged) prefill/decode interleaving, block reuse — and reports
+tokens/sec plus p50/p99 per-token latency (time between consecutive tokens
+of a request, first token measured from arrival, i.e. TTFT).  Two traffic
+scenarios per residual mode:
+
+* ``poisson``        — independent prompts, Poisson arrivals (PR-1 shape).
+* ``shared_prefix``  — the same Poisson arrivals behind one shared system
+  prompt: the regime the paged KV cache targets.  Rows add the paged
+  engine's prefix-hit rate and block utilization so regressions in block
+  economy are as visible as throughput regressions.
+
+On CPU at TP=1 the residual modes execute the same collectives (none), so
+the comparison is an engine-overhead / correctness harness here and becomes
+a communication-overlap measurement on a real TP mesh.
+``scripts/check_bench.py`` gates CI on the JSON this writes.
 
     PYTHONPATH=src python benchmarks/serve_bench.py \
         --requests 12 --rate 50 --out results/serve_bench.json
@@ -37,30 +46,46 @@ def _percentiles(xs, ps=(50, 99)):
     return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
-def bench_mode(mode: str, args) -> dict:
+def _make_engine(cfg, params, args, s_max):
+    if args.engine == "ragged":
+        return sched.ContinuousServingEngine(
+            cfg, params, batch_slots=args.slots, s_max=s_max,
+            max_prefills_per_step=1)
+    return sched.PagedServingEngine(
+        cfg, params, batch_slots=args.slots, s_max=s_max,
+        block_size=args.block_size,
+        max_prefill_tokens=args.prefill_budget)
+
+
+def bench_mode(mode: str, scenario: str, args) -> dict:
     cfg = REGISTRY[args.arch].reduced(
         n_layers=args.layers, d_model=args.d_model, n_heads=4,
         d_ff=2 * args.d_model, vocab_size=1024,
     ).replace(residual_mode=ResidualMode(mode))
     params = tfm.init_params(cfg, jax.random.key(0))
 
-    s_max = args.max_prompt + args.max_new + 1
+    shared = []
+    if scenario == "shared_prefix":
+        rng = np.random.default_rng(args.seed + 1)
+        shared = rng.integers(0, cfg.vocab_size, args.shared_len).tolist()
+    s_max = len(shared) + args.max_prompt + args.max_new + 1
     trace = sched.poisson_trace(
         args.requests, args.rate, seed=args.seed,
         prompt_lens=(4, args.max_prompt), max_new=(2, args.max_new),
         vocab=cfg.vocab_size,
         sampling=lambda rid: sched.SamplingParams(
             temperature=args.temperature, top_k=40, top_p=0.95, seed=rid))
+    for r in trace:
+        r.prompt = shared + r.prompt
 
-    engine = sched.ContinuousServingEngine(
-        cfg, params, batch_slots=args.slots, s_max=s_max,
-        max_prefills_per_step=1)
+    engine = _make_engine(cfg, params, args, s_max)
 
     # warmup: compile EVERY prefill bucket + the decode graph outside the
     # timed run (jit caches are shared through the process-wide tracing cache
     # only per-callable, so warm the engine's own jitted fns)
+    longest = max(len(r.prompt) for r in trace)
     lengths, b = [], 16
-    while b < args.max_prompt:
+    while b < longest:
         lengths.append(b)
         b *= 2
     lengths.append(b)
@@ -70,6 +95,8 @@ def bench_mode(mode: str, args) -> dict:
             sampling=sched.SamplingParams(temperature=args.temperature)))
     engine.run()
     engine.scheduler.finished.clear()
+    if hasattr(engine, "reset_stats"):
+        engine.reset_stats()
 
     t0 = time.monotonic()
     finished, tok_times = sched.serve_trace(engine, trace)
@@ -85,13 +112,23 @@ def bench_mode(mode: str, args) -> dict:
     n_tok = sum(len(f.tokens) for f in finished.values())
 
     row = dict(
-        mode=mode, arch=args.arch, requests=len(trace),
-        completed=len(finished), slots=args.slots, tokens=n_tok,
+        mode=mode, scenario=scenario, engine=args.engine, arch=args.arch,
+        requests=len(trace), completed=len(finished), slots=args.slots,
+        tokens=n_tok,
         wall_s=round(wall, 4),
         tokens_per_s=round(n_tok / max(wall, 1e-9), 2),
         per_token_latency_ms=_percentiles([x * 1e3 for x in itl]),
         ttft_ms=_percentiles([x * 1e3 for x in ttft]),
     )
+    if args.engine == "paged":
+        st = engine.stats()
+        row.update(
+            prefix_hit_rate=round(st["prefix_hit_rate"], 4),
+            block_util_mean=round(st["block_util_mean"], 4),
+            block_util_peak=round(st["block_util_peak"], 4),
+            block_allocs=st["total_block_allocs"],
+            deferred_admissions=st["deferred_admissions"],
+        )
     assert len(finished) == len(trace), "requests dropped"
     return row
 
@@ -99,22 +136,31 @@ def bench_mode(mode: str, args) -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--engine", default="paged", choices=["paged", "ragged"])
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--rate", type=float, default=100.0,
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--shared-len", type=int, default=32,
+                    help="system-prompt length for the shared_prefix "
+                         "scenario")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=128)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--modes", default="ladder,standard")
+    ap.add_argument("--scenarios", default="poisson,shared_prefix")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
                                          / "results" / "serve_bench.json"))
     args = ap.parse_args()
 
-    rows = [bench_mode(m.strip(), args) for m in args.modes.split(",")]
+    rows = [bench_mode(m.strip(), sc.strip(), args)
+            for sc in args.scenarios.split(",")
+            for m in args.modes.split(",")]
     record = dict(bench="serve_bench", config=vars(args), rows=rows)
 
     out = Path(args.out)
@@ -122,11 +168,14 @@ def main():
     out.write_text(json.dumps(record, indent=1))
     print(json.dumps(record, indent=1))
     for r in rows:
-        print(f"serve_bench/{r['mode']},"
+        extra = (f" hit={r['prefix_hit_rate']:.2f} "
+                 f"util={r['block_util_mean']:.2f}"
+                 if "prefix_hit_rate" in r else "")
+        print(f"serve_bench/{r['scenario']}/{r['mode']},"
               f"{1e6 / max(r['tokens_per_s'], 1e-9):.1f},"
               f"tok_per_s={r['tokens_per_s']} "
               f"p50={r['per_token_latency_ms']['p50']:.2f}ms "
-              f"p99={r['per_token_latency_ms']['p99']:.2f}ms")
+              f"p99={r['per_token_latency_ms']['p99']:.2f}ms{extra}")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,6 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import REGISTRY, ResidualMode, TrainConfig
 from repro.models import transformer as tfm

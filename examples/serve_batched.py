@@ -1,11 +1,14 @@
-"""Continuous-batching serving example: variable-length prompts arrive over
-time, are admitted into a fixed slot pool, decode as ONE mixed-age batch, and
-retire independently on length cap — through the public engine API.
+"""Paged-KV serving example: variable-length prompts sharing a system prefix
+arrive over time, are admitted block-by-block into a physical KV pool, decode
+as ONE mixed-age batch, and retire independently — through the public engine
+API (DESIGN.md §Paged KV).
 
 On CPU at TP=1 there is no communication to overlap — the point of this
-example is the END-TO-END serving path (ragged caches, scheduler admission,
-interleaved prefill/decode, per-request sampling).  The modeled TP-8/TP-16
-latencies come from core/schedule.py (printed at the end).
+example is the END-TO-END serving path: hash-chained prefix reuse (every
+request after the first gets its system-prompt K/V for free), chunked
+prefill interleaving with decode, block-granular admission, per-request
+sampling.  The modeled TP-8/TP-16 latencies come from core/schedule.py
+(printed at the end).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -22,7 +25,7 @@ import numpy as np
 from repro.configs import REGISTRY, ResidualMode
 from repro.core import schedule as sched
 from repro.models import transformer as tfm
-from repro.serving.scheduler import (ContinuousServingEngine, Request,
+from repro.serving.scheduler import (PagedServingEngine, Request,
                                      SamplingParams)
 
 
@@ -33,17 +36,21 @@ def main():
     params = tfm.init_params(cfg, jax.random.key(0))
 
     rng = np.random.default_rng(1)
-    engine = ContinuousServingEngine(cfg, params, batch_slots=3, s_max=96)
+    engine = PagedServingEngine(cfg, params, batch_slots=3, s_max=96,
+                                block_size=8, max_prefill_tokens=32)
 
-    # 6 requests, ragged prompts, mixed sampling; more requests than slots so
-    # the queue drains through slot reuse
+    # 6 requests behind ONE shared 32-token system prompt (4 full blocks at
+    # block_size=8): request 0 prefills it once, every later admission hits
+    # the prefix cache and allocates fresh blocks only for its own tail.
+    system = rng.integers(0, cfg.vocab_size, 32).tolist()
     requests = []
     for rid, (lp, gen) in enumerate([(9, 12), (33, 8), (17, 16),
                                      (50, 10), (5, 20), (24, 6)]):
         samp = SamplingParams() if rid % 2 == 0 else \
             SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=rid)
         requests.append(Request(
-            rid=rid, prompt=rng.integers(0, cfg.vocab_size, lp).tolist(),
+            rid=rid,
+            prompt=system + rng.integers(0, cfg.vocab_size, lp).tolist(),
             max_new_tokens=gen, sampling=samp))
 
     # stagger arrivals: two up front, the rest submitted mid-flight
@@ -62,12 +69,21 @@ def main():
 
     finished = {f.rid: f for f in engine.scheduler.finished}
     n_tok = sum(len(f.tokens) for f in finished.values())
+    st = engine.stats()
     print(f"served {len(finished)} ragged requests on 3 slots in {steps} "
           f"engine steps: {n_tok} tokens, {wall:.2f}s "
           f"({n_tok / max(wall, 1e-9):.0f} tok/s on 1 CPU core)")
-    for f in finished.values():
-        kind = "greedy " if f.rid % 2 == 0 else "sampled"
-        print(f"  rid={f.rid} {kind} prompt={len(f.prompt):2d} "
+    print(f"paged KV: prefix_hit_rate={st['prefix_hit_rate']:.2f} "
+          f"({st['prefix_hit_tokens']} of "
+          f"{st['prefix_hit_tokens'] + st['prefill_tokens']} prompt tokens "
+          f"reused), block_util peak={st['block_util_peak']:.2f}")
+    for rid in sorted(finished):
+        f = finished[rid]
+        rs = engine.scheduler.request_stats[rid]
+        kind = "greedy " if rid % 2 == 0 else "sampled"
+        print(f"  rid={rid} {kind} prompt={len(f.prompt):2d} "
+              f"(cached {rs['cached_tokens']:2d}, "
+              f"{rs['fresh_blocks']} fresh blocks) "
               f"-> {len(f.tokens):2d} toks ({f.finish_reason}): "
               f"{f.tokens[:8]}")
 

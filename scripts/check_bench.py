@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Serve-bench regression gate.
+
+Compares a candidate benchmarks/serve_bench.py result against the committed
+baseline in results/serve_bench.json and exits non-zero when throughput or
+tail latency regressed beyond tolerance.  Rows are matched on
+(scenario, engine, mode); a baseline row missing from the candidate is a
+failure (a silently-dropped mode is a regression too).
+
+Checks per row:
+  * tokens_per_s      >= baseline * (1 - --tps-tol)
+  * per-token p99 ms  <= baseline * (1 + --p99-tol)
+
+Default tolerances are deliberately loose (CI machines are noisy and the
+reduced-config bench runs on one CPU): the gate exists to catch the
+engine accidentally serializing, not 5% jitter.
+
+Usage:
+    # compare two files
+    python scripts/check_bench.py --candidate results/serve_bench.tmp.json
+
+    # run a fresh reduced-config bench (same config as the baseline) and
+    # compare it — what the nightly CI job does
+    python scripts/check_bench.py --run
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# baseline config keys replayed to serve_bench.py on --run (apples-to-apples)
+_REPLAY = [
+    "arch", "engine", "requests", "rate", "slots", "max_prompt", "max_new",
+    "shared_len", "block_size", "prefill_budget", "layers", "d_model",
+    "temperature", "seed", "modes", "scenarios",
+]
+
+
+def _key(row):
+    return (row.get("scenario", "poisson"), row.get("engine", "ragged"),
+            row["mode"])
+
+
+def run_bench(baseline: dict, out_path: Path) -> None:
+    cmd = [sys.executable, str(ROOT / "benchmarks" / "serve_bench.py"),
+           "--out", str(out_path)]
+    cfg = baseline.get("config", {})
+    for k in _REPLAY:
+        if k in cfg:
+            cmd += [f"--{k.replace('_', '-')}", str(cfg[k])]
+    print("+", " ".join(cmd))
+    subprocess.run(cmd, check=True, stdout=subprocess.DEVNULL)
+
+
+def compare(baseline: dict, candidate: dict, tps_tol: float,
+            p99_tol: float) -> int:
+    base_rows = {_key(r): r for r in baseline["rows"]}
+    cand_rows = {_key(r): r for r in candidate["rows"]}
+    failures = 0
+    for key, base in sorted(base_rows.items()):
+        cand = cand_rows.get(key)
+        name = "/".join(key)
+        if cand is None:
+            print(f"FAIL {name}: row missing from candidate")
+            failures += 1
+            continue
+        tps_floor = base["tokens_per_s"] * (1.0 - tps_tol)
+        ok_tps = cand["tokens_per_s"] >= tps_floor
+        base_p99 = base["per_token_latency_ms"]["p99"]
+        cand_p99 = cand["per_token_latency_ms"]["p99"]
+        ok_p99 = (base_p99 is None or cand_p99 is None or
+                  cand_p99 <= base_p99 * (1.0 + p99_tol))
+        status = "ok  " if ok_tps and ok_p99 else "FAIL"
+        print(f"{status} {name}: tok/s {cand['tokens_per_s']:.1f} "
+              f"(floor {tps_floor:.1f}), p99 "
+              f"{'-' if cand_p99 is None else f'{cand_p99:.2f}ms'} "
+              f"(ceil {'-' if base_p99 is None else f'{base_p99 * (1 + p99_tol):.2f}ms'})")
+        failures += 0 if ok_tps and ok_p99 else 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=str(ROOT / "results" / "serve_bench.json"))
+    ap.add_argument("--candidate", default=None,
+                    help="candidate result JSON (omit with --run)")
+    ap.add_argument("--run", action="store_true",
+                    help="run a fresh bench with the baseline's config "
+                         "into results/serve_bench.tmp.json and compare it")
+    ap.add_argument("--tps-tol", type=float, default=0.5,
+                    help="max fractional tokens/sec drop (default 0.5)")
+    ap.add_argument("--p99-tol", type=float, default=1.0,
+                    help="max fractional p99 increase (default 1.0 = 2x)")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    if args.run:
+        cand_path = ROOT / "results" / "serve_bench.tmp.json"
+        run_bench(baseline, cand_path)
+    elif args.candidate:
+        cand_path = Path(args.candidate)
+    else:
+        ap.error("need --candidate FILE or --run")
+    candidate = json.loads(Path(cand_path).read_text())
+
+    failures = compare(baseline, candidate, args.tps_tol, args.p99_tol)
+    if failures:
+        print(f"{failures} bench regression(s) vs {args.baseline}")
+    else:
+        print("bench within tolerance of baseline")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

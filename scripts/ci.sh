@@ -5,10 +5,24 @@
 #
 #   scripts/ci.sh            # fast tier (pre-merge gate)
 #   scripts/ci.sh --full     # fast + slow (everything)
+#   scripts/ci.sh --lint     # ruff lint + format ratchet (no tests)
 #
 # Extra args are forwarded to pytest, e.g. `scripts/ci.sh -k scheduler`.
+# .github/workflows/ci.yml runs the fast tier on every push/PR (two jax
+# versions), --lint alongside it, and --full + the serve-bench regression
+# gate (scripts/check_bench.py) nightly.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--lint" ]]; then
+    shift
+    python -m ruff check .
+    # Format ratchet: files added since the CI pipeline landed are held to
+    # `ruff format`; extend this list as older files get reformatted.
+    python -m ruff format --check \
+        scripts/check_bench.py tests/test_paged.py tests/test_ci_pipeline.py
+    exit 0
+fi
 
 MARK=(-m "not slow")
 if [[ "${1:-}" == "--full" ]]; then

@@ -20,7 +20,6 @@ onto the dry-run hardware.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, ResidualMode

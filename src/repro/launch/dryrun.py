@@ -34,9 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import (ALL_SHAPES, ASSIGNED_ARCHS, REGISTRY,
-                           SHAPES_BY_NAME, ResidualMode, TrainConfig,
-                           get_config)
+from repro.configs import (ALL_SHAPES, ASSIGNED_ARCHS, SHAPES_BY_NAME,
+                           TrainConfig, get_config)
 from repro.launch import roofline as rl
 from repro.parallel import compat
 from repro.launch.mesh import make_production_mesh
@@ -47,7 +46,6 @@ from repro.models.model import count_params, model_flops
 from repro.parallel import sharding
 from repro.parallel import tp as tpmod
 from repro.serving import engine
-from repro.training import optimizer as opt
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
 

@@ -28,7 +28,6 @@ The CPU backend's ``compiled.cost_analysis()`` counts while-loop bodies ONCE
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

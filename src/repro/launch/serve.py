@@ -1,10 +1,16 @@
-"""Serving driver: continuous batching over a fixed slot pool.
+"""Serving driver: continuous batching over paged or ragged KV caches.
 
 Loads (or inits) a model, submits a stream of variable-length synthetic
-requests, and serves them through the continuous-batching engine
+requests, and serves them through a continuous-batching engine
 (serving/scheduler.py): prefill of newly admitted requests interleaves with
 batched decode of in-flight ones, retired slots are refilled from the queue,
 and every request samples with its own temperature / top-k / top-p / seed.
+
+The default engine is the paged-KV path (block-pool caches, block-granular
+admission, chunked prefill, prefix reuse — DESIGN.md §Paged KV); families or
+shardings the paged path does not cover yet fall back to the PR-1 ragged
+engine automatically (``--engine ragged`` forces it; ``--engine paged``
+errors instead of falling back).
 
   PYTHONPATH=src python -m repro.launch.serve --arch ladder-1b \
       --residual ladder --reduced --slots 4 --requests 12 --gen 32
@@ -22,8 +28,20 @@ def main():
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "paged", "ragged"],
+                    help="KV layout: paged block pool (default when "
+                         "supported) or the ragged per-slot oracle")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slot pool size (max concurrent requests)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged engine: physical pool size "
+                         "(0 = slots * ceil(s_max/block_size))")
+    ap.add_argument("--prefill-budget", type=int, default=128,
+                    help="paged engine: max prompt tokens prefilled per "
+                         "engine step (chunked prefill)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64,
                     help="max prompt length (lengths are uniform in "
@@ -67,9 +85,25 @@ def main():
     params, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
 
     s_max = args.prompt_len + args.gen + 1
-    engine = sched.ContinuousServingEngine(
-        cfg, params, batch_slots=args.slots, s_max=s_max, pcfg=pcfg,
-        mesh=mesh)
+    engine = None
+    kind = args.engine
+    if kind != "ragged":
+        try:
+            engine = sched.PagedServingEngine(
+                cfg, params, batch_slots=args.slots, s_max=s_max, pcfg=pcfg,
+                mesh=mesh, block_size=args.block_size,
+                num_blocks=args.num_blocks or None,
+                max_prefill_tokens=args.prefill_budget)
+            kind = "paged"
+        except NotImplementedError as e:
+            if args.engine == "paged":
+                raise
+            print(f"[serve] paged engine unavailable ({e}); using ragged")
+    if engine is None:
+        engine = sched.ContinuousServingEngine(
+            cfg, params, batch_slots=args.slots, s_max=s_max, pcfg=pcfg,
+            mesh=mesh)
+        kind = "ragged"
 
     rng = np.random.default_rng(1)
     sampling = lambda rid: sched.SamplingParams(
@@ -102,7 +136,14 @@ def main():
     n_tok = sum(len(f.tokens) for f in finished.values())
     print(f"[serve] {len(finished)}/{len(trace)} requests, {n_tok} tokens "
           f"in {wall:.2f}s ({n_tok / max(wall, 1e-9):.1f} tok/s) "
-          f"slots={args.slots} tp={args.tp} dp={args.dp}")
+          f"engine={kind} slots={args.slots} tp={args.tp} dp={args.dp}")
+    if kind == "paged":
+        st = engine.stats()
+        print(f"[serve] paged: prefix_hit_rate={st['prefix_hit_rate']:.2f} "
+              f"block_util mean={st['block_util_mean']:.2f} "
+              f"peak={st['block_util_peak']:.2f} "
+              f"allocs={st['total_block_allocs']} "
+              f"deferred={st['deferred_admissions']}")
     for f in list(finished.values())[:4]:
         print(f"[serve] rid={f.rid} prompt={len(f.prompt)} "
               f"-> {len(f.tokens)} toks ({f.finish_reason}): "

@@ -7,14 +7,12 @@ against, exactly like weak-type-correct tracing inputs.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
-from repro.models import transformer as tfm
-from repro.parallel import sharding
 from repro.serving import engine
 
 

@@ -40,7 +40,6 @@ def main():
         os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
             f" --xla_force_host_platform_device_count={args.devices}"
 
-    import jax
     from repro.configs import TrainConfig, ParallelConfig, get_config
     from repro.launch.mesh import make_mesh_for
     from repro.training.data import SyntheticLM

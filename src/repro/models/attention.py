@@ -14,7 +14,6 @@ implements the same algorithm with explicit VMEM tiling for TPU.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -22,6 +21,9 @@ import jax.numpy as jnp
 
 from repro.models.layers import apply_rope, dense_init
 from repro.parallel.collectives import AxisEnv
+# kv_cache is a leaf module (no model imports): safe at module level, and
+# attention() dispatches on the cache type every call
+from repro.serving.kv_cache import (PagedKVCache, paged_update, paged_view)
 
 NEG_INF = -1e30
 
@@ -186,7 +188,7 @@ def _project_qkv(params, x, head_dim):
 def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
               rope_theta: float, window: int = 0, softcap: float = 0.0,
               use_pallas: bool = False, cache: Optional[dict] = None,
-              kv_override=None):
+              kv_override=None, block_tables=None):
     """Causal self-attention (or cross-attention via kv_override).
 
     Returns (partial_out, new_cache).  partial_out requires a psum over the
@@ -194,6 +196,8 @@ def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
 
     cache: None for train; a KV-cache dict for prefill (length==0) or decode.
     kv_override: (k, v, kv_mask) precomputed keys/values for cross-attention.
+    block_tables: (B, max_blocks) physical block ids — required when `cache`
+    is a PagedKVCache; logical reads/writes go through the table.
     """
     scale = 1.0 / math.sqrt(head_dim)
     q, k, v = _project_qkv(params, x, head_dim)
@@ -205,6 +209,21 @@ def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
     if kv_override is not None:
         ko, vo, kv_mask = kv_override
         out = _encoder_attention(q * scale, ko, vo, kv_mask, softcap)
+    elif isinstance(cache, PagedKVCache):
+        # Paged path (prefill chunks AND decode): scatter this step's K/V
+        # into the block pool, then attend against the row's gathered
+        # logical view.  One code path for every step shape is what makes
+        # chunked == one-shot == prefix-hit prefills bit-identical — every
+        # query attends over the same view width with the same valid set,
+        # regardless of how the prompt was chunked (DESIGN.md §Paged KV).
+        if window:
+            raise NotImplementedError("paged caches for sliding-window "
+                                      "attention (ring layers)")
+        if block_tables is None:
+            raise ValueError("paged cache requires block_tables")
+        cache = paged_update(cache, k, v, positions, block_tables)
+        out = _cached_attention(q * scale, paged_view(cache, block_tables),
+                                positions, env, softcap=softcap)
     elif cache is None or s > 1:
         # train, or prefill: attention over the fresh K/V via the blocked
         # online-softmax path (prefill additionally writes the cache; the

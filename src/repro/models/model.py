@@ -2,10 +2,8 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import (forward, init_params, logits_shard,

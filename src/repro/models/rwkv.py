@@ -13,7 +13,7 @@ held in VMEM; both are validated against kernels/ref.py.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,8 @@ stack and are closed over (they are scan loop invariants).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +24,8 @@ from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (dense_init, embed_init, init_mlp,
-                                 init_rmsnorm, lm_head_logits, mlp, rmsnorm,
-                                 embed_lookup)
+from repro.models.layers import (embed_init, init_mlp, init_rmsnorm,
+                                 lm_head_logits, mlp, rmsnorm, embed_lookup)
 from repro.parallel.collectives import AxisEnv
 
 VOCAB_ALIGN = 2048  # pad vocab so every TP degree up to 16 divides evenly
@@ -256,6 +255,7 @@ class FwdCtx:
     train: bool = False
     enc_out: Optional[jnp.ndarray] = None
     enc_mask: Optional[jnp.ndarray] = None
+    block_tables: Optional[jnp.ndarray] = None   # paged serving (B, blocks)
 
 
 def _make_subblock_fn(ctx: FwdCtx, sub: str, slot: str, shared_params=None):
@@ -285,7 +285,7 @@ def _make_subblock_fn(ctx: FwdCtx, sub: str, slot: str, shared_params=None):
                 p, h, ctx.positions, env, head_dim=cfg.head_dim,
                 rope_theta=cfg.rope_theta, window=window,
                 softcap=cfg.attn_logit_softcap, use_pallas=pallas,
-                cache=state)
+                cache=state, block_tables=ctx.block_tables)
             return out, new_cache, jnp.zeros((), jnp.float32)
         return fn
 
@@ -518,10 +518,12 @@ def encode(cfg: ModelConfig, params, frames, env: AxisEnv, train=False):
 def forward(cfg: ModelConfig, params, tokens, env: AxisEnv, *,
             positions=None, caches=None, frontend_embeds=None,
             train: bool = False, section_gathers=None,
-            unroll: bool = False):
+            unroll: bool = False, block_tables=None):
     """Decoder forward.  Returns (hidden, new_caches, aux_loss).
 
     caches: list per section of per-group-stacked state pytrees (or None).
+    block_tables: (B, max_blocks) physical block ids when `caches` holds
+    PagedKVCache pools (paged serving).
     """
     enc_out = enc_mask = None
     aux0 = jnp.zeros((), jnp.float32)
@@ -541,7 +543,8 @@ def forward(cfg: ModelConfig, params, tokens, env: AxisEnv, *,
         x = jax.lax.dynamic_slice_in_dim(x, ti * (s // tp), s // tp, axis=1)
 
     ctx = FwdCtx(cfg=cfg, env=env, positions=positions, train=train,
-                 enc_out=enc_out, enc_mask=enc_mask)
+                 enc_out=enc_out, enc_mask=enc_mask,
+                 block_tables=block_tables)
     hidden, new_caches, aux = run_stack(
         ctx, params["sections"], x,
         caches=list(caches) if caches is not None else None,

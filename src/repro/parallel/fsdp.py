@@ -21,7 +21,7 @@ keeping gathered weights alive — the standard FSDP memory/time trade.
 
 from __future__ import annotations
 
-from typing import Any, List, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

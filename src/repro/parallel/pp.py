@@ -21,7 +21,7 @@ overlap across the slowest links.
 
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,6 @@ def pipeline_stack(mode: ResidualMode, fns: Sequence, params_stage,
     m = x_micro.shape[0]
     stage = jax.lax.axis_index(env.pod)
     ticks = m + n_stages - 1
-    subs_per_stage = len(fns) * jax.tree.leaves(params_stage)[0].shape[0]
     perm_fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
     def run_groups(carry_tuple, base_idx):

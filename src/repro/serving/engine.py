@@ -13,17 +13,13 @@ with a psum over 'data') — see models/attention._cached_attention.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import transformer as tfm
 from repro.parallel import sharding
-from repro.parallel.collectives import AxisEnv
 from repro.parallel.tp import make_axis_env
 from repro.serving import kv_cache as kvc
 from repro.serving import sampler
@@ -36,7 +32,9 @@ def _batch_axes(pcfg: ParallelConfig):
 def build_caches(cfg: ModelConfig, batch: int, s_max: int,
                  pcfg: ParallelConfig, *, for_decode: bool,
                  seq_shard_data: bool = False, enc_s: int = 0,
-                 structs_only: bool = False, ragged: bool = False):
+                 structs_only: bool = False, ragged: bool = False,
+                 paged: bool = False, num_blocks: int = 0,
+                 block_size: int = 16):
     """Build (caches, cache_pspecs) as GLOBAL pytrees.
 
     seq_shard_data: shard KV sequence over the data axis (flash decoding) —
@@ -46,12 +44,20 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
     ragged: per-batch-row position tracking (continuous batching) — every
     cache leaf carries the batch on axis 1, so slots can be sliced/reset
     independently (DESIGN.md §Serving).  Incompatible with seq_shard_data.
+    paged: block-pool caches (DESIGN.md §Paged KV) — attention layers get a
+    shared PagedKVCache pool of `num_blocks` x `block_size` token slots
+    instead of per-slot s_max regions; `batch` is ignored for those layers
+    (the block tables map rows to blocks).  Full attention only.
     """
     if ragged and seq_shard_data:
         raise NotImplementedError("ragged + seq-sharded caches")
     if ragged and cfg.encoder_layers:
         raise NotImplementedError("ragged caches for enc-dec models "
                                   "(cross-attention slots are per-utterance)")
+    if paged and (ragged or seq_shard_data):
+        raise NotImplementedError("paged + ragged/seq-sharded caches")
+    if paged and num_blocks < 1:
+        raise ValueError("paged caches need num_blocks >= 1")
     dtype = jnp.dtype(cfg.dtype)
     alloc = kvc.struct_alloc if structs_only else kvc._alloc_default
     plan = tfm.plan_sections(cfg)
@@ -73,7 +79,19 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
         sec_caches, sec_specs = [], []
         for kind in sec.kinds:
             for sub in tfm.subblocks_of(kind):
-                if sub in ("attn", "shared_attn"):
+                if paged and sub not in ("attn", "mlp", "moe", "dense_mlp"):
+                    raise NotImplementedError(
+                        f"paged caches for sub-block {sub!r} (full "
+                        "attention only; ring/MLA/recurrent state keeps "
+                        "the ragged path)")
+                if paged and sub == "attn":
+                    c = kvc.make_paged_kv_cache(num_blocks, block_size,
+                                                hp.kv_eff, cfg.head_dim,
+                                                dtype, lead=lead, alloc=alloc)
+                    s = kvc.PagedKVCache(k=P(None, tp_ax, None, None),
+                                         v=P(None, tp_ax, None, None),
+                                         block_size=block_size)
+                elif sub in ("attn", "shared_attn"):
                     c = kvc.make_kv_cache(batch, s_max, hp.kv_eff,
                                           cfg.head_dim, dtype, alloc=alloc,
                                           seq_shards=seq_shards, lead=lead,
@@ -309,6 +327,79 @@ def build_continuous_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
     return dict(prefill=prefill, decode=decode, decode_greedy=decode_greedy,
                 env=env, pspecs=pspecs, vec_spec=vec_spec,
                 local_slots=local_slots)
+
+
+def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
+                      batch_slots: int, rng_seed: int = 0):
+    """Steps for the paged-KV serving engine (block-pool caches; see
+    serving/scheduler.PagedScheduler for the host-side block management).
+
+    prefill_chunk(params, caches, tokens, start, length, bt, temp, top_k,
+                  top_p, seed)
+        Run ONE chunk of ONE request's prompt: tokens (1, C) right-padded,
+        `length` real tokens at absolute positions start..start+length-1.
+        K/V scatters through the (1, max_blocks) block table `bt`; the chunk
+        attends to everything the table already holds (earlier chunks and
+        prefix-cache hits included), so long prompts interleave with decode
+        in bounded per-step token budgets.  Also samples the token following
+        the chunk (the host uses it only for the FINAL chunk, where it is
+        the request's first generated token).  Returns (caches, tok (1,)).
+
+    decode(params, caches, tokens, pos, active, bts, temp, top_k, top_p,
+           seeds)
+        One token for EVERY row at its own position through its own block
+        table row.  Inactive rows run at position -1 (writes dropped, token
+        discarded).  Returns (caches, toks (B,)).
+
+    Sampling keys fold (request seed, absolute position) exactly like the
+    ragged engine, so paged and ragged serving emit identical tokens.
+    """
+    env = make_axis_env(pcfg)
+    pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
+    base_key = jax.random.key(rng_seed)
+
+    def _sample(params, hidden_last, keys, temp, top_k, top_p):
+        logits = tfm.logits_shard(cfg, params, hidden_last)
+        return sampler.sample_tokens(logits[:, 0], env, cfg.vocab_size,
+                                     keys, temp, top_k, top_p)
+
+    def prefill_chunk(params, caches, tokens, start, length, bt, temp,
+                      top_k, top_p, seed):
+        c = tokens.shape[1]
+        ar = jnp.arange(c)
+        positions = jnp.where(ar < length, start + ar, -1)[None]     # (1, C)
+        hidden, caches, _ = tfm.forward(cfg, params, tokens, env,
+                                        positions=positions, caches=caches,
+                                        block_tables=bt)
+        h_last = jax.lax.dynamic_slice_in_dim(hidden, length - 1, 1, axis=1)
+        keys = sampler.request_keys(base_key, seed, (start + length)[None])
+        tok = _sample(params, h_last, keys, temp, top_k, top_p)
+        return caches, tok
+
+    def _decode_body(params, caches, tokens, pos, active, bts):
+        positions = jnp.where(active, pos, -1)[:, None]              # (B, 1)
+        hidden, caches, _ = tfm.forward(cfg, params, tokens[:, None], env,
+                                        positions=positions, caches=caches,
+                                        unroll=True, block_tables=bts)
+        return hidden, caches
+
+    def decode(params, caches, tokens, pos, active, bts, temp, top_k, top_p,
+               seeds):
+        hidden, caches = _decode_body(params, caches, tokens, pos, active,
+                                      bts)
+        keys = sampler.request_keys(base_key, seeds, pos + 1)
+        toks = _sample(params, hidden, keys, temp, top_k, top_p)
+        return caches, toks
+
+    def decode_greedy(params, caches, tokens, pos, active, bts):
+        hidden, caches = _decode_body(params, caches, tokens, pos, active,
+                                      bts)
+        logits = tfm.logits_shard(cfg, params, hidden)
+        toks = sampler.greedy(logits[:, 0], env, cfg.vocab_size)
+        return caches, toks
+
+    return dict(prefill_chunk=prefill_chunk, decode=decode,
+                decode_greedy=decode_greedy, env=env, pspecs=pspecs)
 
 
 def shard_mapped(fn, mesh, in_specs, out_specs):

@@ -23,14 +23,23 @@ Cache kinds
                  use the data axis for DP).
 * MLACache       DeepSeek MLA: stores only the compressed latent + shared
                  rope key (kv_lora_rank + rope_dim per token).
+* PagedKVCache   full attention over a shared physical BLOCK POOL: rows own
+                 logical block tables instead of contiguous s_max regions,
+                 so memory is admitted block-by-block and common prompt
+                 prefixes share blocks (DESIGN.md §Paged KV).
 * Mamba / RWKV   plain dicts of recurrent state (O(1) per layer).
+
+The host-side allocator for the paged pool (``BlockAllocator``) and the
+hash-chained prefix cache (``PrefixCache``) live here too — pure Python, no
+jax, unit-testable in microseconds (tests/test_paged.py).
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +87,31 @@ class MLACache:
         return getattr(self, name)
 
 
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["k", "v"],
+         meta_fields=["block_size"])
+@dataclass
+class PagedKVCache:
+    """Physical block pool shared by every request (DESIGN.md §Paged KV).
+
+    Token slots are flat: block ``b`` owns pool positions
+    ``[b*block_size, (b+1)*block_size)``.  Heads-major like ``KVCache`` so
+    gathered views feed the decode dot without a transpose of the pool.
+    Which rows own which blocks lives host-side (``BlockAllocator`` +
+    the paged scheduler's block tables) — the device only ever sees a
+    ``block_tables: (B, max_blocks)`` int32 argument per step.
+    """
+    k: jnp.ndarray            # (Hkv_local, num_blocks * block_size, hd)
+    v: jnp.ndarray
+    block_size: int = 16
+
+    def get(self, name, default=None):
+        return getattr(self, name, default)
+
+    def __getitem__(self, name):
+        return getattr(self, name)
+
+
 # ---------------------------------------------------------------------------
 # constructors
 # ---------------------------------------------------------------------------
@@ -114,6 +148,16 @@ def make_kv_cache(batch: int, s_max: int, hkv: int, hd: int, dtype,
         slot_pos=alloc(sp_shape, jnp.int32, fill=-1),
         ring=bool(window) and window < s_max,
         seq_sharded=seq_shards > 1)
+
+
+def make_paged_kv_cache(num_blocks: int, block_size: int, hkv: int, hd: int,
+                        dtype, lead: Tuple[int, ...] = (),
+                        alloc=_alloc_default) -> PagedKVCache:
+    """Allocate a physical block pool of ``num_blocks * block_size`` token
+    slots (shared across all requests; `lead` prepends scan group dims)."""
+    shape = (*lead, hkv, num_blocks * block_size, hd)
+    return PagedKVCache(k=alloc(shape, dtype), v=alloc(shape, dtype),
+                        block_size=block_size)
 
 
 def make_mla_cache(batch: int, s_max: int, lora: int, rope_d: int, dtype,
@@ -275,6 +319,55 @@ def mla_cache_update(cache: MLACache, c_kv, k_rope, positions,
 
 
 # ---------------------------------------------------------------------------
+# paged pool access (DESIGN.md §Paged KV)
+# ---------------------------------------------------------------------------
+
+def paged_update(cache: PagedKVCache, k_new, v_new, positions,
+                 block_tables) -> PagedKVCache:
+    """Scatter new K/V into the block pool.
+
+    positions: (B, S) logical per-row positions (-1 drops the write);
+    block_tables: (B, max_blocks) physical block ids.  Logical position p of
+    row b lands at pool slot ``bt[b, p // bs] * bs + p % bs``.  The host
+    allocator guarantees rows never write a block with refcount > 1 (the
+    copy-on-write invariant), so one flat scatter is race-free.
+    """
+    bs = cache.block_size
+    n_tok = cache.k.shape[-2]
+    pos_c = jnp.maximum(positions, 0)
+    phys = jnp.take_along_axis(block_tables, pos_c // bs, axis=1)
+    flat = jnp.where(positions >= 0, phys * bs + pos_c % bs, n_tok)
+    flat = flat.reshape(-1)                               # (B*S,)
+    kf = k_new.reshape(-1, *k_new.shape[2:]).swapaxes(0, 1)   # (Hkv,B*S,hd)
+    vf = v_new.reshape(-1, *v_new.shape[2:]).swapaxes(0, 1)
+    return PagedKVCache(
+        k=cache.k.at[:, flat].set(kf.astype(cache.k.dtype), mode="drop"),
+        v=cache.v.at[:, flat].set(vf.astype(cache.v.dtype), mode="drop"),
+        block_size=bs)
+
+
+def paged_view(cache: PagedKVCache, block_tables) -> KVCache:
+    """Gather each row's logical K/V view from the pool.
+
+    Returns a ragged ``KVCache`` of ``max_blocks * block_size`` slots per row
+    whose slot s holds logical position s (``slot_pos[b, s] = s``): the
+    ragged attention mask ``slot_pos <= cur`` then reads exactly the row's
+    written prefix — unwritten/unallocated table entries sit at s > cur and
+    are masked.  When ``max_blocks * block_size == s_max`` this view is
+    shape- and bit-identical to the dense ragged cache read, which is what
+    the paged-vs-ragged engine equivalence tests pin down.
+    """
+    bs = cache.block_size
+    b, m = block_tables.shape
+    idx = (block_tables[:, :, None] * bs +
+           jnp.arange(bs, dtype=block_tables.dtype)).reshape(b, m * bs)
+    k = jnp.take(cache.k, idx, axis=1).swapaxes(0, 1)     # (B, Hkv, L, hd)
+    v = jnp.take(cache.v, idx, axis=1).swapaxes(0, 1)
+    sp = jnp.broadcast_to(jnp.arange(m * bs, dtype=jnp.int32), (b, m * bs))
+    return KVCache(k=k, v=v, slot_pos=sp, ring=False, seq_sharded=False)
+
+
+# ---------------------------------------------------------------------------
 # slot lifecycle (continuous batching; DESIGN.md §Serving)
 # ---------------------------------------------------------------------------
 # Ragged section caches are pytrees in which EVERY array leaf carries the
@@ -317,3 +410,119 @@ def insert_slot(caches, slot_caches, slot):
         lambda big, small: jax.lax.dynamic_update_slice_in_dim(
             big, small.astype(big.dtype), slot, axis=1),
         caches, slot_caches)
+
+
+# ---------------------------------------------------------------------------
+# host-side block management (paged serving; DESIGN.md §Paged KV)
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free-list + refcount allocator over the physical block pool.
+
+    Pure host bookkeeping — block *contents* live on device and are never
+    touched here.  Shared prefix blocks carry refcount > 1; a block may only
+    be written while its refcount is exactly 1 (the scheduler asserts this —
+    the copy-on-write invariant: diverge by allocating a fresh block, never
+    by mutating a shared one).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("need at least one block of at least one token")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # stack: low ids allocated first (stable tests / readable tables)
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: List[int] = [0] * num_blocks
+        self.total_allocs = 0          # lifetime alloc() count (stats)
+
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def num_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, blk: int) -> int:
+        return self._ref[blk]
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("BlockAllocator: out of KV blocks")
+        blk = self._free.pop()
+        assert self._ref[blk] == 0
+        self._ref[blk] = 1
+        self.total_allocs += 1
+        return blk
+
+    def incref(self, blk: int) -> int:
+        self._ref[blk] += 1
+        return self._ref[blk]
+
+    def decref(self, blk: int) -> int:
+        assert self._ref[blk] > 0, f"double free of block {blk}"
+        self._ref[blk] -= 1
+        return self._ref[blk]
+
+    def free(self, blk: int):
+        """Return a refcount-0 block to the free list."""
+        assert self._ref[blk] == 0, f"freeing live block {blk}"
+        self._free.append(blk)
+
+
+class PrefixCache:
+    """Hash-chained prompt prefix -> physical block map.
+
+    A FULL block of a prompt is keyed by the hash chain
+    ``h_i = hash((h_{i-1}, tokens[i*bs:(i+1)*bs]))`` so equal keys imply an
+    equal whole prefix, not just an equal block.  Only blocks whose K/V is
+    completely written are ever inserted (a concurrently-prefilling request
+    must not hit a half-filled block).  Blocks whose refcount drops to zero
+    stay cached but *evictable* (LRU): the scheduler reclaims them when the
+    free list runs dry, so a retired request's system prompt keeps serving
+    hits until memory pressure actually needs the blocks back.
+    """
+
+    _SEED = 0x51ED5EED
+
+    def __init__(self):
+        self._table: Dict[int, int] = {}          # chain hash -> block id
+        self._by_block: Dict[int, int] = {}       # block id -> chain hash
+        self._evictable: "OrderedDict[int, int]" = OrderedDict()  # blk -> h
+
+    @classmethod
+    def chain(cls, prev_hash: Optional[int], tokens) -> int:
+        return hash(((cls._SEED if prev_hash is None else prev_hash),
+                     tuple(tokens)))
+
+    def lookup(self, h: int) -> Optional[int]:
+        return self._table.get(h)
+
+    def contains_block(self, blk: int) -> bool:
+        return blk in self._by_block
+
+    def insert(self, h: int, blk: int):
+        """Register a fully-written block; first writer wins on hash ties."""
+        if h not in self._table:
+            self._table[h] = blk
+            self._by_block[blk] = h
+
+    def mark_evictable(self, blk: int):
+        """Called when a registered block's refcount hits 0: keep it cached
+        but reclaimable (most-recently-retired evicted last)."""
+        self._evictable[blk] = self._by_block[blk]
+        self._evictable.move_to_end(blk)
+
+    def revive(self, blk: int):
+        """A cached block got a hit while evictable: pin it again."""
+        self._evictable.pop(blk, None)
+
+    def num_evictable(self) -> int:
+        return len(self._evictable)
+
+    def pop_lru(self) -> int:
+        """Surrender the least-recently-used evictable block (drops its
+        registration — the chain simply stops matching there)."""
+        blk, h = self._evictable.popitem(last=False)
+        del self._table[h]
+        del self._by_block[blk]
+        return blk

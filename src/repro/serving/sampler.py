@@ -46,7 +46,6 @@ def sample(logits_shard, env: AxisEnv, true_vocab: int, key,
     so shards draw consistent noise and the global argmax is a faithful
     categorical sample."""
     lf = _mask_padded(logits_shard, env, true_vocab) / max(temperature, 1e-6)
-    v = lf.shape[-1]
     shard = env.model_axis_index()
     # fold the shard id into the key so each shard draws its own columns
     k = jax.random.fold_in(key, shard)

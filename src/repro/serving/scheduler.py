@@ -1,4 +1,4 @@
-"""Continuous-batching request scheduler and serving engine.
+"""Continuous-batching request schedulers and serving engines.
 
 The paper's wall-clock win is a per-step property; this module is what makes
 it matter under real traffic: a fixed pool of ``batch_slots`` decode slots
@@ -14,14 +14,21 @@ Split of responsibilities:
   prefill/decode from ``engine.build_continuous_steps``) and drives the
   scheduler.  One jitted decode graph serves a mixed-age batch under any
   ``ResidualMode`` and TP/DP sharding.
+* ``PagedScheduler`` / ``PagedServingEngine`` — the paged-KV path
+  (DESIGN.md §Paged KV): requests are admitted on *block availability*
+  instead of whole-slot ``s_max`` reservation, long prompts prefill in
+  bounded per-step token chunks that interleave with in-flight decode, and
+  shared prompt prefixes reuse physical blocks via hash-chained prefix
+  matching.  The ragged path above stays as the equivalence oracle.
 
 Determinism contract: a request's output tokens depend only on (prompt,
 sampling params, seed) — never on which slot it lands in or what else is in
 flight — because attention masks key on per-row ``slot_pos`` and sampling
 keys fold (seed, absolute position).  ``tests/test_scheduler.py`` asserts
-bit-identity between continuous and isolated decoding.  (MoE models with
-finite expert capacity are the documented exception: routing competes across
-the batch, so outputs can differ at capacity.)
+bit-identity between continuous and isolated decoding;
+``tests/test_paged.py`` asserts it between the paged and ragged engines.
+(MoE models with finite expert capacity are the documented exception:
+routing competes across the batch, so outputs can differ at capacity.)
 """
 
 from __future__ import annotations
@@ -166,7 +173,80 @@ def _bucket(n: int, lo: int = 16) -> int:
     return b
 
 
-class ContinuousServingEngine:
+class _ServingEngineBase:
+    """Host-side machinery shared by the ragged and paged engines: per-slot
+    decode vectors, the greedy/sampled decode dispatch with the
+    observe/retire loop, and queue draining.  Subclasses own admission and
+    prefill strategy plus the jitted step wiring (``self._decode`` /
+    ``self._decode_greedy`` signatures differ only by the extra per-step
+    args a subclass passes through ``_decode_step``)."""
+
+    def _init_host_vectors(self, batch_slots: int):
+        np = self._np
+        z = lambda dt, fill=0: np.full((batch_slots,), fill, dt)
+        self._tokens = z(np.int32)
+        self._pos = z(np.int32)
+        self._active = z(bool, False)
+        self._temp = z(np.float32, 0.0)
+        self._top_k = z(np.int32)
+        self._top_p = z(np.float32, 1.0)
+        self._seeds = z(np.int32)
+
+    def _start_decode_slot(self, slot: int, req: Request, tok: int):
+        """Arm a slot's decode vectors after its prefill sampled `tok`."""
+        sp = req.sampling
+        self._tokens[slot] = tok
+        self._pos[slot] = len(req.prompt)
+        self._active[slot] = True
+        self._temp[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._seeds[slot] = sp.seed
+
+    def _decode_step(self, live: List[int], extra=()) -> List[Tuple[int, int]]:
+        """One batched decode of every in-flight slot; returns (rid, token)
+        events.  `extra` is appended after the `active` argument (the paged
+        engine passes its block tables there)."""
+        jnp, np = self._jnp, self._np
+        from repro.serving.sampler import GREEDY_EPS
+        base = (self.params, self.caches,
+                jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                jnp.asarray(self._active), *extra)
+        if all(self._temp[s] <= GREEDY_EPS for s in live):
+            # hot default path: every in-flight request decodes greedily
+            self.caches, toks = self._decode_greedy(*base)
+        else:
+            self.caches, toks = self._decode(
+                *base, jnp.asarray(self._temp), jnp.asarray(self._top_k),
+                jnp.asarray(self._top_p), jnp.asarray(self._seeds))
+        toks = np.asarray(toks)
+        events: List[Tuple[int, int]] = []
+        for slot in live:
+            tok = int(toks[slot])
+            rid = self.scheduler.slots[slot].request.rid
+            events.append((rid, tok))
+            if self.scheduler.observe(slot, tok):
+                self._active[slot] = False
+            else:
+                self._tokens[slot] = tok
+                self._pos[slot] += 1
+        return events
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, request: Request):
+        self.scheduler.submit(request)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def run(self) -> Dict[int, FinishedRequest]:
+        """Drain the queue completely; returns rid -> FinishedRequest."""
+        while self.has_work():
+            self.step()
+        return {f.rid: f for f in self.scheduler.finished}
+
+
+class ContinuousServingEngine(_ServingEngineBase):
     """Drives ``Scheduler`` against the jitted ragged-cache steps.
 
     One ``step()`` = up to ``max_prefills_per_step`` prefills (admitting new
@@ -242,74 +322,22 @@ class ContinuousServingEngine:
         self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
 
         # host-side per-slot vectors fed to the decode step
-        z = lambda dt, fill=0: np.full((batch_slots,), fill, dt)
-        self._tokens = z(np.int32)
-        self._pos = z(np.int32)
-        self._active = z(bool, False)
-        self._temp = z(np.float32, 0.0)
-        self._top_k = z(np.int32)
-        self._top_p = z(np.float32, 1.0)
-        self._seeds = z(np.int32)
-
-    # -- public API ---------------------------------------------------------
-    def submit(self, request: Request):
-        self.scheduler.submit(request)
-
-    def has_work(self) -> bool:
-        return self.scheduler.has_work()
+        self._init_host_vectors(batch_slots)
 
     def step(self) -> List[Tuple[int, int]]:
         """One engine iteration.  Returns (rid, token) events emitted."""
-        jnp, np = self._jnp, self._np
         events: List[Tuple[int, int]] = []
-
         with self._mesh_ctx():
             for slot, req in self.scheduler.admissions():
                 tok = self._run_prefill(slot, req)
                 events.append((req.rid, tok))
                 if not self.scheduler.start(slot, req, tok):
-                    sp = req.sampling
-                    self._tokens[slot] = tok
-                    self._pos[slot] = len(req.prompt)
-                    self._active[slot] = True
-                    self._temp[slot] = sp.temperature
-                    self._top_k[slot] = sp.top_k
-                    self._top_p[slot] = sp.top_p
-                    self._seeds[slot] = sp.seed
+                    self._start_decode_slot(slot, req, tok)
 
             live = self.scheduler.active_slots()
             if live:
-                from repro.serving.sampler import GREEDY_EPS
-                if all(self._temp[s] <= GREEDY_EPS for s in live):
-                    # hot default: every in-flight request decodes greedily
-                    self.caches, toks = self._decode_greedy(
-                        self.params, self.caches,
-                        jnp.asarray(self._tokens), jnp.asarray(self._pos),
-                        jnp.asarray(self._active))
-                else:
-                    self.caches, toks = self._decode(
-                        self.params, self.caches,
-                        jnp.asarray(self._tokens), jnp.asarray(self._pos),
-                        jnp.asarray(self._active), jnp.asarray(self._temp),
-                        jnp.asarray(self._top_k), jnp.asarray(self._top_p),
-                        jnp.asarray(self._seeds))
-                toks = np.asarray(toks)
-                for slot in live:
-                    tok = int(toks[slot])
-                    rid = self.scheduler.slots[slot].request.rid
-                    events.append((rid, tok))
-                    if self.scheduler.observe(slot, tok):
-                        self._active[slot] = False
-                    else:
-                        self._tokens[slot] = tok
-                        self._pos[slot] += 1
+                events.extend(self._decode_step(live))
         return events
-
-    def run(self) -> Dict[int, FinishedRequest]:
-        """Drain the queue completely; returns rid -> FinishedRequest."""
-        while self.has_work():
-            self.step()
-        return {f.rid: f for f in self.scheduler.finished}
 
     # -- internals ----------------------------------------------------------
     def _run_prefill(self, slot: int, req: Request) -> int:
@@ -323,6 +351,492 @@ class ContinuousServingEngine:
         self.caches, tok = self._prefill(
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(length, jnp.int32), jnp.asarray(slot, jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray([sp.seed], jnp.int32))
+        return int(tok[0])
+
+
+# ---------------------------------------------------------------------------
+# paged-KV scheduler (DESIGN.md §Paged KV)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _PagedSeq:
+    request: Request
+    admit_id: int                 # admission order (prefill chunk FIFO)
+    blocks: List[int]             # physical block ids, logical order
+    block_hashes: List[int]       # chain hashes of the prompt's FULL blocks
+    num_cached: int               # prompt tokens served from the prefix cache
+    filled: int                   # prompt tokens whose K/V is on device
+    reserved: int                 # decode blocks reserved but not yet alloc'd
+    registered: int = 0           # prompt blocks handled by the prefix cache
+    fresh_blocks: int = 0         # blocks newly allocated for this request
+    pos: int = -1                 # last sampled token's position (decode)
+    tokens: List[int] = field(default_factory=list)
+
+    @property
+    def decoding(self) -> bool:
+        return self.filled >= len(self.request.prompt)
+
+
+class PagedScheduler:
+    """Block-granular admission, chunked prefill, and prefix reuse.
+
+    Pure host bookkeeping over a ``BlockAllocator`` + ``PrefixCache`` (both
+    in serving/kv_cache.py) — no jax, unit-testable in microseconds.
+
+    Admission policy (no mid-flight OOM by construction): a request is
+    admitted only when the pool can cover its *worst case* —
+    ``ceil(min(prompt + max_new - 1, s_max - 1) / block_size)`` blocks,
+    minus prefix-cache hits.  Prompt blocks are allocated at admission;
+    decode blocks are counted against a reservation and materialised lazily,
+    so ``num_free - reserved`` is the budget every admission checks.
+    Admission is strict FIFO (head-of-line blocking, same as the ragged
+    scheduler): a too-big head request waits rather than being overtaken.
+
+    Copy-on-write rule: a block is writable only while its refcount is
+    exactly 1.  Prefix hits cover FULL blocks only and always leave the
+    final prompt token uncached, so every sequence ends its table with an
+    exclusively-owned block and divergence *recomputes into a fresh block*
+    instead of mutating a shared one.  ``prefill_work`` and
+    ``ensure_decode_blocks`` assert the invariant on every block they are
+    about to write.
+    """
+
+    def __init__(self, n_slots: int, s_max: int, allocator,
+                 prefix_cache=None, eos_id: Optional[int] = None,
+                 max_prefill_tokens: int = 128):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        if max_prefill_tokens < 1:
+            raise ValueError("need a positive prefill token budget")
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.eos_id = eos_id
+        self.max_prefill_tokens = max_prefill_tokens
+        self.allocator = allocator
+        self.block_size = allocator.block_size
+        self.max_blocks = -(-s_max // self.block_size)
+        self.prefix = prefix_cache
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[_PagedSeq]] = [None] * n_slots
+        self.finished: List[FinishedRequest] = []
+        self.total_reserved = 0
+        self._admit_seq = 0
+        # stats: prefix-hit rate + per-request block economy (tests/bench)
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens = 0        # prompt tokens actually computed
+        self.deferred_admissions = 0   # head-of-line waits on blocks
+        self._alloc_base = 0           # allocator.total_allocs at last reset
+        self.request_stats: Dict[int, Dict[str, int]] = {}
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, request: Request):
+        if not request.prompt:
+            raise ValueError(f"request {request.rid}: empty prompt")
+        if len(request.prompt) > self.s_max - 1:
+            raise ValueError(
+                f"request {request.rid}: prompt {len(request.prompt)} "
+                f"does not fit s_max={self.s_max} (need prompt <= s_max-1)")
+        worst = self._worst_case_blocks(request)
+        if worst > self.allocator.num_blocks:
+            # admission can never succeed (even an empty pool is too small):
+            # reject here instead of deferring forever at the queue head
+            raise ValueError(
+                f"request {request.rid}: needs {worst} KV blocks worst-case "
+                f"but the pool only has {self.allocator.num_blocks}")
+        self.queue.append(request)
+
+    # -- block budget -------------------------------------------------------
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def _worst_case_blocks(self, req: Request) -> int:
+        """Blocks a request may write: prompt + generated tokens (the last
+        sampled token is never written), capped by the s_max retire rule."""
+        return self._blocks_for(
+            min(len(req.prompt) + req.max_new_tokens - 1, self.s_max - 1))
+
+    def available_blocks(self) -> int:
+        """Blocks an admission could still claim: clean free list, plus
+        evictable prefix-cached blocks, minus outstanding reservations."""
+        ev = self.prefix.num_evictable() if self.prefix is not None else 0
+        return self.allocator.num_free() + ev - self.total_reserved
+
+    def _alloc_block(self) -> int:
+        if self.allocator.num_free() == 0 and self.prefix is not None and \
+                self.prefix.num_evictable():
+            self.allocator.free(self.prefix.pop_lru())   # reclaim LRU cached
+        return self.allocator.alloc()
+
+    def _release_block(self, blk: int):
+        if self.allocator.decref(blk) == 0:
+            if self.prefix is not None and self.prefix.contains_block(blk):
+                self.prefix.mark_evictable(blk)          # stays reusable
+            else:
+                self.allocator.free(blk)
+
+    # -- admission ----------------------------------------------------------
+    def _match_prefix(self, prompt: List[int], hashes: List[int]):
+        """Longest chain of FULL cached blocks, capped so the last prompt
+        token is always recomputed (its hidden state seeds sampling)."""
+        hits: List[int] = []
+        if self.prefix is None:
+            return hits
+        for h in hashes[: (len(prompt) - 1) // self.block_size]:
+            blk = self.prefix.lookup(h)
+            if blk is None:
+                break
+            hits.append(blk)
+        return hits
+
+    def admissions(self) -> List[Tuple[int, Request]]:
+        """Admit FIFO-queue heads while a slot AND their block budget fit.
+        Prompt blocks (minus prefix hits) are allocated here; decode blocks
+        are reserved.  Returns newly admitted (slot, request) pairs."""
+        out: List[Tuple[int, Request]] = []
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while self.queue and free:
+            req = self.queue[0]
+            lp = len(req.prompt)
+            bs = self.block_size
+            hashes: List[int] = []
+            h = None
+            for i in range(lp // bs):
+                h = self.prefix.chain(h, req.prompt[i * bs:(i + 1) * bs]) \
+                    if self.prefix is not None else 0
+                hashes.append(h)
+            hits = self._match_prefix(req.prompt, hashes)
+            n_prompt = self._blocks_for(lp)
+            need_now = n_prompt - len(hits)
+            need_later = self._worst_case_blocks(req) - n_prompt
+            # budget check BEFORE committing the hits: evictable hit blocks
+            # are about to be pinned, so they cannot also fund allocations
+            # (and a failed attempt must not touch the LRU order)
+            ev_hits = sum(1 for b in hits if self.allocator.refcount(b) == 0)
+            if self.available_blocks() - ev_hits < need_now + need_later:
+                self.deferred_admissions += 1
+                break                             # strict FIFO: head waits
+            for blk in hits:
+                if self.allocator.refcount(blk) == 0:
+                    self.prefix.revive(blk)
+                self.allocator.incref(blk)
+            self.queue.popleft()
+            slot = free.pop(0)
+            seq = _PagedSeq(
+                request=req, admit_id=self._admit_seq, blocks=list(hits),
+                block_hashes=hashes, num_cached=len(hits) * bs,
+                filled=len(hits) * bs, reserved=need_later,
+                registered=len(hits))
+            self._admit_seq += 1
+            for _ in range(need_now):
+                seq.blocks.append(self._alloc_block())
+                seq.fresh_blocks += 1
+            self.total_reserved += need_later
+            self.prefix_hit_tokens += seq.num_cached
+            self.slots[slot] = seq
+            out.append((slot, req))
+        return out
+
+    # -- chunked prefill ----------------------------------------------------
+    def prefill_work(self) -> List[Tuple[int, List[int], int]]:
+        """Chunks to run this step: (slot, prompt_chunk, start) triples in
+        admission order, bounded by ``max_prefill_tokens`` in total so one
+        long prompt cannot starve in-flight decodes."""
+        budget = self.max_prefill_tokens
+        work: List[Tuple[int, List[int], int]] = []
+        prefilling = sorted(
+            ((i, s) for i, s in enumerate(self.slots)
+             if s is not None and not s.decoding),
+            key=lambda t: t[1].admit_id)
+        for slot, seq in prefilling:
+            if budget <= 0:
+                break
+            lp = len(seq.request.prompt)
+            chunk = min(budget, lp - seq.filled)
+            lo, hi = seq.filled // self.block_size, \
+                (seq.filled + chunk - 1) // self.block_size
+            for bi in range(lo, hi + 1):          # COW write-ownership guard
+                assert self.allocator.refcount(seq.blocks[bi]) == 1, \
+                    f"write to shared block {seq.blocks[bi]}"
+            work.append((slot, seq.request.prompt[seq.filled:
+                                                  seq.filled + chunk],
+                         seq.filled))
+            budget -= chunk
+        return work
+
+    def chunk_filled(self, slot: int, n_tokens: int):
+        """Record a finished prefill chunk; newly FULL prompt blocks become
+        visible to the prefix cache (their K/V is completely written, so a
+        later admission may share them)."""
+        seq = self.slots[slot]
+        seq.filled += n_tokens
+        self.prefill_tokens += n_tokens
+        if self.prefix is None:
+            return
+        for i in range(seq.registered,
+                       min(seq.filled // self.block_size,
+                           len(seq.block_hashes))):
+            self.prefix.insert(seq.block_hashes[i], seq.blocks[i])
+            seq.registered = i + 1
+
+    # -- decode bookkeeping -------------------------------------------------
+    def start_decode(self, slot: int, first_token: int) -> bool:
+        """Transition a fully-prefilled slot to decoding with the token its
+        final chunk sampled.  Returns True if it retired immediately."""
+        seq = self.slots[slot]
+        assert seq.decoding and not seq.tokens
+        seq.pos = len(seq.request.prompt)
+        seq.tokens.append(first_token)
+        return self._maybe_retire(slot)
+
+    def decoding_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.decoding and s.tokens]
+
+    def ensure_decode_blocks(self):
+        """Materialise the block each decoding row's next write lands in,
+        drawing on the reservation made at admission (never fails)."""
+        for slot in self.decoding_slots():
+            seq = self.slots[slot]
+            bi = seq.pos // self.block_size
+            while len(seq.blocks) <= bi:
+                seq.blocks.append(self._alloc_block())
+                seq.fresh_blocks += 1
+                seq.reserved -= 1
+                self.total_reserved -= 1
+                assert seq.reserved >= 0, "reservation underflow"
+            assert self.allocator.refcount(seq.blocks[bi]) == 1, \
+                f"decode write to shared block {seq.blocks[bi]}"
+
+    def observe(self, slot: int, token: int) -> bool:
+        """Record one decoded token.  Returns True if the request retired."""
+        seq = self.slots[slot]
+        assert seq is not None and seq.decoding
+        seq.pos += 1
+        seq.tokens.append(token)
+        return self._maybe_retire(slot)
+
+    def _maybe_retire(self, slot: int) -> bool:
+        seq = self.slots[slot]
+        reason = None
+        if self.eos_id is not None and seq.tokens[-1] == self.eos_id:
+            reason = "eos"
+        elif len(seq.tokens) >= seq.request.max_new_tokens:
+            reason = "length"
+        elif seq.pos + 1 >= self.s_max:
+            reason = "cache_full"
+        if reason is None:
+            return False
+        self.finished.append(FinishedRequest(
+            rid=seq.request.rid, prompt=list(seq.request.prompt),
+            tokens=list(seq.tokens), finish_reason=reason))
+        self.request_stats[seq.request.rid] = dict(
+            cached_tokens=seq.num_cached, fresh_blocks=seq.fresh_blocks)
+        self.total_reserved -= seq.reserved
+        for blk in seq.blocks:
+            self._release_block(blk)
+        self.slots[slot] = None
+        return True
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def block_table_row(self, slot: int) -> List[int]:
+        return list(self.slots[slot].blocks)
+
+    def live_blocks(self) -> int:
+        """Blocks held by in-flight requests (evictable prefix-cache
+        residents are reclaimable, so they don't count as in use)."""
+        ev = self.prefix.num_evictable() if self.prefix is not None else 0
+        return self.allocator.num_in_use() - ev
+
+    def stats(self) -> Dict[str, float]:
+        denom = self.prefix_hit_tokens + self.prefill_tokens
+        return dict(
+            prefix_hit_tokens=self.prefix_hit_tokens,
+            prefill_tokens=self.prefill_tokens,
+            prefix_hit_rate=self.prefix_hit_tokens / denom if denom else 0.0,
+            blocks_in_use=self.live_blocks(),
+            blocks_total=self.allocator.num_blocks,
+            total_block_allocs=self.allocator.total_allocs - self._alloc_base,
+            deferred_admissions=self.deferred_admissions,
+        )
+
+    def reset_stats(self):
+        """Zero the counters (bench warmup); block state is untouched."""
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens = 0
+        self.deferred_admissions = 0
+        self._alloc_base = self.allocator.total_allocs
+        self.request_stats.clear()
+
+
+class PagedServingEngine(_ServingEngineBase):
+    """Drives ``PagedScheduler`` against the jitted block-pool steps
+    (``engine.build_paged_steps``).
+
+    One ``step()`` = admissions (host-only block accounting) + up to
+    ``max_prefill_tokens`` prompt tokens of chunked prefill + one batched
+    decode of every in-flight row through its block table.  Emits tokens
+    bit-identical to ``ContinuousServingEngine`` (tests/test_paged.py) while
+    admitting on block availability rather than whole-slot reservations.
+
+    Supports decoder-only full-attention families (ring/MLA/recurrent state
+    keeps the ragged engine) at TP >= 1; the pool has no batch axis, so
+    data-parallel sharding of slots is not available on this path.
+    """
+
+    def __init__(self, cfg, params, *, batch_slots: int, s_max: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 pcfg=None, mesh=None, eos_id: Optional[int] = None,
+                 rng_seed: int = 0, max_prefill_tokens: int = 128,
+                 prefill_bucket_min: int = 16, prefix_caching: bool = True):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import ParallelConfig
+        from repro.models import transformer as _tfm
+        from repro.parallel import compat
+        from repro.serving import engine as engine_mod
+        from repro.serving.kv_cache import BlockAllocator, PrefixCache
+
+        if cfg.encoder_layers or cfg.family == "vlm":
+            raise NotImplementedError(
+                "paged serving targets decoder-only token models")
+        unsupported = {
+            sub for kind in _tfm.effective_kinds(cfg)
+            for sub in _tfm.subblocks_of(kind)
+            if sub not in ("attn", "mlp", "moe", "dense_mlp")}
+        if unsupported:
+            raise NotImplementedError(
+                f"paged serving supports full-attention stacks only "
+                f"(found {sorted(unsupported)}); use the ragged engine")
+        pcfg = pcfg if pcfg is not None else ParallelConfig()
+        if max(1, pcfg.dp) * max(1, pcfg.pods) > 1:
+            raise NotImplementedError(
+                "paged serving shards over TP only (the block pool has no "
+                "batch axis for DP)")
+
+        self._jnp, self._np = jnp, np
+        self.cfg = cfg
+        self.params = params
+        self.batch_slots = batch_slots
+        self.s_max = s_max
+        self.block_size = block_size
+        self.max_blocks = -(-s_max // block_size)
+        self.num_blocks = num_blocks if num_blocks is not None else \
+            batch_slots * self.max_blocks
+        self.prefill_bucket_min = prefill_bucket_min
+
+        self.allocator = BlockAllocator(self.num_blocks, block_size)
+        self.prefix = PrefixCache() if prefix_caching else None
+        self.scheduler = PagedScheduler(
+            batch_slots, s_max, self.allocator, prefix_cache=self.prefix,
+            eos_id=eos_id, max_prefill_tokens=max_prefill_tokens)
+
+        steps = engine_mod.build_paged_steps(cfg, pcfg,
+                                             batch_slots=batch_slots,
+                                             rng_seed=rng_seed)
+        self.caches, cache_specs = engine_mod.build_caches(
+            cfg, batch_slots, s_max, pcfg, for_decode=False, paged=True,
+            num_blocks=self.num_blocks, block_size=block_size)
+
+        if mesh is not None and pcfg.world > 1:
+            ps = steps["pspecs"]
+            r = P()                                # host vectors: replicated
+            prefill_chunk = compat.shard_map(
+                steps["prefill_chunk"], mesh,
+                (ps, cache_specs, r, r, r, r, r, r, r, r),
+                (cache_specs, r))
+            decode = compat.shard_map(
+                steps["decode"], mesh,
+                (ps, cache_specs, r, r, r, r, r, r, r, r),
+                (cache_specs, r))
+            decode_greedy = compat.shard_map(
+                steps["decode_greedy"], mesh,
+                (ps, cache_specs, r, r, r, r), (cache_specs, r))
+            self._mesh_ctx = lambda: compat.set_mesh(mesh)
+        else:
+            prefill_chunk = steps["prefill_chunk"]
+            decode, decode_greedy = steps["decode"], steps["decode_greedy"]
+            import contextlib
+            self._mesh_ctx = contextlib.nullcontext
+        self._prefill_chunk = jax.jit(prefill_chunk, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
+
+        self._init_host_vectors(batch_slots)
+        self._bt = np.zeros((batch_slots, self.max_blocks), np.int32)
+        # block-utilization time series (bench reporting)
+        self._util_sum = 0.0
+        self._util_peak = 0.0
+        self._util_steps = 0
+
+    # -- public API ---------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        s = self.scheduler.stats()
+        s["block_util_mean"] = self._util_sum / max(self._util_steps, 1)
+        s["block_util_peak"] = self._util_peak
+        return s
+
+    def reset_stats(self):
+        self.scheduler.reset_stats()
+        self._util_sum = self._util_peak = 0.0
+        self._util_steps = 0
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration.  Returns (rid, token) events emitted."""
+        jnp = self._jnp
+        events: List[Tuple[int, int]] = []
+
+        with self._mesh_ctx():
+            self.scheduler.admissions()
+            for slot, chunk, start in self.scheduler.prefill_work():
+                req = self.scheduler.slots[slot].request
+                tok = self._run_chunk(slot, req, chunk, start)
+                self.scheduler.chunk_filled(slot, len(chunk))
+                if start + len(chunk) == len(req.prompt):   # final chunk
+                    events.append((req.rid, tok))
+                    if not self.scheduler.start_decode(slot, tok):
+                        self._start_decode_slot(slot, req, tok)
+
+            live = self.scheduler.decoding_slots()
+            if live:
+                self.scheduler.ensure_decode_blocks()
+                for slot in live:
+                    self._fill_bt_row(slot)
+                events.extend(
+                    self._decode_step(live, (jnp.asarray(self._bt),)))
+
+        util = self.scheduler.live_blocks() / self.allocator.num_blocks
+        self._util_sum += util
+        self._util_peak = max(self._util_peak, util)
+        self._util_steps += 1
+        return events
+
+    # -- internals ----------------------------------------------------------
+    def _fill_bt_row(self, slot: int):
+        row = self.scheduler.block_table_row(slot)
+        self._bt[slot, :len(row)] = row
+        self._bt[slot, len(row):] = 0
+
+    def _run_chunk(self, slot: int, req: Request, chunk: List[int],
+                   start: int) -> int:
+        jnp, np = self._jnp, self._np
+        sp = req.sampling
+        c = len(chunk)
+        lb = _bucket(c, self.prefill_bucket_min)
+        toks = np.zeros((1, lb), np.int32)
+        toks[0, :c] = chunk
+        self._fill_bt_row(slot)
+        self.caches, tok = self._prefill_chunk(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(start, jnp.int32), jnp.asarray(c, jnp.int32),
+            jnp.asarray(self._bt[slot:slot + 1]),
             jnp.asarray([sp.temperature], jnp.float32),
             jnp.asarray([sp.top_k], jnp.int32),
             jnp.asarray([sp.top_p], jnp.float32),

@@ -17,8 +17,7 @@ differently — the foundation of the fault-tolerance story.
 from __future__ import annotations
 
 import dataclasses
-from pathlib import Path
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -25,9 +25,8 @@ work identically in the single-process simulation used by the tests:
 from __future__ import annotations
 
 import json
-import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional
 

@@ -1,0 +1,114 @@
+"""CI pipeline sanity: the GitHub Actions workflow stays structurally valid
+(jobs, triggers, jax matrix, gate commands) and the serve-bench regression
+gate accepts the committed baseline while rejecting a degraded run."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+WORKFLOW = ROOT / ".github" / "workflows" / "ci.yml"
+BASELINE = ROOT / "results" / "serve_bench.json"
+CHECK = ROOT / "scripts" / "check_bench.py"
+
+
+def _steps_text(job):
+    return " ".join(
+        str(s.get("run", "")) + str(s.get("uses", "")) for s in job["steps"]
+    )
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    yaml = pytest.importorskip("yaml")
+    data = yaml.safe_load(WORKFLOW.read_text())
+    # YAML 1.1 parses the bare `on:` key as boolean True
+    data["on"] = data.get("on", data.get(True))
+    return data
+
+
+def test_workflow_triggers(workflow):
+    on = workflow["on"]
+    assert "push" in on and "pull_request" in on
+    assert "schedule" in on and on["schedule"][0]["cron"]
+
+
+def test_workflow_fast_tier_runs_ci_sh_on_jax_matrix(workflow):
+    fast = workflow["jobs"]["fast"]
+    assert "scripts/ci.sh" in _steps_text(fast)
+    versions = [m["jax-version"] for m in fast["strategy"]["matrix"]["include"]]
+    assert len(versions) == 2
+    assert any(str(v).startswith("0.4") for v in versions)  # compat shims
+    assert "latest" in versions
+    # pip caching on every setup-python step
+    for job in workflow["jobs"].values():
+        setups = [s for s in job["steps"] if "setup-python" in str(s.get("uses"))]
+        assert setups and all(s["with"]["cache"] == "pip" for s in setups)
+
+
+def test_workflow_lint_and_nightly_jobs(workflow):
+    assert "ruff" in (ROOT / "requirements-dev.txt").read_text()
+    assert "--lint" in _steps_text(workflow["jobs"]["lint"])
+    nightly = _steps_text(workflow["jobs"]["nightly"])
+    assert "--full" in nightly and "check_bench.py" in nightly
+
+
+def test_gitignore_covers_scratch_dirs():
+    text = (ROOT / ".gitignore").read_text()
+    for pat in (".pytest_cache/", "__pycache__/", "*.egg-info/",
+                "results/*.tmp.json"):
+        assert pat in text, pat
+
+
+def test_check_bench_accepts_committed_baseline():
+    r = subprocess.run(
+        [sys.executable, str(CHECK), "--candidate", str(BASELINE)],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_check_bench_rejects_degraded_and_missing_rows(tmp_path):
+    base = json.loads(BASELINE.read_text())
+    degraded = json.loads(json.dumps(base))
+    for row in degraded["rows"]:
+        row["tokens_per_s"] *= 0.1
+    bad = tmp_path / "degraded.json"
+    bad.write_text(json.dumps(degraded))
+    r = subprocess.run(
+        [sys.executable, str(CHECK), "--candidate", str(bad)],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode != 0 and "FAIL" in r.stdout
+
+    dropped = json.loads(json.dumps(base))
+    dropped["rows"] = dropped["rows"][1:]
+    bad2 = tmp_path / "dropped.json"
+    bad2.write_text(json.dumps(dropped))
+    r2 = subprocess.run(
+        [sys.executable, str(CHECK), "--candidate", str(bad2)],
+        capture_output=True,
+        text=True,
+    )
+    assert r2.returncode != 0 and "missing" in r2.stdout
+
+
+def test_check_bench_p99_gate(tmp_path):
+    base = json.loads(BASELINE.read_text())
+    slow = json.loads(json.dumps(base))
+    for row in slow["rows"]:
+        p99 = row["per_token_latency_ms"]["p99"]
+        row["per_token_latency_ms"]["p99"] = p99 * 10
+    bad = tmp_path / "slow.json"
+    bad.write_text(json.dumps(slow))
+    r = subprocess.run(
+        [sys.executable, str(CHECK), "--candidate", str(bad)],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode != 0

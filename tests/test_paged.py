@@ -1,0 +1,406 @@
+"""Paged-KV serving tests (DESIGN.md §Paged KV).
+
+Layers, bottom-up:
+
+* BlockAllocator / PrefixCache — pure host units (no jax).
+* PagedScheduler — admission on block availability, OOM deferral, chunk
+  budgeting, copy-on-write ownership; driven host-only with fake tokens.
+* paged_update / paged_view — device scatter/gather semantics.
+* PagedServingEngine — the headline equivalences: paged engine tokens are
+  bit-identical to the PR-1 ragged engine for ladder/standard/desync2 on a
+  mixed staggered trace with a shared prompt prefix; prefix reuse matches a
+  cold start while allocating strictly fewer fresh blocks; chunked prefill
+  matches one-shot prefill.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax
+from repro.configs import REGISTRY, ResidualMode
+from repro.models import transformer as tfm
+from repro.serving.kv_cache import (
+    BlockAllocator,
+    PrefixCache,
+    make_paged_kv_cache,
+    paged_update,
+    paged_view,
+)
+from repro.serving.scheduler import (
+    ContinuousServingEngine,
+    PagedScheduler,
+    PagedServingEngine,
+    Request,
+    SamplingParams,
+)
+
+
+# ---------------------------------------------------------------------------
+# allocator / prefix cache units (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_refcount_cycle():
+    a = BlockAllocator(num_blocks=3, block_size=4)
+    b0, b1 = a.alloc(), a.alloc()
+    assert a.num_free() == 1 and a.num_in_use() == 2
+    assert a.refcount(b0) == 1
+    a.incref(b0)
+    assert a.decref(b0) == 1  # still shared: not freeable yet
+    assert a.decref(b0) == 0
+    a.free(b0)
+    assert a.num_free() == 2
+    assert a.decref(b1) == 0
+    a.free(b1)
+    assert a.num_free() == 3 and a.total_allocs == 2
+
+
+def test_allocator_oom_raises_and_guards_double_free():
+    a = BlockAllocator(num_blocks=1, block_size=4)
+    blk = a.alloc()
+    with pytest.raises(RuntimeError):
+        a.alloc()
+    with pytest.raises(AssertionError):
+        a.free(blk)  # refcount still 1
+
+
+def test_prefix_cache_chain_lookup_and_lru_eviction():
+    pc = PrefixCache()
+    h0 = pc.chain(None, [1, 2, 3, 4])
+    h1 = pc.chain(h0, [5, 6, 7, 8])
+    assert h0 == pc.chain(None, [1, 2, 3, 4])  # deterministic
+    assert h1 != pc.chain(None, [5, 6, 7, 8])  # chained, not per-block
+    pc.insert(h0, 10)
+    pc.insert(h1, 11)
+    pc.insert(h1, 12)  # first writer wins
+    assert pc.lookup(h1) == 11 and pc.contains_block(12) is False
+    pc.mark_evictable(10)
+    pc.mark_evictable(11)
+    assert pc.num_evictable() == 2
+    pc.revive(10)  # hit while evictable: pinned again
+    assert pc.num_evictable() == 1
+    assert pc.pop_lru() == 11  # registration dropped with the block
+    assert pc.lookup(h1) is None and pc.lookup(h0) == 10
+
+
+# ---------------------------------------------------------------------------
+# scheduler host logic (no jax)
+# ---------------------------------------------------------------------------
+
+
+def _sched(n_slots=2, s_max=32, num_blocks=8, bs=4, prefix=True, **kw):
+    alloc = BlockAllocator(num_blocks, bs)
+    return PagedScheduler(
+        n_slots,
+        s_max,
+        alloc,
+        prefix_cache=PrefixCache() if prefix else None,
+        **kw,
+    )
+
+
+def _drive_prefill(s, tok=7):
+    """Run every pending chunk host-side; fake-sample `tok` on final ones."""
+    retired = []
+    for slot, chunk, start in s.prefill_work():
+        seq = s.slots[slot]
+        s.chunk_filled(slot, len(chunk))
+        if start + len(chunk) == len(seq.request.prompt):
+            if s.start_decode(slot, tok):
+                retired.append(slot)
+    return retired
+
+
+def test_scheduler_admits_on_blocks_not_slots():
+    # 2 slots but only 4 blocks of 4 tokens: the second 13-token prompt
+    # (4 prompt blocks worst-case) must defer even though a slot is free.
+    s = _sched(n_slots=2, s_max=32, num_blocks=4, bs=4, prefix=False)
+    s.submit(Request(rid=0, prompt=list(range(13)), max_new_tokens=2))
+    s.submit(Request(rid=1, prompt=list(range(13)), max_new_tokens=2))
+    assert [r.rid for _, r in s.admissions()] == [0]
+    assert s.deferred_admissions == 1 and len(s.queue) == 1
+    # rid 0 runs to retirement; its blocks come back and rid 1 admits
+    _drive_prefill(s)
+    s.ensure_decode_blocks()
+    assert s.observe(s.decoding_slots()[0], 9)  # max_new=2 -> length retire
+    assert [r.rid for _, r in s.admissions()] == [1]
+
+
+def test_scheduler_rejects_request_that_can_never_fit_the_pool():
+    # worst case needs 4 blocks but the pool only has 3: submit must raise
+    # instead of deferring at the queue head forever
+    s = _sched(n_slots=1, s_max=32, num_blocks=3, bs=4, prefix=False)
+    with pytest.raises(ValueError):
+        s.submit(Request(rid=0, prompt=list(range(13)), max_new_tokens=2))
+    s.submit(Request(rid=1, prompt=list(range(9)), max_new_tokens=2))  # fits
+
+
+def test_scheduler_deferred_admission_leaves_lru_order_alone():
+    s = _sched(n_slots=2, s_max=32, num_blocks=8, bs=4)
+    old = list(range(100, 108))  # two full blocks
+    s.submit(Request(rid=0, prompt=old + [1], max_new_tokens=1))
+    s.admissions()
+    _drive_prefill(s)  # retires; its full blocks become evictable
+    assert s.prefix.num_evictable() == 2
+    # rid 1 pins most of the pool and stays in flight
+    s.submit(Request(rid=1, prompt=list(range(13)), max_new_tokens=8))
+    s.admissions()
+    _drive_prefill(s)
+    # rid 2 hits the evictable prefix but its block budget does not fit:
+    # the failed admission attempt must not promote those blocks in the LRU
+    lru_before = list(s.prefix._evictable)
+    s.submit(Request(rid=2, prompt=old + [2, 3, 4, 5], max_new_tokens=5))
+    assert s.admissions() == []
+    assert s.deferred_admissions == 1
+    assert list(s.prefix._evictable) == lru_before
+    assert all(s.allocator.refcount(b) == 0 for b in lru_before)
+
+
+def test_scheduler_chunk_budget_bounds_per_step_prefill():
+    s = _sched(num_blocks=16, bs=4, prefix=False, max_prefill_tokens=5)
+    s.submit(Request(rid=0, prompt=list(range(12)), max_new_tokens=2))
+    s.admissions()
+    sizes = []
+    while not s.slots[0].decoding:
+        work = s.prefill_work()
+        assert sum(len(c) for _, c, _ in work) <= 5
+        sizes.append(len(work[0][1]))
+        _drive_prefill(s)
+    assert sizes == [5, 5, 2]
+
+
+def test_scheduler_prefix_hit_shares_blocks_with_refcount():
+    s = _sched(n_slots=2, s_max=32, num_blocks=8, bs=4)
+    shared = list(range(100, 108))  # 2 full blocks
+    s.submit(Request(rid=0, prompt=shared + [1, 2], max_new_tokens=2))
+    s.admissions()
+    _drive_prefill(s)  # registers the two full prompt blocks
+    s.submit(Request(rid=1, prompt=shared + [3, 4, 5], max_new_tokens=2))
+    s.admissions()
+    seq0, seq1 = s.slots[0], s.slots[1]
+    assert seq1.num_cached == 8 and seq1.blocks[:2] == seq0.blocks[:2]
+    assert all(s.allocator.refcount(b) == 2 for b in seq1.blocks[:2])
+    # rid 1's first chunk starts past the cached prefix (COW: shared full
+    # blocks are never rewritten, divergence recomputes into fresh blocks)
+    work = s.prefill_work()
+    (slot, chunk, start) = [w for w in work if w[0] == 1][0]
+    assert start == 8 and chunk == [3, 4, 5]
+    assert s.stats()["prefix_hit_rate"] > 0
+
+
+def test_scheduler_retired_prefix_blocks_stay_reusable_until_pressure():
+    s = _sched(n_slots=1, s_max=32, num_blocks=4, bs=4)
+    shared = list(range(8))
+    s.submit(Request(rid=0, prompt=shared + [1], max_new_tokens=1))
+    s.admissions()
+    _drive_prefill(s)  # max_new=1: retires at first token
+    assert s.slots[0] is None
+    assert s.prefix.num_evictable() == 2  # cached, refcount 0, reclaimable
+    s.submit(Request(rid=1, prompt=shared + [2], max_new_tokens=1))
+    s.admissions()
+    assert s.slots[0].num_cached == 8  # hit survives retirement
+
+
+# ---------------------------------------------------------------------------
+# paged pool device semantics
+# ---------------------------------------------------------------------------
+
+
+def test_paged_update_scatters_through_block_table_and_drops():
+    cache = make_paged_kv_cache(num_blocks=4, block_size=2, hkv=1, hd=4,
+                                dtype=jnp.float32)
+    bt = jnp.asarray([[3, 1], [2, 0]], jnp.int32)  # 2 rows, 2 blocks each
+    kv = jnp.stack([jnp.full((1, 1, 4), 5.0), jnp.full((1, 1, 4), 9.0)])
+    pos = jnp.asarray([[3], [-1]], jnp.int32)  # row 0 at pos 3, row 1 idle
+    cache = paged_update(cache, kv, kv, pos, bt)
+    pool = np.asarray(cache.k[0])  # (N_tok, hd)
+    assert pool[1 * 2 + 1, 0] == 5.0  # block 1, offset 1
+    assert np.abs(pool).sum() == pytest.approx(4 * 5.0)  # row 1 dropped
+    view = paged_view(cache, bt)
+    assert view.k.shape == (2, 1, 4, 4)
+    assert float(view.k[0, 0, 3, 0]) == 5.0  # logical position 3
+    assert np.array_equal(np.asarray(view.slot_pos[0]), [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# engine equivalences (the acceptance invariants)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg(mode):
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=256
+    )
+    return cfg.replace(residual_mode=ResidualMode(mode))
+
+
+def _params(cfg):
+    return tfm.init_params(cfg, jax.random.key(0))
+
+
+def _mixed_trace(vocab, rng):
+    """Variable prompt lengths, one shared system prefix, mixed sampling."""
+    shared = rng.integers(0, vocab, 16).tolist()  # 2 full blocks at bs=8
+    cases = [
+        (shared + rng.integers(0, vocab, 5).tolist(), 6, SamplingParams()),
+        (
+            shared + rng.integers(0, vocab, 9).tolist(),
+            4,
+            SamplingParams(temperature=0.8, top_k=20, top_p=0.9, seed=7),
+        ),
+        (
+            rng.integers(0, vocab, 7).tolist(),  # no shared prefix
+            5,
+            SamplingParams(temperature=1.2, seed=3),
+        ),
+        (shared + rng.integers(0, vocab, 3).tolist(), 5, SamplingParams()),
+    ]
+    return [
+        Request(rid=i, prompt=p, max_new_tokens=g, sampling=sp)
+        for i, (p, g, sp) in enumerate(cases)
+    ]
+
+
+def _clone(r):
+    return Request(
+        rid=r.rid,
+        prompt=list(r.prompt),
+        max_new_tokens=r.max_new_tokens,
+        sampling=r.sampling,
+    )
+
+
+def _serve_staggered(engine, reqs):
+    engine.submit(_clone(reqs[0]))
+    engine.submit(_clone(reqs[1]))
+    engine.step()
+    for r in reqs[2:]:
+        engine.submit(_clone(r))
+    return engine.run()
+
+
+@pytest.mark.parametrize("mode", ["ladder", "standard", "desync2"])
+def test_paged_engine_matches_ragged_engine(mode):
+    """Mixed trace (variable prompts, staggered arrivals, shared prefix):
+    the paged engine must emit token sequences bit-identical to the PR-1
+    ragged path, while prefix sharing measurably reduces fresh prefill."""
+    cfg = _tiny_cfg(mode)
+    params = _params(cfg)
+    reqs = _mixed_trace(cfg.vocab_size, np.random.default_rng(0))
+
+    ragged = ContinuousServingEngine(cfg, params, batch_slots=2, s_max=48)
+    want = _serve_staggered(ragged, reqs)
+
+    # block_size divides s_max so the gathered view width equals the ragged
+    # slot count; budget 16 forces the longer prompts to prefill chunked
+    paged = PagedServingEngine(
+        cfg,
+        params,
+        batch_slots=2,
+        s_max=48,
+        block_size=8,
+        max_prefill_tokens=16,
+    )
+    got = _serve_staggered(paged, reqs)
+
+    assert set(got) == set(want)
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, rid
+    assert paged.scheduler.prefix_hit_tokens > 0  # sharing actually engaged
+
+
+def test_prefix_reuse_matches_cold_start_with_fewer_fresh_blocks():
+    cfg = _tiny_cfg("ladder")
+    params = _params(cfg)
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, cfg.vocab_size, 24).tolist()  # 3 full blocks
+    tail = rng.integers(0, cfg.vocab_size, 6).tolist()
+    mk = lambda rid, t: Request(
+        rid=rid, prompt=shared + t, max_new_tokens=5, sampling=SamplingParams()
+    )
+
+    cold = PagedServingEngine(cfg, params, batch_slots=2, s_max=64,
+                              block_size=8)
+    cold.submit(mk(1, tail))
+    want = cold.run()[1].tokens
+
+    warm = PagedServingEngine(cfg, params, batch_slots=2, s_max=64,
+                              block_size=8)
+    warm.submit(mk(0, rng.integers(0, cfg.vocab_size, 4).tolist()))
+    warm.run()
+    warm.submit(mk(1, tail))
+    assert warm.run()[1].tokens == want  # bit-identical to cold start
+    st = warm.scheduler.request_stats
+    assert st[1]["cached_tokens"] == 24
+    assert st[1]["fresh_blocks"] < st[0]["fresh_blocks"]  # strictly fewer
+
+
+def test_chunked_prefill_matches_one_shot():
+    cfg = _tiny_cfg("ladder")
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    req = Request(
+        rid=0,
+        prompt=rng.integers(0, cfg.vocab_size, 33).tolist(),
+        max_new_tokens=6,
+        sampling=SamplingParams(temperature=0.9, top_k=30, seed=5),
+    )
+    outs = []
+    for budget in (7, 64):  # 5 chunks vs one shot
+        e = PagedServingEngine(
+            cfg,
+            params,
+            batch_slots=1,
+            s_max=48,
+            block_size=8,
+            max_prefill_tokens=budget,
+            prefix_caching=False,
+        )
+        e.submit(_clone(req))
+        outs.append(e.run()[0].tokens)
+    assert outs[0] == outs[1]
+
+
+def test_paged_engine_oom_defers_admission_but_completes():
+    cfg = _tiny_cfg("ladder")
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    eng = PagedServingEngine(
+        cfg,
+        params,
+        batch_slots=2,
+        s_max=48,
+        block_size=8,
+        num_blocks=5,  # too small for two in-flight requests
+        prefix_caching=False,
+    )
+    for rid in range(2):
+        eng.submit(
+            Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, 20).tolist(),
+                max_new_tokens=4,
+                sampling=SamplingParams(),
+            )
+        )
+    fin = eng.run()
+    assert sorted(fin) == [0, 1]  # both served, serially
+    assert eng.scheduler.deferred_admissions > 0
+
+
+def test_paged_engine_rejects_unsupported_configs():
+    cfg = REGISTRY["rwkv6-7b"].reduced(n_layers=2)
+    with pytest.raises(NotImplementedError):
+        PagedServingEngine(cfg, params=None, batch_slots=1, s_max=16)
+    from repro.configs import ParallelConfig
+
+    cfg2 = _tiny_cfg("ladder")
+    with pytest.raises(NotImplementedError):
+        PagedServingEngine(
+            cfg2,
+            params=None,
+            batch_slots=2,
+            s_max=16,
+            pcfg=ParallelConfig(tp=1, dp=2),
+        )

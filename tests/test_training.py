@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import REGISTRY, ResidualMode, TrainConfig, ParallelConfig
+from repro.configs import REGISTRY, ResidualMode, TrainConfig
 from repro.models import transformer as tfm
 from repro.parallel import tp as tpmod
 from repro.parallel.collectives import NULL_ENV
