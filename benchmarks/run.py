@@ -137,15 +137,32 @@ def roofline_table():
               f"useful={r['useful_ratio']:.2f}")
 
 
-def main() -> None:
+TABLES = {
+    "table1": table1_inference_speedup,
+    "table2": table2_latency_breakdown,
+    "figure2": figure2_throughput_sweep,
+    "figure3": figure3_cross_node_405b,
+    "table6": table6_desync,
+    "tpu": tpu_projection,
+    "roofline": roofline_table,
+}
+
+
+def main(argv=None) -> None:
+    """Run the named tables (all of them with no arguments):
+
+        python benchmarks/run.py [table1 table2 figure2 figure3 table6
+                                  tpu roofline ...]
+    """
+    names = argv if argv is not None else sys.argv[1:]
+    unknown = [n for n in names if n not in TABLES]
+    if unknown:
+        raise SystemExit(f"unknown table(s) {unknown}; "
+                         f"choose from {sorted(TABLES)}")
     print("name,us_per_call,derived")
-    table1_inference_speedup()
-    table2_latency_breakdown()
-    figure2_throughput_sweep()
-    figure3_cross_node_405b()
-    table6_desync()
-    tpu_projection()
-    roofline_table()
+    for name, fn in TABLES.items():
+        if not names or name in names:
+            fn()
 
 
 if __name__ == "__main__":

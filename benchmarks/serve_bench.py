@@ -14,6 +14,18 @@ scenarios per residual mode:
   engine's prefix-hit rate and block utilization so regressions in block
   economy are as visible as throughput regressions.
 
+With ``--spec`` (default: ngram), each scenario x residual mode also runs
+a speculative-decoding row (engine ``paged+spec-<mode>``) reporting
+accept-rate and tokens-per-forward alongside throughput.  Spec rows decode
+greedily by default (``--spec-temperature``) — the common deployment for
+speculation, and the regime where a random-init reduced model loops enough
+for prompt-lookup drafting to engage; outputs stay bit-identical to plain
+decode either way (DESIGN.md §Speculative decoding).  A ``paged-greedy``
+plain row runs at the SAME temperature as the spec rows so the speculation
+win reads apples-to-apples (the sampled ``paged`` row pays the full-vocab
+sort/gumbel path the greedy dispatch skips — comparing spec against it
+would conflate the two effects).
+
 On CPU at TP=1 the residual modes execute the same collectives (none), so
 the comparison is an engine-overhead / correctness harness here and becomes
 a communication-overlap measurement on a real TP mesh.
@@ -46,24 +58,42 @@ def _percentiles(xs, ps=(50, 99)):
     return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
-def _make_engine(cfg, params, args, s_max):
+def _make_engine(cfg, params, args, s_max, spec: str):
+    """Engine for one bench row: ragged oracle, plain paged, or paged with
+    the requested speculative drafter."""
     if args.engine == "ragged":
         return sched.ContinuousServingEngine(
             cfg, params, batch_slots=args.slots, s_max=s_max,
             max_prefills_per_step=1)
+    if spec != "off":
+        from repro.serving.speculative import (SpeculativePagedEngine,
+                                               derive_draft_cfg)
+        kw = {}
+        if spec == "draft":
+            dcfg = derive_draft_cfg(cfg, max(1, args.layers // 2))
+            kw = dict(draft_cfg=dcfg,
+                      draft_params=tfm.init_params(dcfg, jax.random.key(1)))
+        return SpeculativePagedEngine(
+            cfg, params, batch_slots=args.slots, s_max=s_max,
+            block_size=args.block_size,
+            max_prefill_tokens=args.prefill_budget,
+            spec_mode=spec, spec_k=args.spec_k, **kw)
     return sched.PagedServingEngine(
         cfg, params, batch_slots=args.slots, s_max=s_max,
         block_size=args.block_size,
         max_prefill_tokens=args.prefill_budget)
 
 
-def bench_mode(mode: str, scenario: str, args) -> dict:
+def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
+    """One bench row.  `variant` is (engine_label, spec_mode, temperature);
+    None means the plain engine at the sampled default."""
+    label, spec, temperature = variant or (args.engine, "off",
+                                           args.temperature)
     cfg = REGISTRY[args.arch].reduced(
         n_layers=args.layers, d_model=args.d_model, n_heads=4,
-        d_ff=2 * args.d_model, vocab_size=1024,
+        d_ff=2 * args.d_model, vocab_size=args.vocab,
     ).replace(residual_mode=ResidualMode(mode))
     params = tfm.init_params(cfg, jax.random.key(0))
-
     shared = []
     if scenario == "shared_prefix":
         rng = np.random.default_rng(args.seed + 1)
@@ -71,14 +101,15 @@ def bench_mode(mode: str, scenario: str, args) -> dict:
     s_max = len(shared) + args.max_prompt + args.max_new + 1
     trace = sched.poisson_trace(
         args.requests, args.rate, seed=args.seed,
-        prompt_lens=(4, args.max_prompt), max_new=(2, args.max_new),
+        prompt_lens=(4, args.max_prompt),
+        max_new=(max(2, args.max_new // 2), args.max_new),
         vocab=cfg.vocab_size,
         sampling=lambda rid: sched.SamplingParams(
-            temperature=args.temperature, top_k=40, top_p=0.95, seed=rid))
+            temperature=temperature, top_k=40, top_p=0.95, seed=rid))
     for r in trace:
         r.prompt = shared + r.prompt
 
-    engine = _make_engine(cfg, params, args, s_max)
+    engine = _make_engine(cfg, params, args, s_max, spec)
 
     # warmup: compile EVERY prefill bucket + the decode graph outside the
     # timed run (jit caches are shared through the process-wide tracing cache
@@ -92,7 +123,7 @@ def bench_mode(mode: str, scenario: str, args) -> dict:
     for i, lp in enumerate(lengths):
         engine.submit(sched.Request(
             rid=-1 - i, prompt=[1] * min(lp, s_max - 2), max_new_tokens=2,
-            sampling=sched.SamplingParams(temperature=args.temperature)))
+            sampling=sched.SamplingParams(temperature=temperature)))
     engine.run()
     engine.scheduler.finished.clear()
     if hasattr(engine, "reset_stats"):
@@ -112,7 +143,7 @@ def bench_mode(mode: str, scenario: str, args) -> dict:
     n_tok = sum(len(f.tokens) for f in finished.values())
 
     row = dict(
-        mode=mode, scenario=scenario, engine=args.engine, arch=args.arch,
+        mode=mode, scenario=scenario, engine=label, arch=args.arch,
         requests=len(trace), completed=len(finished), slots=args.slots,
         tokens=n_tok,
         wall_s=round(wall, 4),
@@ -129,6 +160,13 @@ def bench_mode(mode: str, scenario: str, args) -> dict:
             block_allocs=st["total_block_allocs"],
             deferred_admissions=st["deferred_admissions"],
         )
+    if spec != "off":
+        row.update(
+            accept_rate=round(st["accept_rate"], 4),
+            tokens_per_forward=round(st["tokens_per_forward"], 4),
+            verify_forwards=st["verify_forwards"],
+            rolled_back_blocks=st["rolled_back_blocks"],
+        )
     assert len(finished) == len(trace), "requests dropped"
     return row
 
@@ -142,12 +180,23 @@ def main():
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=48)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--shared-len", type=int, default=32,
                     help="system-prompt length for the shared_prefix "
                          "scenario")
+    ap.add_argument("--vocab", type=int, default=256,
+                    help="reduced vocab size (small enough that greedy "
+                         "decode of a random-init model develops the loops "
+                         "prompt-lookup drafting feeds on)")
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--prefill-budget", type=int, default=128)
+    ap.add_argument("--spec", default="ngram",
+                    help="comma list of speculative rows to add per "
+                         "scenario/mode (ngram, draft); 'off' disables")
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--spec-temperature", type=float, default=0.0,
+                    help="sampling temperature for the speculative rows "
+                         "(greedy by default)")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.7)
@@ -158,9 +207,18 @@ def main():
                                          / "results" / "serve_bench.json"))
     args = ap.parse_args()
 
-    rows = [bench_mode(m.strip(), sc.strip(), args)
+    variants = [(args.engine, "off", args.temperature)]
+    if args.engine == "paged" and args.spec != "off":
+        # a plain greedy row at the spec temperature (apples-to-apples
+        # counterpart), then one row per requested drafter
+        variants.append(("paged-greedy", "off", args.spec_temperature))
+        variants += [(f"paged+spec-{sp}", sp, args.spec_temperature)
+                     for sp in (x.strip() for x in args.spec.split(","))
+                     if sp]
+    rows = [bench_mode(m.strip(), sc.strip(), args, variant=v)
             for sc in args.scenarios.split(",")
-            for m in args.modes.split(",")]
+            for m in args.modes.split(",")
+            for v in variants]
     record = dict(bench="serve_bench", config=vars(args), rows=rows)
 
     out = Path(args.out)
@@ -171,7 +229,10 @@ def main():
         extra = (f" hit={r['prefix_hit_rate']:.2f} "
                  f"util={r['block_util_mean']:.2f}"
                  if "prefix_hit_rate" in r else "")
-        print(f"serve_bench/{r['scenario']}/{r['mode']},"
+        if "accept_rate" in r:
+            extra += (f" accept={r['accept_rate']:.2f} "
+                      f"tok/fwd={r['tokens_per_forward']:.2f}")
+        print(f"serve_bench/{r['scenario']}/{r['engine']}/{r['mode']},"
               f"{1e6 / max(r['tokens_per_s'], 1e-9):.1f},"
               f"tok_per_s={r['tokens_per_s']} "
               f"p50={r['per_token_latency_ms']['p50']:.2f}ms "

@@ -35,8 +35,9 @@ ROOT = Path(__file__).resolve().parents[1]
 # baseline config keys replayed to serve_bench.py on --run (apples-to-apples)
 _REPLAY = [
     "arch", "engine", "requests", "rate", "slots", "max_prompt", "max_new",
-    "shared_len", "block_size", "prefill_budget", "layers", "d_model",
-    "temperature", "seed", "modes", "scenarios",
+    "shared_len", "vocab", "block_size", "prefill_budget", "layers",
+    "d_model", "temperature", "seed", "modes", "scenarios",
+    "spec", "spec_k", "spec_temperature",
 ]
 
 

@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Docs smoke-runner: keep the README quickstart executable.
+
+Extracts fenced ```bash code blocks from README.md (and any other files
+passed on the command line) and executes each one with `bash -euo pipefail`
+from the repo root, PYTHONPATH=src preset.  A block whose text contains a
+line starting with `# docs: skip` is listed but not executed — use it for
+blocks that are slow (the full test tier), need network (pip install), or
+duplicate another CI job.
+
+This is the `scripts/ci.sh --docs` gate (DESIGN.md §Bench/CI): if a
+README command rots — a renamed flag, a moved module, a deleted entry
+point — the docs job fails instead of the next reader.
+
+Usage:
+    python scripts/check_docs.py                 # README.md + docs/serving.md
+    python scripts/check_docs.py --list          # show blocks + skip status
+    python scripts/check_docs.py docs/foo.md     # specific files only
+"""
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# ```bash ... ``` fences; the info string must be exactly `bash` (other
+# languages and plain fences are documentation, not executable contract)
+_FENCE = re.compile(r"^```bash[ \t]*\n(.*?)^```[ \t]*$",
+                    re.MULTILINE | re.DOTALL)
+_SKIP = re.compile(r"^\s*#\s*docs:\s*skip", re.MULTILINE)
+
+
+@dataclass
+class Block:
+    source: str     # file the block came from
+    index: int      # 1-based position among that file's bash blocks
+    text: str
+
+    @property
+    def skipped(self) -> bool:
+        return bool(_SKIP.search(self.text))
+
+    @property
+    def title(self) -> str:
+        first = next((ln for ln in self.text.splitlines()
+                      if ln.strip() and not ln.lstrip().startswith("#")),
+                     "(comment-only block)")
+        return f"{self.source}#{self.index}: {first.strip()}"
+
+
+def extract_blocks(path: Path) -> List[Block]:
+    text = path.read_text()
+    rel = str(path.relative_to(ROOT)) if path.is_relative_to(ROOT) \
+        else str(path)
+    return [Block(source=rel, index=i + 1, text=m)
+            for i, m in enumerate(_FENCE.findall(text))]
+
+
+def run_block(block: Block, timeout: float) -> bool:
+    t0 = time.monotonic()
+    try:
+        proc = subprocess.run(
+            ["bash", "-euo", "pipefail", "-c", block.text],
+            cwd=ROOT, capture_output=True, text=True, timeout=timeout,
+            env={**os.environ, "PYTHONPATH": str(ROOT / "src")})
+    except subprocess.TimeoutExpired:
+        # a hung block is a FAIL, not a crash: report it and keep checking
+        # the remaining blocks so the summary stays complete
+        print(f"FAIL [{time.monotonic() - t0:5.1f}s] {block.title} "
+              f"(timed out after {timeout:.0f}s)")
+        return False
+    dt = time.monotonic() - t0
+    ok = proc.returncode == 0
+    print(f"{'ok  ' if ok else 'FAIL'} [{dt:5.1f}s] {block.title}")
+    if not ok:
+        sys.stdout.write(proc.stdout[-2000:])
+        sys.stdout.write(proc.stderr[-2000:])
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=[],
+                    help="markdown files to check (default: README.md "
+                         "and docs/serving.md)")
+    ap.add_argument("--list", action="store_true",
+                    help="list extracted blocks without running them")
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="per-block timeout in seconds")
+    args = ap.parse_args(argv)
+
+    files = [Path(f) for f in args.files] or \
+        [ROOT / "README.md", ROOT / "docs" / "serving.md"]
+    blocks: List[Block] = []
+    for f in files:
+        if not f.exists():
+            print(f"FAIL {f}: no such file")
+            return 1
+        blocks.extend(extract_blocks(f))
+    if not blocks:
+        print(f"FAIL: no ```bash blocks found in {', '.join(map(str, files))}"
+              " (quickstart gone missing?)")
+        return 1
+
+    failures = 0
+    ran = 0
+    for b in blocks:
+        if b.skipped:
+            print(f"skip          {b.title}")
+            continue
+        ran += 1
+        if args.list:
+            print(f"run           {b.title}")
+        elif not run_block(b, args.timeout):
+            failures += 1
+    if ran == 0:
+        print("FAIL: every block is marked '# docs: skip' — nothing "
+              "guards the quickstart")
+        return 1
+    print(f"{len(blocks)} block(s), {ran} run, {failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,11 +6,12 @@
 #   scripts/ci.sh            # fast tier (pre-merge gate)
 #   scripts/ci.sh --full     # fast + slow (everything)
 #   scripts/ci.sh --lint     # ruff lint + format ratchet (no tests)
+#   scripts/ci.sh --docs     # smoke-run README quickstart code blocks
 #
 # Extra args are forwarded to pytest, e.g. `scripts/ci.sh -k scheduler`.
 # .github/workflows/ci.yml runs the fast tier on every push/PR (two jax
-# versions), --lint alongside it, and --full + the serve-bench regression
-# gate (scripts/check_bench.py) nightly.
+# versions), --lint and --docs alongside it, and --full + the serve-bench
+# regression gate (scripts/check_bench.py) nightly.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,6 +22,12 @@ if [[ "${1:-}" == "--lint" ]]; then
     # `ruff format`; extend this list as older files get reformatted.
     python -m ruff format --check \
         scripts/check_bench.py tests/test_paged.py tests/test_ci_pipeline.py
+    exit 0
+fi
+
+if [[ "${1:-}" == "--docs" ]]; then
+    shift
+    python scripts/check_docs.py "$@"
     exit 0
 fi
 

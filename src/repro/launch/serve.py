@@ -42,6 +42,17 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=128,
                     help="paged engine: max prompt tokens prefilled per "
                          "engine step (chunked prefill)")
+    ap.add_argument("--spec-decode", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decoding on the paged engine: ngram "
+                         "(prompt-lookup self-speculation) or draft (small "
+                         "draft transformer); output tokens are "
+                         "bit-identical to off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per step")
+    ap.add_argument("--draft-layers", type=int, default=2,
+                    help="--spec-decode draft: layer count of the "
+                         "config-derived draft model (same arch, reduced)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64,
                     help="max prompt length (lengths are uniform in "
@@ -87,16 +98,34 @@ def main():
     s_max = args.prompt_len + args.gen + 1
     engine = None
     kind = args.engine
+    if args.spec_decode != "off" and kind == "ragged":
+        raise SystemExit("--spec-decode requires the paged engine")
     if kind != "ragged":
         try:
-            engine = sched.PagedServingEngine(
-                cfg, params, batch_slots=args.slots, s_max=s_max, pcfg=pcfg,
-                mesh=mesh, block_size=args.block_size,
+            paged_kw = dict(
+                batch_slots=args.slots, s_max=s_max, pcfg=pcfg, mesh=mesh,
+                block_size=args.block_size,
                 num_blocks=args.num_blocks or None,
                 max_prefill_tokens=args.prefill_budget)
-            kind = "paged"
+            if args.spec_decode != "off":
+                from repro.serving.speculative import (
+                    SpeculativePagedEngine, derive_draft_cfg)
+                spec_kw = {}
+                if args.spec_decode == "draft":
+                    dcfg = derive_draft_cfg(cfg, args.draft_layers)
+                    spec_kw = dict(
+                        draft_cfg=dcfg,
+                        draft_params=tfm.init_params(dcfg,
+                                                     jax.random.key(1)))
+                engine = SpeculativePagedEngine(
+                    cfg, params, spec_mode=args.spec_decode,
+                    spec_k=args.spec_k, **spec_kw, **paged_kw)
+                kind = f"paged+spec:{args.spec_decode}"
+            else:
+                engine = sched.PagedServingEngine(cfg, params, **paged_kw)
+                kind = "paged"
         except NotImplementedError as e:
-            if args.engine == "paged":
+            if args.engine == "paged" or args.spec_decode != "off":
                 raise
             print(f"[serve] paged engine unavailable ({e}); using ragged")
     if engine is None:
@@ -137,13 +166,18 @@ def main():
     print(f"[serve] {len(finished)}/{len(trace)} requests, {n_tok} tokens "
           f"in {wall:.2f}s ({n_tok / max(wall, 1e-9):.1f} tok/s) "
           f"engine={kind} slots={args.slots} tp={args.tp} dp={args.dp}")
-    if kind == "paged":
+    if kind.startswith("paged"):
         st = engine.stats()
         print(f"[serve] paged: prefix_hit_rate={st['prefix_hit_rate']:.2f} "
               f"block_util mean={st['block_util_mean']:.2f} "
               f"peak={st['block_util_peak']:.2f} "
               f"allocs={st['total_block_allocs']} "
               f"deferred={st['deferred_admissions']}")
+        if "accept_rate" in st:
+            print(f"[serve] spec: accept_rate={st['accept_rate']:.2f} "
+                  f"tokens_per_forward={st['tokens_per_forward']:.2f} "
+                  f"verify_forwards={st['verify_forwards']} "
+                  f"rolled_back_blocks={st['rolled_back_blocks']}")
     for f in list(finished.values())[:4]:
         print(f"[serve] rid={f.rid} prompt={len(f.prompt)} "
               f"-> {len(f.tokens)} toks ({f.finish_reason}): "

@@ -42,20 +42,26 @@ class AxisEnv:
 
     @property
     def tp(self) -> int:
+        """Tensor-parallel degree (1 outside a model-axis shard_map)."""
         return _axis_size(self.model) if self.model else 1
 
     @property
     def dp(self) -> int:
+        """Data-parallel degree of the `data` axis alone (see dp_total)."""
         return _axis_size(self.data) if self.data else 1
 
     def model_axis_index(self):
+        """This shard's index on the model axis (0 when unsharded)."""
         return jax.lax.axis_index(self.model) if self.model else 0
 
     def data_axis_index(self):
+        """This shard's index on the data axis (0 when unsharded)."""
         return jax.lax.axis_index(self.data) if self.data else 0
 
     # ---- collectives over the tensor-parallel axis ------------------------
     def psum_model(self, x):
+        """AllReduce over TP shards — THE collective the ladder topology
+        overlaps; identity when unsharded."""
         return jax.lax.psum(x, self.model) if self.model else x
 
     def pmax_model(self, x):
@@ -67,11 +73,13 @@ class AxisEnv:
         return jnp.max(jax.lax.all_gather(x, self.model), axis=0)
 
     def all_gather_model(self, x, axis: int = 0, tiled: bool = True):
+        """Concatenate TP shards along `axis` (tiled: no new leading dim)."""
         if not self.model:
             return x
         return jax.lax.all_gather(x, self.model, axis=axis, tiled=tiled)
 
     def reduce_scatter_model(self, x, axis: int = 0):
+        """Sum over TP shards, each keeping its `axis` slice (SP exit)."""
         if not self.model:
             return x
         return jax.lax.psum_scatter(x, self.model, scatter_dimension=axis,
@@ -85,6 +93,7 @@ class AxisEnv:
 
     @property
     def dp_total(self) -> int:
+        """Joint data-parallel degree over the (pod, data) axes."""
         n = 1
         for a in self._dp_axes():
             n *= _axis_size(a)
@@ -98,29 +107,37 @@ class AxisEnv:
         return idx
 
     def all_gather_dp(self, x, axis: int = 0, tiled: bool = False):
+        """Gather over the joint (pod, data) grid (flash-decode combine)."""
         axes = self._dp_axes()
         return jax.lax.all_gather(x, axes, axis=axis, tiled=tiled) \
             if axes else x
 
     def psum_dp(self, x):
+        """Sum over the joint (pod, data) grid."""
         axes = self._dp_axes()
         return jax.lax.psum(x, axes) if axes else x
 
     def pmean_grads(self, tree):
+        """Mean every gradient leaf over the DP grid (the train-step
+        gradient sync; see compression.compressed_pmean for the EF-int8
+        variant)."""
         axes = self._dp_axes()
         if not axes:
             return tree
         return jax.tree.map(lambda g: jax.lax.pmean(g, axes), tree)
 
     def psum_data(self, x):
+        """Alias of psum_dp (metric reductions read better with it)."""
         axes = self._dp_axes()
         return jax.lax.psum(x, axes) if axes else x
 
     def pmean_data(self, x):
+        """Mean over the joint (pod, data) grid (loss/metric averaging)."""
         axes = self._dp_axes()
         return jax.lax.pmean(x, axes) if axes else x
 
     def all_gather_data(self, x, axis: int = 0, tiled: bool = True):
+        """Gather over the `data` axis only (not pod)."""
         if not self.data:
             return x
         return jax.lax.all_gather(x, self.data, axis=axis, tiled=tiled)
@@ -130,11 +147,15 @@ class AxisEnv:
     # Blocks all-gather the sequence at entry and reduce-scatter at exit;
     # the reduce-scatter plays the AllReduce's role in the Ladder schedule.
     def sp_gather(self, x, seq_axis: int = 1):
+        """SP block entry: all-gather the seq-sharded residual stream
+        ((B, S/tp, D) -> (B, S, D)); identity with SP off."""
         if self.sp and self.model:
             return jax.lax.all_gather(x, self.model, axis=seq_axis, tiled=True)
         return x
 
     def sp_reduce(self, x, seq_axis: int = 1):
+        """SP block exit: reduce-scatter back to (B, S/tp, D) — plays the
+        AllReduce's role in the ladder schedule; plain psum with SP off."""
         if self.sp and self.model:
             return jax.lax.psum_scatter(x, self.model,
                                         scatter_dimension=seq_axis, tiled=True)

@@ -38,6 +38,8 @@ def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def dequantize_int8(q, scale, shape) -> jnp.ndarray:
+    """Inverse of quantize_int8: (q (N/B, B) int8, scale (N/B,)) back to a
+    float32 array of `shape` (padding introduced by blocking is dropped)."""
     flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
     n = 1
     for d in shape:
@@ -81,5 +83,7 @@ def topk_sparsify(g: jnp.ndarray, k_frac: float = 0.01):
 
 
 def topk_densify(vals, idx, n, shape):
+    """Inverse of topk_sparsify: scatter (vals, idx) back into a dense
+    zero-filled array of `shape` (n = flattened element count)."""
     flat = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
     return flat.reshape(shape)

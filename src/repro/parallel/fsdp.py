@@ -62,6 +62,8 @@ def _model_dim(spec: P) -> int:
 
 
 def local_shape(full_shape, spec: P, tp: int) -> Tuple[int, ...]:
+    """Per-TP-shard shape of a global array: the dim carrying 'model' in
+    `spec` divides by tp, everything else is unchanged."""
     dims = list(full_shape)
     md = _model_dim(spec)
     if md >= 0:
@@ -178,6 +180,9 @@ def flatten_sections_host_q8(sections, pspecs_sections, tp: int, dp: int):
 
 
 def flat_pspecs_q8(pspecs_sections):
+    """PartitionSpecs for the int8-flat layout: each leaf becomes a
+    {q, s} dict flat-sharded over ('model', 'data') (or 'data' when the
+    original leaf was replicated across TP)."""
     def fspec(spec):
         ax = ("model", "data") if spec_has(spec, "model") else "data"
         return dict(q=P(None, ax), s=P(None, ax))

@@ -37,6 +37,9 @@ from repro.configs.base import ModelConfig
 
 @dataclass(frozen=True)
 class HeadPlan:
+    """How query/KV heads map onto TP shards: effective (padded or
+    replicated) head counts plus eff-slot -> original-head index maps
+    (-1 marks a zero pad).  Produced by ``tp_head_plan``."""
     tp: int
     h_eff: int                 # padded query-head count (divisible by tp)
     kv_eff: int                # replicated/padded kv-head count
@@ -50,6 +53,9 @@ class HeadPlan:
 
 
 def tp_head_plan(n_heads: int, n_kv: int, tp: int) -> HeadPlan:
+    """Head layout for `tp` shards: exact split when tp | n_kv, KV
+    replication when n_kv < tp | n_kv * r, zero-padding of both maps
+    otherwise — callers size caches with hp.kv_eff, not cfg.n_kv_heads."""
     g = n_heads // n_kv
     if n_kv % tp == 0:
         return HeadPlan(tp, n_heads, n_kv, tuple(range(n_heads)),
@@ -211,6 +217,8 @@ def _pad_mask(new, old, name, plan: HeadPlan, hd, cfg):
 
 
 def apply_masks(tree, masks):
+    """Re-zero padded head slots after an optimizer step (masks from
+    prepare_params_for_tp; None = nothing padded)."""
     if masks is None:
         return tree
     return jax.tree.map(lambda t, m: t * m.astype(t.dtype), tree, masks)

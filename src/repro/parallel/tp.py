@@ -35,6 +35,8 @@ from repro.training import optimizer as opt
 
 
 def make_axis_env(pcfg: ParallelConfig) -> AxisEnv:
+    """AxisEnv naming only the mesh axes `pcfg` actually uses (absent
+    axes stay None so collectives degrade to identity)."""
     return AxisEnv(
         model="model" if pcfg.tp > 1 else None,
         data="data" if pcfg.dp > 1 else None,
@@ -251,6 +253,9 @@ def _batch_specs(cfg: ModelConfig, pcfg: ParallelConfig):
 
 def opt_state_pspecs(cfg: ModelConfig, pspecs, *, zero1: bool,
                      pcfg: ParallelConfig):
+    """PartitionSpecs for the AdamW state: moments/master follow the
+    parameter specs; with ZeRO-1 they are flat-sharded over the joint
+    ('model', 'data') grid instead (each shard owns a 1/world slice)."""
     if not zero1:
         return opt.AdamWState(
             step=P(), mu=jax.tree.map(lambda s: s, pspecs),

@@ -1,9 +1,21 @@
-"""Serving engine: prefill / decode steps over the sharded mesh.
+"""Serving engine: jitted prefill / decode / verify steps for every cache
+regime.
 
 ``build_caches`` mirrors the assembler's section plan so cache pytrees line
-up with the scanned parameter stacks.  ``build_serve_steps`` returns
-shard_map'ped prefill/decode functions plus the global specs of every input —
-the multi-pod dry-run lowers exactly these.
+up with the scanned parameter stacks.  Three step families share it:
+
+* ``build_serve_steps``       — uniform-batch prefill/decode (the paper's
+  benchmark shape); shard_map'ped, the multi-pod dry-run lowers exactly
+  these.
+* ``build_continuous_steps``  — ragged-cache steps for the
+  continuous-batching engine (per-row ``slot_pos``; DESIGN.md §Serving).
+* ``build_paged_steps``       — block-pool steps (``block_tables`` threaded
+  through ``tfm.forward``; DESIGN.md §Paged KV) plus the speculative
+  ``verify`` steps (DESIGN.md §Speculative decoding).
+
+Each builder's docstring is the shape contract for the closures it
+returns; the host-side drivers live in serving/scheduler.py and
+serving/speculative.py.
 
 Long-context decode (long_500k, global_batch=1) cannot use the data axis for
 batch DP, so the KV cache is sharded over the *sequence* on the data axis and
@@ -351,8 +363,22 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
         table row.  Inactive rows run at position -1 (writes dropped, token
         discarded).  Returns (caches, toks (B,)).
 
+    verify(params, caches, tokens, pos, active, klen, bts, temp, top_k,
+           top_p, seeds)
+        Speculative verification (serving/speculative.py): tokens (B, K+1)
+        holds [last sampled token, draft_1..draft_K] per row, right-padded;
+        row b runs its first klen[b] tokens at positions pos[b]..pos[b]+
+        klen[b]-1 through its block table (padding/inactive rows at -1,
+        writes dropped).  Returns (caches, tgt (B, K+1)) where tgt[b, i] is
+        the token the TARGET model samples for position pos[b]+1+i — the
+        exact token the plain decode step would emit given the same prefix,
+        because the sampling key folds (seed, absolute position).  The host
+        walks tgt against the drafts to find the accepted length
+        (DESIGN.md §Speculative decoding).
+
     Sampling keys fold (request seed, absolute position) exactly like the
-    ragged engine, so paged and ragged serving emit identical tokens.
+    ragged engine, so paged and ragged serving emit identical tokens — and
+    speculative verification emits identical tokens to step-by-step decode.
     """
     env = make_axis_env(pcfg)
     pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
@@ -398,10 +424,51 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
         toks = sampler.greedy(logits[:, 0], env, cfg.vocab_size)
         return caches, toks
 
+    def _verify_body(params, caches, tokens, pos, active, klen, bts):
+        # tokens: (B, K1); row b's valid span is its first klen[b] entries,
+        # run at absolute positions pos[b] + 0..klen[b]-1.  Padding and
+        # inactive rows run at -1: K/V writes drop and outputs are garbage
+        # the host never reads.  Causality among the fresh tokens comes from
+        # the paged attention mask (slot s attends iff s <= query position).
+        b, k1 = tokens.shape
+        ar = jnp.arange(k1)[None, :]
+        positions = jnp.where(active[:, None] & (ar < klen[:, None]),
+                              pos[:, None] + ar, -1)          # (B, K1)
+        hidden, caches, _ = tfm.forward(cfg, params, tokens, env,
+                                        positions=positions, caches=caches,
+                                        block_tables=bts)
+        return hidden, caches
+
+    def verify(params, caches, tokens, pos, active, klen, bts, temp, top_k,
+               top_p, seeds):
+        hidden, caches = _verify_body(params, caches, tokens, pos, active,
+                                      klen, bts)
+        b, k1 = tokens.shape
+        logits = tfm.logits_shard(cfg, params, hidden)        # (B, K1, Vl)
+        # tgt[b, i] samples position pos[b]+1+i with the SAME key the plain
+        # decode step would fold there — bit-identical verification.
+        steps = (pos[:, None] + 1 + jnp.arange(k1)[None, :]).reshape(-1)
+        keys = sampler.request_keys(base_key, jnp.repeat(seeds, k1), steps)
+        toks = sampler.sample_tokens(
+            logits.reshape(b * k1, -1), env, cfg.vocab_size, keys,
+            jnp.repeat(temp, k1), jnp.repeat(top_k, k1),
+            jnp.repeat(top_p, k1))
+        return caches, toks.reshape(b, k1)
+
+    def verify_greedy(params, caches, tokens, pos, active, klen, bts):
+        hidden, caches = _verify_body(params, caches, tokens, pos, active,
+                                      klen, bts)
+        logits = tfm.logits_shard(cfg, params, hidden)
+        toks = sampler.greedy(logits, env, cfg.vocab_size)    # (B, K1)
+        return caches, toks
+
     return dict(prefill_chunk=prefill_chunk, decode=decode,
-                decode_greedy=decode_greedy, env=env, pspecs=pspecs)
+                decode_greedy=decode_greedy, verify=verify,
+                verify_greedy=verify_greedy, env=env, pspecs=pspecs)
 
 
 def shard_mapped(fn, mesh, in_specs, out_specs):
+    """shard_map `fn` over `mesh` via the jax-version shims
+    (parallel/compat.py) — convenience for callers outside this module."""
     from repro.parallel import compat
     return compat.shard_map(fn, mesh, in_specs, out_specs)

@@ -164,6 +164,10 @@ def make_mla_cache(batch: int, s_max: int, lora: int, rope_d: int, dtype,
                    lead: Tuple[int, ...] = (), alloc=_alloc_default,
                    seq_sharded_model: bool = False,
                    ragged: bool = False) -> MLACache:
+    """Compressed-latent MLA cache: c_kv (*lead, B, S, lora) + k_rope
+    (*lead, B, S, rope_d).  ragged adds the batch dim to slot_pos
+    ((*lead, B, S) instead of (*lead, S)); seq_sharded_model shards the
+    SEQUENCE over the model axis (MLA flash-decode) and is uniform-only."""
     if ragged and seq_sharded_model:
         raise NotImplementedError("ragged + model-seq-sharded MLA cache")
     sp_shape = (*lead, batch, s_max) if ragged else (*lead, s_max)
@@ -176,6 +180,10 @@ def make_mla_cache(batch: int, s_max: int, lora: int, rope_d: int, dtype,
 
 def make_mamba_state(batch: int, n_heads: int, d_state: int, hd: int,
                      d_conv: int, dtype, lead=(), alloc=_alloc_default):
+    """O(1)-per-token recurrent state: ssm state h (*lead, B, H, N, hd) in
+    f32 plus three conv shift buffers of the last d_conv-1 inputs.  Batch
+    on axis 1 (after `lead`) like every cache leaf, so the slot
+    slice/insert helpers apply unchanged."""
     d_inner = n_heads * hd
     return dict(
         h=alloc((*lead, batch, n_heads, d_state, hd), jnp.float32),
@@ -186,12 +194,16 @@ def make_mamba_state(batch: int, n_heads: int, d_state: int, hd: int,
 
 def make_rwkv_tmix_state(batch: int, n_heads: int, hd: int, d_model: int,
                          dtype, lead=(), alloc=_alloc_default):
+    """RWKV time-mix state: wkv (*lead, B, H, hd, hd) f32 + token-shift
+    buffer (*lead, B, d_model)."""
     return dict(wkv=alloc((*lead, batch, n_heads, hd, hd), jnp.float32),
                 shift=alloc((*lead, batch, d_model), dtype))
 
 
 def make_rwkv_cmix_state(batch: int, d_model: int, dtype, lead=(),
                          alloc=_alloc_default):
+    """RWKV channel-mix state: just the token-shift buffer
+    (*lead, B, d_model)."""
     return dict(shift=alloc((*lead, batch, d_model), dtype))
 
 
@@ -297,6 +309,9 @@ def cache_update(cache: KVCache, k_new, v_new, positions,
 
 def mla_cache_update(cache: MLACache, c_kv, k_rope, positions,
                      env: AxisEnv = None) -> MLACache:
+    """Write compressed latents at `positions` ((B, S); -1 drops) — the MLA
+    analogue of ``cache_update``: per-row scatters when slot_pos is ragged
+    (2-D), model-axis offset when the latent cache is seq-sharded."""
     slots_total = cache.c_kv.shape[1]
     if cache.slot_pos.ndim == 2:                    # ragged: per-row writes
         slot = positions                            # (B, S)

@@ -7,6 +7,12 @@ with seeded PRNG for the continuous-batching engine; top-k/top-p need a
 global sort, so under TP it gathers the full (B, V) logits first — an
 accepted cost: B is the slot count and the gather is off the ladder's
 critical path (it happens after the final block's AllReduce).
+
+Because every key folds (request seed, absolute position), sampling is a
+deterministic function of (logits, seed, position) — the property the
+speculative verify step exploits to make draft acceptance exact
+(DESIGN.md §Speculative decoding).  ``rejection_sample`` is the standard
+stochastic accept rule for general (target, draft) distribution pairs.
 """
 
 from __future__ import annotations
@@ -91,6 +97,52 @@ def _apply_top_p(logits, top_p):
     inv = jnp.argsort(idx, axis=-1)
     keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
     return jnp.where(keep, logits, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding (serving/speculative.py)
+# ---------------------------------------------------------------------------
+
+def rejection_sample(keys, target_logits, draft_logits, draft_tokens):
+    """Standard speculative-sampling accept rule (Leviathan et al. 2023).
+
+    Per batch row: accept ``draft_tokens[b]`` with probability
+    ``min(1, p(draft) / q(draft))`` where p/q are the target/draft softmax
+    distributions; on rejection, resample from the residual
+    ``normalize(max(p - q, 0))``.  The emitted token is then an exact sample
+    from p regardless of how bad q is — the classic correctness guarantee.
+
+    keys: (B,) typed PRNG keys (one per row; split internally for the
+    accept test and the residual draw).
+    target_logits / draft_logits: (B, V) full, unsharded logits.
+    draft_tokens: (B,) int32 proposals (assumed drawn from q, so
+    q(draft) > 0).
+    Returns (accepted (B,) bool, tokens (B,) int32).
+
+    The ENGINE does not call this: with Gumbel noise pinned to (seed,
+    position) the coupled-randomness form of this rule degenerates to exact
+    token match (DESIGN.md §Speculative decoding), which is what the verify
+    step implements.  This standalone form is the general-distribution API
+    and is pinned empirically by tests/test_speculative.py.
+    """
+    p = jax.nn.softmax(target_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.softmax(draft_logits.astype(jnp.float32), axis=-1)
+    pd = jnp.take_along_axis(p, draft_tokens[:, None], axis=-1)[:, 0]
+    qd = jnp.take_along_axis(q, draft_tokens[:, None], axis=-1)[:, 0]
+    k_acc = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+    k_res = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(k_acc)
+    accepted = u * qd <= pd                       # u <= p/q without division
+    residual = jnp.maximum(p - q, 0.0)
+    mass = jnp.sum(residual, axis=-1, keepdims=True)
+    # p == q: residual is empty but acceptance is certain; fall back to p so
+    # the (never-used) resample branch still has a valid distribution
+    residual = jnp.where(mass > 0, residual / jnp.maximum(mass, 1e-30), p)
+    g = jax.vmap(lambda k: jax.random.gumbel(k, p.shape[-1:], jnp.float32))(
+        k_res)
+    resampled = jnp.argmax(jnp.log(jnp.maximum(residual, 1e-30)) + g,
+                           axis=-1)
+    return accepted, jnp.where(accepted, draft_tokens, resampled)
 
 
 def sample_tokens(logits_shard, env: AxisEnv, true_vocab: int, keys,

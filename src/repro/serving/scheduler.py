@@ -20,15 +20,21 @@ Split of responsibilities:
   bounded per-step token chunks that interleave with in-flight decode, and
   shared prompt prefixes reuse physical blocks via hash-chained prefix
   matching.  The ragged path above stays as the equivalence oracle.
+* ``SpeculativePagedEngine`` (serving/speculative.py) — subclasses the
+  paged engine, replacing its decode phase with draft-and-verify
+  (DESIGN.md §Speculative decoding); the hooks it relies on here are
+  ``_decode_phase``, ``ensure_blocks_through`` and ``rollback_blocks``.
 
 Determinism contract: a request's output tokens depend only on (prompt,
-sampling params, seed) — never on which slot it lands in or what else is in
-flight — because attention masks key on per-row ``slot_pos`` and sampling
-keys fold (seed, absolute position).  ``tests/test_scheduler.py`` asserts
-bit-identity between continuous and isolated decoding;
-``tests/test_paged.py`` asserts it between the paged and ragged engines.
-(MoE models with finite expert capacity are the documented exception:
-routing competes across the batch, so outputs can differ at capacity.)
+sampling params, seed) — never on which slot it lands in, what else is in
+flight, or whether speculation is enabled — because attention masks key on
+per-row ``slot_pos`` and sampling keys fold (seed, absolute position).
+``tests/test_scheduler.py`` asserts bit-identity between continuous and
+isolated decoding; ``tests/test_paged.py`` asserts it between the paged
+and ragged engines; ``tests/test_speculative.py`` between speculative and
+plain decode.  (MoE models with finite expert capacity are the documented
+exception: routing competes across the batch, so outputs can differ at
+capacity.)
 """
 
 from __future__ import annotations
@@ -51,6 +57,9 @@ class SamplingParams:
 
 @dataclass
 class Request:
+    """One generation request: `prompt` is a token-id list (non-empty,
+    at most s_max - 1 long), `max_new_tokens` >= 1 the generation budget,
+    `sampling` the per-request sampling controls."""
     rid: int
     prompt: List[int]
     max_new_tokens: int
@@ -67,6 +76,8 @@ class _Slot:
 
 @dataclass
 class FinishedRequest:
+    """A retired request: `tokens` is everything generated (first token
+    from prefill) and `finish_reason` why it stopped."""
     rid: int
     prompt: List[int]
     tokens: List[int]
@@ -593,23 +604,63 @@ class PagedScheduler:
         return self._maybe_retire(slot)
 
     def decoding_slots(self) -> List[int]:
+        """Slots whose prompt is fully prefilled and first token sampled."""
         return [i for i, s in enumerate(self.slots)
                 if s is not None and s.decoding and s.tokens]
 
+    def ensure_blocks_through(self, slot: int, last_pos: int):
+        """Materialise blocks so every position up to ``last_pos`` inclusive
+        is writable by this row, drawing on the reservation made at
+        admission (never fails).  ``last_pos == seq.pos`` is the plain
+        decode case; speculative verification passes ``seq.pos + n_drafts``
+        (clamped to the reservation's worst case by the caller, see
+        serving/speculative.py)."""
+        seq = self.slots[slot]
+        bi = last_pos // self.block_size
+        while len(seq.blocks) <= bi:
+            seq.blocks.append(self._alloc_block())
+            seq.fresh_blocks += 1
+            seq.reserved -= 1
+            self.total_reserved -= 1
+            assert seq.reserved >= 0, "reservation underflow"
+        for j in range(seq.pos // self.block_size, bi + 1):
+            assert self.allocator.refcount(seq.blocks[j]) == 1, \
+                f"decode write to shared block {seq.blocks[j]}"
+
     def ensure_decode_blocks(self):
-        """Materialise the block each decoding row's next write lands in,
-        drawing on the reservation made at admission (never fails)."""
+        """Materialise the block each decoding row's next write lands in."""
         for slot in self.decoding_slots():
-            seq = self.slots[slot]
-            bi = seq.pos // self.block_size
-            while len(seq.blocks) <= bi:
-                seq.blocks.append(self._alloc_block())
-                seq.fresh_blocks += 1
-                seq.reserved -= 1
-                self.total_reserved -= 1
-                assert seq.reserved >= 0, "reservation underflow"
-            assert self.allocator.refcount(seq.blocks[bi]) == 1, \
-                f"decode write to shared block {seq.blocks[bi]}"
+            self.ensure_blocks_through(slot, self.slots[slot].pos)
+
+    def rollback_blocks(self, slot: int) -> int:
+        """Free speculative tail blocks past the row's next write position.
+
+        After a verify step accepted fewer drafts than were written, blocks
+        whose every position is > ``seq.pos`` hold only rejected-token K/V
+        that no future query can read before it is rewritten (the next
+        verify writes from ``seq.pos`` contiguously).  Those blocks go back
+        to the free list and their count returns to the row's reservation,
+        so other admissions can use the memory immediately.  Only fresh
+        decode blocks are ever in this tail: prompt blocks (including
+        prefix-cache-registered ones) all sit at indices <= pos // bs.
+        Returns the number of blocks freed."""
+        seq = self.slots[slot]
+        keep = seq.pos // self.block_size + 1
+        freed = 0
+        while len(seq.blocks) > keep:
+            blk = seq.blocks.pop()
+            assert self.allocator.refcount(blk) == 1, \
+                f"speculative tail block {blk} is shared"
+            assert self.prefix is None or \
+                not self.prefix.contains_block(blk), \
+                f"speculative tail block {blk} is prefix-registered"
+            self.allocator.decref(blk)
+            self.allocator.free(blk)
+            seq.fresh_blocks -= 1
+            seq.reserved += 1
+            self.total_reserved += 1
+            freed += 1
+        return freed
 
     def observe(self, slot: int, token: int) -> bool:
         """Record one decoded token.  Returns True if the request retired."""
@@ -645,6 +696,8 @@ class PagedScheduler:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
     def block_table_row(self, slot: int) -> List[int]:
+        """The row's logical->physical block ids, in logical order (the
+        device-side step right-pads this into its (B, max_blocks) table)."""
         return list(self.slots[slot].blocks)
 
     def live_blocks(self) -> int:
@@ -759,15 +812,26 @@ class PagedServingEngine(_ServingEngineBase):
             decode_greedy = compat.shard_map(
                 steps["decode_greedy"], mesh,
                 (ps, cache_specs, r, r, r, r), (cache_specs, r))
+            verify = compat.shard_map(
+                steps["verify"], mesh,
+                (ps, cache_specs, r, r, r, r, r, r, r, r, r),
+                (cache_specs, r))
+            verify_greedy = compat.shard_map(
+                steps["verify_greedy"], mesh,
+                (ps, cache_specs, r, r, r, r, r), (cache_specs, r))
             self._mesh_ctx = lambda: compat.set_mesh(mesh)
         else:
             prefill_chunk = steps["prefill_chunk"]
             decode, decode_greedy = steps["decode"], steps["decode_greedy"]
+            verify, verify_greedy = steps["verify"], steps["verify_greedy"]
             import contextlib
             self._mesh_ctx = contextlib.nullcontext
         self._prefill_chunk = jax.jit(prefill_chunk, donate_argnums=(1,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
         self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
+        # speculative verification (jit is lazy: no compile unless used)
+        self._verify = jax.jit(verify, donate_argnums=(1,))
+        self._verify_greedy = jax.jit(verify_greedy, donate_argnums=(1,))
 
         self._init_host_vectors(batch_slots)
         self._bt = np.zeros((batch_slots, self.max_blocks), np.int32)
@@ -778,19 +842,21 @@ class PagedServingEngine(_ServingEngineBase):
 
     # -- public API ---------------------------------------------------------
     def stats(self) -> Dict[str, float]:
+        """Scheduler counters (prefix hits, allocs, deferrals) plus the
+        engine's block-utilization time series."""
         s = self.scheduler.stats()
         s["block_util_mean"] = self._util_sum / max(self._util_steps, 1)
         s["block_util_peak"] = self._util_peak
         return s
 
     def reset_stats(self):
+        """Zero all counters (bench warmup); cache/block state untouched."""
         self.scheduler.reset_stats()
         self._util_sum = self._util_peak = 0.0
         self._util_steps = 0
 
     def step(self) -> List[Tuple[int, int]]:
         """One engine iteration.  Returns (rid, token) events emitted."""
-        jnp = self._jnp
         events: List[Tuple[int, int]] = []
 
         with self._mesh_ctx():
@@ -806,17 +872,21 @@ class PagedServingEngine(_ServingEngineBase):
 
             live = self.scheduler.decoding_slots()
             if live:
-                self.scheduler.ensure_decode_blocks()
-                for slot in live:
-                    self._fill_bt_row(slot)
-                events.extend(
-                    self._decode_step(live, (jnp.asarray(self._bt),)))
+                events.extend(self._decode_phase(live))
 
         util = self.scheduler.live_blocks() / self.allocator.num_blocks
         self._util_sum += util
         self._util_peak = max(self._util_peak, util)
         self._util_steps += 1
         return events
+
+    def _decode_phase(self, live: List[int]) -> List[Tuple[int, int]]:
+        """One batched decode of the in-flight rows (the speculative engine
+        overrides this with a draft-and-verify round)."""
+        self.scheduler.ensure_decode_blocks()
+        for slot in live:
+            self._fill_bt_row(slot)
+        return self._decode_step(live, (self._jnp.asarray(self._bt),))
 
     # -- internals ----------------------------------------------------------
     def _fill_bt_row(self, slot: int):

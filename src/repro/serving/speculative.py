@@ -1,0 +1,401 @@
+"""Speculative decoding on the paged serving engine.
+
+Decode is one-token-per-communication-round; speculation multiplies the
+work available per round.  Each engine step proposes K draft tokens per
+in-flight request (from a cheap drafter), then runs ONE batched verify
+forward through the paged attention path — K+1 query tokens per row — and
+accepts the longest draft prefix that matches what the target model itself
+would have sampled.  Every accepted draft saves a full decode forward (and,
+under TP, its AllReduce rounds), which is exactly the regime where the
+ladder residual's communication overlap compounds (DESIGN.md §Speculative
+decoding).
+
+Pieces:
+
+* ``NgramDrafter``       — self-speculation via prompt-lookup: propose the
+  continuation of the most recent earlier occurrence of the context's
+  suffix n-gram.  Pure host, zero extra forwards; shines on repetitive or
+  shared-prefix traffic.
+* ``DraftModelDrafter``  — a small config-selected draft transformer
+  sharing the target's vocab, decoding greedily into its own ragged cache
+  (one cheap forward per draft token, replicated — never TP-sharded).
+* ``SpeculativePagedEngine`` — ``PagedServingEngine`` with the decode
+  phase replaced by draft → batched verify → accept-walk → KV rollback.
+
+Distribution-equivalence contract (the reason this is testable as bit
+equality rather than statistics): the serving sampler is deterministic
+given (seed, absolute position) — greedy rows take argmax, sampled rows
+take argmax(filtered logits + Gumbel(key(seed, pos))).  The verify step
+samples the target token for every position with exactly those keys, so
+"accept draft iff draft == target's token" is the standard rejection-
+sampling rule instantiated with coupled randomness: acceptance probability
+is min(1, p/q) under the shared noise, and the emitted stream is not just
+distribution-identical but BIT-identical to non-speculative decode —
+for greedy and seeded sampling, any drafter, any ResidualMode
+(tests/test_speculative.py; TP=2 group in tests/distributed_impl.py).
+The general-distribution stochastic rule (accept w.p. min(1, p/q), resample
+the residual) lives in ``sampler.rejection_sample`` with its own empirical
+unit test.
+
+KV rollback invariant: a verify step writes K/V for all K+1 fed tokens at
+positions pos..pos+K through the block table.  On partial acceptance the
+cache holds stale entries past the new position, but no query can ever
+read them before they are rewritten: reads are masked to slot <= query
+position, and writes advance contiguously from the commit point — the
+same overwrite-before-read argument that makes chunked prefill exact.
+Only the HOST-side block accounting needs repair: tail blocks holding
+nothing but rejected-token positions are freed back to the pool
+(``PagedScheduler.rollback_blocks``) and their count returns to the row's
+reservation, so speculation never shrinks the admission budget.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.serving.scheduler import PagedServingEngine, Request, _bucket
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+def derive_draft_cfg(cfg, n_layers: int):
+    """The standard config-derived draft: the target's exact shape with
+    fewer layers.  ``reduced()`` resets d_model/vocab/heads to its tiny
+    defaults unless re-passed, so every shape field is pinned back to the
+    target's — in particular the vocab, which ``DraftModelDrafter``
+    requires to match."""
+    return cfg.reduced(
+        n_layers=n_layers, d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff,
+        vocab_size=cfg.vocab_size)
+
+
+class NgramDrafter:
+    """Prompt-lookup (self-speculation) drafting.
+
+    ``propose`` scans each row's full context (prompt + generated tokens)
+    for the most recent earlier occurrence of its suffix n-gram, longest n
+    first, and proposes the tokens that followed it.  No model, no state
+    beyond the scheduler's own context — misses cost nothing (the verify
+    step degenerates to plain decode).
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def prefill(self, slot: int, prompt: List[int], first_token: int):
+        """No per-slot state: context is re-read from the scheduler."""
+
+    def lookup(self, ctx: List[int], k: int) -> List[int]:
+        """Up to ``k`` draft tokens continuing ``ctx``, or [] on a miss."""
+        n_hi = min(self.max_ngram, len(ctx) - 1)
+        for n in range(n_hi, self.min_ngram - 1, -1):
+            suffix = ctx[len(ctx) - n:]
+            for j in range(len(ctx) - n - 1, -1, -1):
+                if ctx[j:j + n] == suffix:
+                    return ctx[j + n:j + n + k]
+        return []
+
+    def propose(self, live: List[int], contexts: Dict[int, List[int]],
+                budgets: Dict[int, int]) -> Dict[int, List[int]]:
+        """slot -> up to budgets[slot] draft tokens (possibly []) for each
+        live slot; contexts[slot] is the row's prompt + generated tokens."""
+        return {s: self.lookup(contexts[s], budgets[s]) if budgets[s] > 0
+                else [] for s in live}
+
+
+class DraftModelDrafter:
+    """Draft-model proposals from a small transformer sharing the vocab.
+
+    The draft decodes greedily (the standard choice: proposals only affect
+    the accept rate, never output correctness) into its own ragged cache,
+    one slot per engine slot.  Per engine step it catches up on the tokens
+    the target committed since last round — overwriting any stale
+    speculative K/V, which is safe by the same overwrite-before-read
+    argument as the target cache — then rolls K single-token forwards to
+    propose.  The draft always runs replicated (no TP/DP): it is small by
+    construction and its outputs are only proposals.
+
+    Per-slot draft state is ``_dpos[slot]``: how many committed context
+    tokens the draft cache has consumed (its K/V covers positions
+    ``0.._dpos-1``).
+    """
+
+    def __init__(self, cfg, draft_cfg, draft_params, *, batch_slots: int,
+                 s_max: int, spec_k: int, rng_seed: int = 0,
+                 prefill_bucket_min: int = 16):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.configs import ParallelConfig
+        from repro.models import transformer as _tfm
+        from repro.serving import engine as engine_mod
+
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft model must share the target vocab "
+                f"({draft_cfg.vocab_size} != {cfg.vocab_size})")
+        if draft_cfg.encoder_layers or draft_cfg.family == "vlm":
+            raise NotImplementedError(
+                "draft models must be decoder-only token models")
+
+        self._jnp, self._np = jnp, np
+        self.draft_cfg = draft_cfg
+        self.params = draft_params
+        self.batch_slots = batch_slots
+        self.prefill_bucket_min = prefill_bucket_min
+        self._exact_prefill = any(
+            sub in ("mamba", "rwkv_tmix", "rwkv_cmix")
+            for kind in _tfm.effective_kinds(draft_cfg)
+            for sub in _tfm.subblocks_of(kind))
+
+        steps = engine_mod.build_continuous_steps(
+            draft_cfg, ParallelConfig(), batch_slots=batch_slots,
+            rng_seed=rng_seed)
+        self._prefill = jax.jit(steps["prefill"], donate_argnums=(1,))
+        self._decode_greedy = jax.jit(steps["decode_greedy"],
+                                      donate_argnums=(1,))
+        # draft writes run ahead of the target by up to spec_k positions
+        self.caches, _ = engine_mod.build_caches(
+            draft_cfg, batch_slots, s_max + spec_k + 1, ParallelConfig(),
+            for_decode=False, ragged=True)
+        self._dpos = np.zeros((batch_slots,), np.int64)
+
+    def prefill(self, slot: int, prompt: List[int], first_token: int):
+        """Prefill the draft cache for a newly-decoding engine slot (resets
+        any stale slot state inside the jitted prefill)."""
+        jnp, np = self._jnp, self._np
+        lp = len(prompt)
+        lb = lp if self._exact_prefill else \
+            _bucket(lp, self.prefill_bucket_min)
+        toks = np.zeros((1, lb), np.int32)
+        toks[0, :lp] = prompt
+        self.caches, _ = self._prefill(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(lp, jnp.int32), jnp.asarray(slot, jnp.int32),
+            jnp.asarray([0.0], jnp.float32), jnp.asarray([0], jnp.int32),
+            jnp.asarray([1.0], jnp.float32), jnp.asarray([0], jnp.int32))
+        self._dpos[slot] = lp
+
+    def _masked_decode(self, toks, pos, active):
+        jnp = self._jnp
+        self.caches, out = self._decode_greedy(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(active))
+        return self._np.asarray(out)
+
+    def propose(self, live: List[int], contexts: Dict[int, List[int]],
+                budgets: Dict[int, int]) -> Dict[int, List[int]]:
+        """slot -> up to budgets[slot] greedy draft tokens.  Runs masked
+        (B, 1) draft decodes: first the catch-up rounds (committed tokens
+        the draft cache has not consumed), then one roll per draft token."""
+        np = self._np
+        toks = np.zeros((self.batch_slots,), np.int32)
+        pos = np.zeros((self.batch_slots,), np.int32)
+        active = np.zeros((self.batch_slots,), bool)
+
+        # catch-up: consume committed tokens up to (not incl.) the last one
+        while True:
+            active[:] = False
+            for s in live:
+                ctx = contexts[s]
+                if self._dpos[s] < len(ctx) - 1:
+                    toks[s] = ctx[self._dpos[s]]
+                    pos[s] = self._dpos[s]
+                    active[s] = True
+            if not active.any():
+                break
+            self._masked_decode(toks, pos, active)
+            for s in live:
+                if active[s]:
+                    self._dpos[s] += 1
+
+        # proposal rolls: round 0 feeds the committed last token (so the
+        # draft cache commits it — dpos advances), later rounds feed the
+        # draft's own previous proposal
+        drafts: Dict[int, List[int]] = {s: [] for s in live}
+        cur = {s: contexts[s][-1] for s in live}
+        for j in range(max((budgets[s] for s in live), default=0)):
+            active[:] = False
+            for s in live:
+                if budgets[s] > j:
+                    toks[s] = cur[s]
+                    pos[s] = len(contexts[s]) - 1 + j
+                    active[s] = True
+            if not active.any():
+                break
+            out = self._masked_decode(toks, pos, active)
+            for s in live:
+                if active[s]:
+                    if j == 0:
+                        self._dpos[s] = len(contexts[s])
+                    cur[s] = int(out[s])
+                    drafts[s].append(cur[s])
+        return drafts
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class SpeculativePagedEngine(PagedServingEngine):
+    """Paged serving with draft-and-verify decode.
+
+    One ``step()`` = admissions + chunked prefill (inherited) + ONE verify
+    forward over every in-flight row: row b feeds its last sampled token
+    plus up to ``spec_k`` draft tokens at positions ``pos..pos+k_b``, and
+    the device returns the token the target samples for every one of those
+    positions.  The host emits the longest prefix where draft and target
+    agree plus the target's first disagreeing (or bonus) token — between 1
+    and ``k_b + 1`` tokens per row per forward — then frees speculative
+    tail blocks (``rollback_blocks``).
+
+    Per-row draft budgets are clamped so speculative writes never exceed
+    the admission reservation: ``k_b = min(spec_k, remaining_tokens - 1,
+    s_max - 2 - pos)``, hence ``pos + k_b`` stays within the worst-case
+    block count and ``ensure_blocks_through`` can never fail.
+
+    Output tokens are bit-identical to the non-speculative engines for any
+    drafter and any sampling params (module docstring: the coupled-
+    randomness rejection rule).  ``spec_mode``: "ngram" (prompt-lookup
+    self-speculation) or "draft" (requires ``draft_cfg``/``draft_params``
+    sharing the target vocab).
+    """
+
+    def __init__(self, cfg, params, *, spec_mode: str = "ngram",
+                 spec_k: int = 4, draft_cfg=None, draft_params=None,
+                 max_ngram: int = 3, **kw):
+        super().__init__(cfg, params, **kw)
+        if spec_k < 1:
+            raise ValueError("spec_k must be >= 1 (use PagedServingEngine "
+                             "for plain decode)")
+        self.spec_k = spec_k
+        self.spec_mode = spec_mode
+        if spec_mode == "ngram":
+            self.drafter = NgramDrafter(max_ngram=max_ngram)
+        elif spec_mode == "draft":
+            if draft_cfg is None or draft_params is None:
+                raise ValueError("spec_mode='draft' needs draft_cfg and "
+                                 "draft_params")
+            self.drafter = DraftModelDrafter(
+                cfg, draft_cfg, draft_params,
+                batch_slots=self.batch_slots, s_max=self.s_max,
+                spec_k=spec_k)
+        else:
+            raise ValueError(f"unknown spec_mode {spec_mode!r} "
+                             "(expected 'ngram' or 'draft')")
+        self.reset_spec_stats()
+
+    # -- stats --------------------------------------------------------------
+    def reset_spec_stats(self):
+        """Zero the speculation counters only (cache state untouched)."""
+        self.verify_forwards = 0   # verify forwards run (not prefills)
+        self.row_verifies = 0      # (row, forward) pairs verified
+        self.spec_tokens = 0       # tokens emitted by the decode phase
+        self.drafted = 0           # draft tokens fed to verification
+        self.accepted = 0          # draft tokens accepted
+        self.rolled_back_blocks = 0
+
+    def reset_stats(self):
+        """Zero block AND speculation counters (bench warmup)."""
+        super().reset_stats()
+        self.reset_spec_stats()
+
+    def stats(self) -> Dict[str, float]:
+        """Paged-engine stats plus accept_rate (drafts accepted/proposed)
+        and tokens_per_forward (emitted per row-verify; 1.0 = no win,
+        spec_k + 1 = ceiling)."""
+        s = super().stats()
+        s.update(
+            verify_forwards=self.verify_forwards,
+            accept_rate=self.accepted / max(self.drafted, 1),
+            # per-ROW decode forwards saved: 1.0 means no speculation win,
+            # k+1 is the ceiling (all drafts + bonus accepted every step)
+            tokens_per_forward=self.spec_tokens /
+            max(self.row_verifies, 1),
+            rolled_back_blocks=self.rolled_back_blocks,
+        )
+        return s
+
+    # -- decode phase -------------------------------------------------------
+    def _start_decode_slot(self, slot: int, req: Request, tok: int):
+        super()._start_decode_slot(slot, req, tok)
+        self.drafter.prefill(slot, req.prompt, tok)
+
+    def _spec_budget(self, slot: int) -> int:
+        """Draft tokens row `slot` may verify this step without writing
+        past its reservation or past s_max - 2 (the last legal write)."""
+        seq = self.scheduler.slots[slot]
+        remaining = seq.request.max_new_tokens - len(seq.tokens)
+        return max(0, min(self.spec_k, remaining - 1,
+                          self.s_max - 2 - seq.pos))
+
+    def _decode_phase(self, live: List[int]):
+        jnp, np = self._jnp, self._np
+        from repro.serving.sampler import GREEDY_EPS
+        sched = self.scheduler
+
+        budgets, contexts = {}, {}
+        for slot in live:
+            seq = sched.slots[slot]
+            budgets[slot] = self._spec_budget(slot)
+            contexts[slot] = seq.request.prompt + seq.tokens
+        drafts = self.drafter.propose(live, contexts, budgets)
+
+        k1 = self.spec_k + 1
+        toks = np.zeros((self.batch_slots, k1), np.int32)
+        klen = np.ones((self.batch_slots,), np.int32)
+        for slot in live:
+            d = list(drafts.get(slot, []))[:budgets[slot]]
+            toks[slot, 0] = self._tokens[slot]
+            toks[slot, 1:1 + len(d)] = d
+            klen[slot] = 1 + len(d)
+            sched.ensure_blocks_through(slot, int(self._pos[slot]) + len(d))
+            self._fill_bt_row(slot)
+
+        base = (self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(self._pos), jnp.asarray(self._active),
+                jnp.asarray(klen), jnp.asarray(self._bt))
+        if all(self._temp[s] <= GREEDY_EPS for s in live):
+            self.caches, tgt = self._verify_greedy(*base)
+        else:
+            self.caches, tgt = self._verify(
+                *base, jnp.asarray(self._temp), jnp.asarray(self._top_k),
+                jnp.asarray(self._top_p), jnp.asarray(self._seeds))
+        tgt = np.asarray(tgt)
+        self.verify_forwards += 1
+
+        events = []
+        for slot in live:
+            seq = sched.slots[slot]
+            rid = seq.request.rid
+            n_draft = int(klen[slot]) - 1
+            self.drafted += n_draft
+            self.row_verifies += 1
+            retired = False
+            last = None
+            for i in range(int(klen[slot])):
+                t = int(tgt[slot, i])
+                events.append((rid, t))
+                self.spec_tokens += 1
+                matched = i < n_draft and t == int(toks[slot, i + 1])
+                if matched:
+                    self.accepted += 1
+                if sched.observe(slot, t):
+                    retired = True
+                    break
+                last = t
+                if not matched:
+                    break           # draft mismatch (or bonus token): stop
+            if retired:
+                self._active[slot] = False
+            else:
+                self._tokens[slot] = last
+                self._pos[slot] = seq.pos
+                self.rolled_back_blocks += sched.rollback_blocks(slot)
+        return events

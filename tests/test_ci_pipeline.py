@@ -1,6 +1,8 @@
 """CI pipeline sanity: the GitHub Actions workflow stays structurally valid
-(jobs, triggers, jax matrix, gate commands) and the serve-bench regression
-gate accepts the committed baseline while rejecting a degraded run."""
+(jobs, triggers, jax matrix, gate commands), the serve-bench regression
+gate accepts the committed baseline while rejecting a degraded run, and
+the docs smoke-runner (scripts/check_docs.py) extracts/executes/fails the
+right blocks."""
 
 import json
 import subprocess
@@ -13,6 +15,7 @@ ROOT = Path(__file__).resolve().parents[1]
 WORKFLOW = ROOT / ".github" / "workflows" / "ci.yml"
 BASELINE = ROOT / "results" / "serve_bench.json"
 CHECK = ROOT / "scripts" / "check_bench.py"
+CHECK_DOCS = ROOT / "scripts" / "check_docs.py"
 
 
 def _steps_text(job):
@@ -54,6 +57,70 @@ def test_workflow_lint_and_nightly_jobs(workflow):
     assert "--lint" in _steps_text(workflow["jobs"]["lint"])
     nightly = _steps_text(workflow["jobs"]["nightly"])
     assert "--full" in nightly and "check_bench.py" in nightly
+
+
+def test_workflow_docs_job_runs_docs_gate(workflow):
+    assert "--docs" in _steps_text(workflow["jobs"]["docs"])
+    assert "--docs" in (ROOT / "scripts" / "ci.sh").read_text()
+
+
+# ---------------------------------------------------------------------------
+# docs smoke-runner (scripts/check_docs.py)
+# ---------------------------------------------------------------------------
+
+
+def _run_docs(*args):
+    return subprocess.run(
+        [sys.executable, str(CHECK_DOCS), *args],
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_check_docs_extracts_and_runs_bash_blocks(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "# t\n\n```bash\necho hello-docs\n```\n\n"
+        "```python\nraise SystemExit(1)  # not bash: must not run\n```\n\n"
+        "```bash\n# docs: skip (expensive)\nexit 1\n```\n"
+    )
+    r = _run_docs(str(md))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ok" in r.stdout and "skip" in r.stdout
+    assert "2 block(s), 1 run, 0 failure(s)" in r.stdout
+
+
+def test_check_docs_fails_on_broken_block_and_empty_docs(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("```bash\nfalse\n```\n")
+    r = _run_docs(str(bad))
+    assert r.returncode != 0 and "FAIL" in r.stdout
+
+
+def test_check_docs_timeout_is_a_failure_not_a_crash(tmp_path):
+    md = tmp_path / "hang.md"
+    md.write_text("```bash\nsleep 30\n```\n\n```bash\necho after\n```\n")
+    r = _run_docs(str(md), "--timeout", "1")
+    assert r.returncode != 0
+    assert "timed out" in r.stdout
+    assert "after" in r.stdout  # later blocks still run and report
+
+    empty = tmp_path / "empty.md"
+    empty.write_text("# no code here\n")
+    assert _run_docs(str(empty)).returncode != 0
+    # every block skipped == nothing guards the quickstart
+    allskip = tmp_path / "allskip.md"
+    allskip.write_text("```bash\n# docs: skip\necho hi\n```\n")
+    assert _run_docs(str(allskip)).returncode != 0
+
+
+def test_check_docs_readme_blocks_are_listed():
+    """The README keeps executable quickstart blocks (the docs CI job runs
+    them for real; here we only check extraction finds runnable ones)."""
+    r = _run_docs("--list")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "README.md" in r.stdout and "docs/serving.md" in r.stdout
+    assert "run   " in r.stdout
 
 
 def test_gitignore_covers_scratch_dirs():

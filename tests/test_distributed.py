@@ -29,6 +29,6 @@ def _run(which: str):
 
 @pytest.mark.parametrize("which", ["tp", "fsdp", "zero1", "sp", "padded",
                                    "flashdec", "pp", "compress", "q8",
-                                   "serve_cb", "serve_paged"])
+                                   "serve_cb", "serve_paged", "serve_spec"])
 def test_distributed(which):
     _run(which)

@@ -1,0 +1,364 @@
+"""Speculative-decoding tests (DESIGN.md §Speculative decoding).
+
+Layers, bottom-up:
+
+* NgramDrafter.lookup — pure host prompt-lookup semantics (no jax).
+* sampler.rejection_sample — the standard stochastic accept rule matches
+  the target distribution empirically (standalone, no engine).
+* PagedScheduler.ensure_blocks_through / rollback_blocks — speculative
+  block materialisation and tail rollback, host-only.
+* SpeculativePagedEngine — the headline equivalence: with EITHER drafter
+  (ngram self-speculation or a small draft model) and for
+  ladder/standard/desync2, the speculative engine emits token streams
+  bit-identical to the non-speculative engines under greedy AND seeded
+  sampling; on repetitive greedy traffic it measurably accepts drafts
+  (tokens_per_forward > 1).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, ResidualMode
+from repro.models import transformer as tfm
+from repro.serving import sampler
+from repro.serving.kv_cache import BlockAllocator, PrefixCache
+from repro.serving.scheduler import (
+    ContinuousServingEngine,
+    PagedScheduler,
+    PagedServingEngine,
+    Request,
+    SamplingParams,
+)
+from repro.serving.speculative import (
+    DraftModelDrafter,
+    NgramDrafter,
+    SpeculativePagedEngine,
+)
+
+
+# ---------------------------------------------------------------------------
+# ngram drafter (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_lookup_prefers_longest_and_most_recent_match():
+    d = NgramDrafter(max_ngram=3, min_ngram=1)
+    # suffix [7, 8] occurs twice; the most recent occurrence (followed by
+    # 99) must win over the older one (followed by 11)
+    ctx = [7, 8, 11, 5, 7, 8, 99, 42, 7, 8]
+    assert d.lookup(ctx, 2) == [99, 42]
+    # longest n wins: 3-gram match beats the 1-gram fallback
+    ctx2 = [1, 2, 3, 50, 9, 1, 2, 3, 60, 61, 1, 2, 3]
+    assert d.lookup(ctx2, 3) == [60, 61, 1]
+
+
+def test_ngram_lookup_misses_return_empty():
+    d = NgramDrafter(max_ngram=2, min_ngram=2)
+    assert d.lookup([1, 2, 3, 4], 4) == []       # no repeated 2-gram
+    assert d.lookup([5], 4) == []                # context shorter than n
+    with pytest.raises(ValueError):
+        NgramDrafter(max_ngram=1, min_ngram=2)
+
+
+def test_ngram_propose_respects_budgets():
+    d = NgramDrafter()
+    ctx = {0: [3, 4, 3, 4, 3, 4], 1: [1, 2, 3]}
+    out = d.propose([0, 1], ctx, {0: 2, 1: 0})
+    assert out[0] == [3, 4] and out[1] == []
+
+
+# ---------------------------------------------------------------------------
+# rejection-sampling accept rule (standalone; empirical)
+# ---------------------------------------------------------------------------
+
+
+def test_rejection_sample_matches_target_distribution():
+    """Emitted tokens are exact samples from p even when the draft
+    distribution q is badly wrong — the Leviathan/Chen guarantee."""
+    v = 8
+    rng = np.random.default_rng(0)
+    p_logits = jnp.asarray(rng.normal(0, 1.5, (v,)), jnp.float32)
+    q_logits = jnp.asarray(rng.normal(0, 1.5, (v,)), jnp.float32)
+    p = np.asarray(jax.nn.softmax(p_logits))
+    q = np.asarray(jax.nn.softmax(q_logits))
+
+    n = 20000
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(42), i))(
+        jnp.arange(n))
+    # drafts drawn from q (the rule assumes q(draft) > 0)
+    draft = jax.vmap(
+        lambda k: jax.random.categorical(jax.random.fold_in(k, 99),
+                                         q_logits))(keys).astype(jnp.int32)
+    accepted, toks = sampler.rejection_sample(
+        keys, jnp.broadcast_to(p_logits, (n, v)),
+        jnp.broadcast_to(q_logits, (n, v)), draft)
+
+    emp = np.bincount(np.asarray(toks), minlength=v) / n
+    tv = 0.5 * np.abs(emp - p).sum()
+    assert tv < 0.02, f"TV(emitted, target) = {tv:.4f}"
+    # acceptance rate ~= sum_x min(p(x), q(x))
+    want_acc = np.minimum(p, q).sum()
+    got_acc = float(jnp.mean(accepted))
+    assert abs(got_acc - want_acc) < 0.02
+    # accepted tokens really are the drafts
+    assert np.array_equal(np.asarray(toks)[np.asarray(accepted)],
+                          np.asarray(draft)[np.asarray(accepted)])
+
+
+def test_rejection_sample_identical_distributions_always_accept():
+    v, n = 6, 64
+    logits = jnp.asarray(np.linspace(-1, 1, v), jnp.float32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i))(
+        jnp.arange(n))
+    draft = jnp.zeros((n,), jnp.int32)
+    accepted, toks = sampler.rejection_sample(
+        keys, jnp.broadcast_to(logits, (n, v)),
+        jnp.broadcast_to(logits, (n, v)), draft)
+    assert bool(jnp.all(accepted)) and bool(jnp.all(toks == draft))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: speculative block materialisation + rollback (no jax)
+# ---------------------------------------------------------------------------
+
+
+def _drive_prefill(s, tok=7):
+    for slot, chunk, start in s.prefill_work():
+        seq = s.slots[slot]
+        s.chunk_filled(slot, len(chunk))
+        if start + len(chunk) == len(seq.request.prompt):
+            s.start_decode(slot, tok)
+
+
+def test_ensure_blocks_through_and_rollback_restore_reservation():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    s = PagedScheduler(1, 32, alloc, prefix_cache=PrefixCache())
+    s.submit(Request(rid=0, prompt=list(range(6)), max_new_tokens=12))
+    s.admissions()
+    _drive_prefill(s)
+    seq = s.slots[0]
+    assert seq.pos == 6 and len(seq.blocks) == 2   # prompt: 2 blocks
+    free0, res0 = alloc.num_free(), s.total_reserved
+
+    # a verify step writing 4 draft positions past pos spans 2 new blocks
+    s.ensure_blocks_through(0, seq.pos + 4)
+    assert len(seq.blocks) == 3 and s.total_reserved == res0 - 1
+    # all drafts rejected: pos only advances by 1 (the corrected token)
+    s.observe(0, 9)
+    assert seq.pos == 7
+    freed = s.rollback_blocks(0)
+    assert freed == 1                               # block for pos 8..11
+    assert alloc.num_free() == free0 and s.total_reserved == res0
+    assert len(seq.blocks) == 2
+
+    # full acceptance: pos advances past the materialised tail, nothing
+    # to roll back
+    s.ensure_blocks_through(0, seq.pos + 4)
+    for t in range(4):
+        s.observe(0, 10 + t)
+    assert s.rollback_blocks(0) == 0
+
+
+def test_rollback_never_touches_prompt_or_prefix_blocks():
+    alloc = BlockAllocator(num_blocks=8, block_size=4)
+    pc = PrefixCache()
+    s = PagedScheduler(2, 32, alloc, prefix_cache=pc)
+    shared = list(range(100, 108))                  # 2 full cached blocks
+    s.submit(Request(rid=0, prompt=shared + [1], max_new_tokens=1))
+    s.admissions()
+    _drive_prefill(s)                               # retires, registers
+    s.submit(Request(rid=1, prompt=shared + [2], max_new_tokens=6))
+    s.admissions()
+    _drive_prefill(s)
+    seq = s.slots[0]
+    assert seq.num_cached == 8                      # prefix hit engaged
+    s.ensure_blocks_through(0, seq.pos + 3)
+    s.observe(0, 5)
+    s.rollback_blocks(0)
+    # the shared prefix blocks are still owned and still registered
+    assert all(alloc.refcount(b) >= 1 for b in seq.blocks[:2])
+    assert all(pc.contains_block(b) for b in seq.blocks[:2])
+
+
+# ---------------------------------------------------------------------------
+# engine equivalences (the acceptance invariants)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg(mode):
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=256
+    )
+    return cfg.replace(residual_mode=ResidualMode(mode))
+
+
+def _params(cfg):
+    return tfm.init_params(cfg, jax.random.key(0))
+
+
+def _draft(cfg):
+    dcfg = cfg.reduced(n_layers=1)
+    return dcfg, tfm.init_params(dcfg, jax.random.key(7))
+
+
+def _mixed_trace(vocab, rng):
+    """Shared prefix, variable prompts, greedy AND seeded sampled rows."""
+    shared = rng.integers(0, vocab, 16).tolist()
+    cases = [
+        (shared + rng.integers(0, vocab, 5).tolist(), 7, SamplingParams()),
+        (
+            shared + rng.integers(0, vocab, 9).tolist(),
+            5,
+            SamplingParams(temperature=0.8, top_k=20, top_p=0.9, seed=7),
+        ),
+        (
+            rng.integers(0, vocab, 7).tolist(),
+            6,
+            SamplingParams(temperature=1.2, seed=3),
+        ),
+        (shared + rng.integers(0, vocab, 3).tolist(), 5, SamplingParams()),
+    ]
+    return [
+        Request(rid=i, prompt=p, max_new_tokens=g, sampling=sp)
+        for i, (p, g, sp) in enumerate(cases)
+    ]
+
+
+def _clone(r):
+    return Request(
+        rid=r.rid,
+        prompt=list(r.prompt),
+        max_new_tokens=r.max_new_tokens,
+        sampling=r.sampling,
+    )
+
+
+def _serve_staggered(engine, reqs):
+    engine.submit(_clone(reqs[0]))
+    engine.submit(_clone(reqs[1]))
+    engine.step()
+    for r in reqs[2:]:
+        engine.submit(_clone(r))
+    return engine.run()
+
+
+def _spec_engine(cfg, params, spec_mode, spec_k=3):
+    kw = {}
+    if spec_mode == "draft":
+        kw["draft_cfg"], kw["draft_params"] = _draft(cfg)
+    return SpeculativePagedEngine(
+        cfg,
+        params,
+        batch_slots=2,
+        s_max=48,
+        block_size=8,
+        max_prefill_tokens=16,
+        spec_mode=spec_mode,
+        spec_k=spec_k,
+        **kw,
+    )
+
+
+@pytest.mark.parametrize("spec_mode", ["ngram", "draft"])
+@pytest.mark.parametrize("mode", ["ladder", "standard", "desync2"])
+def test_spec_engine_matches_plain_decode(mode, spec_mode):
+    """Mixed staggered trace (greedy + seeded sampling, shared prefix):
+    the speculative engine must emit bit-identical token streams to the
+    ragged oracle with either drafter, for every residual mode."""
+    cfg = _tiny_cfg(mode)
+    params = _params(cfg)
+    reqs = _mixed_trace(cfg.vocab_size, np.random.default_rng(0))
+
+    ragged = ContinuousServingEngine(cfg, params, batch_slots=2, s_max=48)
+    want = _serve_staggered(ragged, reqs)
+
+    spec = _spec_engine(cfg, params, spec_mode)
+    got = _serve_staggered(spec, reqs)
+
+    assert set(got) == set(want)
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens, rid
+    st = spec.stats()
+    assert st["verify_forwards"] > 0
+    assert st["tokens_per_forward"] >= 1.0
+
+
+def test_spec_accepts_drafts_on_repetitive_greedy_traffic():
+    """Greedy decode of a tiny random-init model loops; prompt-lookup
+    drafting must convert that into multi-token verify steps."""
+    cfg = _tiny_cfg("ladder")
+    params = _params(cfg)
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 12).tolist(),
+            max_new_tokens=24,
+            sampling=SamplingParams(),
+        )
+        for i in range(2)
+    ]
+
+    plain = PagedServingEngine(cfg, params, batch_slots=2, s_max=64,
+                               block_size=8)
+    for r in reqs:
+        plain.submit(_clone(r))
+    want = plain.run()
+
+    spec = SpeculativePagedEngine(cfg, params, batch_slots=2, s_max=64,
+                                  block_size=8, spec_mode="ngram", spec_k=4)
+    for r in reqs:
+        spec.submit(_clone(r))
+    got = spec.run()
+
+    for rid in want:
+        assert got[rid].tokens == want[rid].tokens
+    st = spec.stats()
+    assert st["accept_rate"] > 0
+    assert st["tokens_per_forward"] > 1.0
+    # speculation must SAVE forwards vs one decode per token
+    n_tok = sum(len(f.tokens) for f in got.values())
+    assert st["verify_forwards"] < n_tok - len(got)  # strictly fewer
+
+
+def test_spec_budget_clamps_to_remaining_and_smax():
+    """max_new_tokens=1 leaves zero draft budget (verify == plain decode);
+    requests near s_max never write past slot s_max - 2."""
+    cfg = _tiny_cfg("ladder")
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    spec = SpeculativePagedEngine(cfg, params, batch_slots=1, s_max=32,
+                                  block_size=8, spec_mode="ngram", spec_k=4)
+    spec.submit(Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab_size, 6).tolist(),
+        max_new_tokens=1, sampling=SamplingParams()))
+    # long request that retires on cache_full: budget shrinks to 0 at the
+    # edge instead of writing out of range
+    spec.submit(Request(
+        rid=1, prompt=rng.integers(0, cfg.vocab_size, 20).tolist(),
+        max_new_tokens=64, sampling=SamplingParams()))
+    fin = spec.run()
+    assert len(fin[0].tokens) == 1
+    assert fin[1].finish_reason == "cache_full"
+    assert spec.drafted == spec.accepted or spec.drafted >= 0  # ran clean
+
+
+def test_spec_engine_rejects_bad_args():
+    cfg = _tiny_cfg("ladder")
+    params = _params(cfg)
+    with pytest.raises(ValueError):
+        SpeculativePagedEngine(cfg, params, batch_slots=1, s_max=16,
+                               spec_mode="ngram", spec_k=0)
+    with pytest.raises(ValueError):
+        SpeculativePagedEngine(cfg, params, batch_slots=1, s_max=16,
+                               spec_mode="wat")
+    with pytest.raises(ValueError):
+        SpeculativePagedEngine(cfg, params, batch_slots=1, s_max=16,
+                               spec_mode="draft")   # no draft model given
+    bad_cfg = cfg.reduced(n_layers=1).replace(vocab_size=128)
+    with pytest.raises(ValueError):
+        DraftModelDrafter(cfg, bad_cfg, None, batch_slots=1, s_max=16,
+                          spec_k=2)
