@@ -1,0 +1,197 @@
+"""Paged decode-attention kernel benchmark: step time + bytes-read model.
+
+The point of the block-table-native kernel (kernels/paged_attention.py) is
+that its HBM traffic scales with each row's ACTUAL kv length, while the
+gather path (``paged_view``) materialises the full table width per row
+before attending.  This bench pins that down two ways, across pool
+occupancies:
+
+* **bytes-read model** — analytical KV bytes touched per decode step:
+
+    gather (full table) : B * max_blocks        * bs * 2 * Hkv * hd * isize
+    gather (live-sliced): B * bucket(used_blks) * bs * 2 * Hkv * hd * isize
+    kernel              : sum_b ceil(kv_len_b / bs) * bs * 2 * Hkv * hd * isize
+
+  "gather (live-sliced)" is the oracle path after the host-side table
+  slicing fix (scheduler.PagedServingEngine._bt_width): its traffic tracks
+  occupancy in power-of-two buckets, but every row still pays the batch
+  max; the kernel's per-row early exit pays only its own length.  q, block
+  table, and output bytes are identical across paths and omitted.
+
+* **measured step time** — wall time of the jitted decode-attention read
+  on THIS host.  On CPU the kernel runs in Pallas interpret mode (the
+  kernel body executes op-by-op in Python), so the gather path wins wall
+  clock here; the timing column exists to catch pathological regressions
+  and becomes meaningful on a real TPU.  The bytes model is the
+  hardware-relevant result and is what scripts/check_bench.py gates
+  (kernel < full-table gather at >= 50% occupancy; >= 4x reduction at
+  25%).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py \
+        --out results/kernel_bench.json
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.kernels import ops  # noqa: E402
+from repro.models.attention import _cached_attention  # noqa: E402
+from repro.parallel.collectives import NULL_ENV  # noqa: E402
+from repro.serving.kv_cache import PagedKVCache, paged_view  # noqa: E402
+from repro.serving.scheduler import _bucket  # noqa: E402
+
+
+def _kv_bytes(n_blocks_read, bs, hkv, hd, isize):
+    return n_blocks_read * bs * 2 * hkv * hd * isize
+
+
+def _time_fn(fn, *args, iters):
+    jax.block_until_ready(fn(*args))  # compile outside the clock
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _bench_case(scenario, kv_lens, args):
+    """One row: per-row kv lengths `kv_lens`, decode (Q=1)."""
+    bs, hkv, hd = args.block_size, args.kv_heads, args.head_dim
+    b = len(kv_lens)
+    max_blocks = args.max_blocks
+    used = [-(-kv // bs) for kv in kv_lens]
+    hq = hkv * args.group
+    dtype = jnp.float32
+    isize = jnp.dtype(dtype).itemsize
+
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (b, 1, hq, hd), dtype)
+    num_blocks = b * max_blocks
+    k = jax.random.normal(
+        jax.random.fold_in(key, 1), (hkv, num_blocks * bs, hd), dtype
+    )
+    v = jax.random.normal(
+        jax.random.fold_in(key, 2), (hkv, num_blocks * bs, hd), dtype
+    )
+    rng = np.random.default_rng(0)
+    bt_full = jnp.asarray(
+        rng.permutation(num_blocks).reshape(b, max_blocks), jnp.int32
+    )
+    qpos = jnp.asarray([[kv - 1] for kv in kv_lens], jnp.int32)
+    scale = hd**-0.5
+    # the engine's host-side slice: power-of-two bucket of the batch max
+    w = min(_bucket(max(used), 1), max_blocks)
+    bt_live = bt_full[:, :w]
+
+    def gather_read(q, k, v, bt, qpos):
+        cache = PagedKVCache(k=k, v=v, block_size=bs)
+        view = paged_view(cache, bt)
+        return _cached_attention(q * scale, view, qpos, NULL_ENV, softcap=0.0)
+
+    def kernel_read(q, k, v, bt, qpos):
+        return ops.paged_attention(q, k, v, bt, qpos, scale=scale, block_size=bs)
+
+    gather = jax.jit(gather_read)
+    t_gather = _time_fn(gather, q, k, v, bt_live, qpos, iters=args.iters)
+    t_kernel = _time_fn(kernel_read, q, k, v, bt_live, qpos, iters=args.iters)
+
+    bytes_full = _kv_bytes(b * max_blocks, bs, hkv, hd, isize)
+    bytes_sliced = _kv_bytes(b * w, bs, hkv, hd, isize)
+    bytes_kernel = _kv_bytes(sum(used), bs, hkv, hd, isize)
+    return dict(
+        scenario=scenario,
+        occupancy=round(sum(used) / (b * max_blocks), 4),
+        kv_lens=list(kv_lens),
+        rows=b,
+        max_blocks=max_blocks,
+        blocks_used=used,
+        bt_width=w,
+        bytes_gather_full=bytes_full,
+        bytes_gather_sliced=bytes_sliced,
+        bytes_kernel=bytes_kernel,
+        reduction_vs_full=round(bytes_full / bytes_kernel, 3),
+        reduction_vs_sliced=round(bytes_sliced / bytes_kernel, 3),
+        t_gather_us=round(t_gather * 1e6, 1),
+        t_kernel_us=round(t_kernel * 1e6, 1),
+        kernel_interpreted=jax.default_backend() != "tpu",
+    )
+
+
+def bench_occupancy(occ, args):
+    """Uniform rows at kv_len = occ * s_max — the occupancy sweep the
+    regression gate reads (scripts/check_bench.py)."""
+    s_max = args.max_blocks * args.block_size
+    kv = max(1, int(round(occ * s_max)))
+    return _bench_case("uniform", [kv] * args.rows, args)
+
+
+def bench_ragged(args):
+    """One long row pinning the batch max + short tails: the sliced gather
+    still pays bucket(batch max) for EVERY row, the kernel's per-row early
+    exit pays each row's own length — the regime continuous batching
+    actually serves."""
+    s_max = args.max_blocks * args.block_size
+    kv_lens = [s_max] + [max(1, s_max // 8)] * (args.rows - 1)
+    return _bench_case("ragged", kv_lens, args)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=4, help="batch rows (slots)")
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument(
+        "--group", type=int, default=2, help="GQA group (Hq = kv_heads * group)"
+    )
+    ap.add_argument("--head-dim", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument(
+        "--max-blocks",
+        type=int,
+        default=16,
+        help="table width per row (s_max = max_blocks * bs)",
+    )
+    ap.add_argument("--occupancies", default="0.125,0.25,0.5,0.75,1.0")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument(
+        "--out",
+        default=str(
+            Path(__file__).resolve().parents[1] / "results" / "kernel_bench.json"
+        ),
+    )
+    args = ap.parse_args(argv)
+
+    rows = [bench_occupancy(float(o), args) for o in args.occupancies.split(",")]
+    rows.append(bench_ragged(args))
+    record = dict(bench="kernel_bench", config=vars(args), rows=rows)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=1))
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        tag = f"occ{r['occupancy']}" if r["scenario"] == "uniform" else r["scenario"]
+        interp = " (interpret)" if r["kernel_interpreted"] else ""
+        print(
+            f"kernel_bench/{tag},{r['t_kernel_us']:.1f},"
+            f"bytes_kernel={r['bytes_kernel']} "
+            f"bytes_gather_full={r['bytes_gather_full']} "
+            f"bytes_gather_sliced={r['bytes_gather_sliced']} "
+            f"reduction_vs_full={r['reduction_vs_full']}x "
+            f"reduction_vs_sliced={r['reduction_vs_sliced']}x "
+            f"t_gather={r['t_gather_us']:.1f}us{interp}"
+        )
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,8 @@ from repro.configs import REGISTRY  # noqa: E402
 from repro.core import schedule as sched                       # noqa: E402
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
+KERNEL_BENCH = Path(__file__).resolve().parents[1] / "results" / \
+    "kernel_bench.json"
 
 PAPER_TABLE1 = {  # model -> (no_nvlink, with_nvlink) measured speedups
     "ladder-1b": (1.39, 1.56), "ladder-3b": (1.50, 1.57),
@@ -137,6 +139,28 @@ def roofline_table():
               f"useful={r['useful_ratio']:.2f}")
 
 
+def kernel_bench_table():
+    """Paged-attention kernel vs gather read: bytes-read model + step time
+    per pool occupancy, from the committed benchmarks/kernel_bench.py
+    artifact (kernel traffic must scale with actual kv length —
+    scripts/check_bench.py gates the same rows)."""
+    if not KERNEL_BENCH.exists():
+        print("kernel_bench,0,missing results/kernel_bench.json "
+              "(run benchmarks/kernel_bench.py)")
+        return
+    rows = json.loads(KERNEL_BENCH.read_text())["rows"]
+    for r in rows:
+        tag = r["scenario"] if r["scenario"] != "uniform" else \
+            f"occ{r['occupancy']}"
+        _emit(f"kernel_bench/{tag}", r["t_kernel_us"],
+              f"kv_bytes kernel={r['bytes_kernel']} "
+              f"gather_full={r['bytes_gather_full']} "
+              f"gather_sliced={r['bytes_gather_sliced']} "
+              f"x{r['reduction_vs_full']} vs full "
+              f"(t_gather={r['t_gather_us']}us"
+              f"{', interpret' if r['kernel_interpreted'] else ''})")
+
+
 TABLES = {
     "table1": table1_inference_speedup,
     "table2": table2_latency_breakdown,
@@ -145,6 +169,7 @@ TABLES = {
     "table6": table6_desync,
     "tpu": tpu_projection,
     "roofline": roofline_table,
+    "kernel_bench": kernel_bench_table,
 }
 
 

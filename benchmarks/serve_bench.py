@@ -14,6 +14,13 @@ scenarios per residual mode:
   engine's prefix-hit rate and block utilization so regressions in block
   economy are as visible as throughput regressions.
 
+With ``--pallas on`` (the default), each scenario x residual mode adds a
+``paged+pallas`` row serving the SAME trace through the block-table-native
+paged-attention kernel (kernels/paged_attention.py) — bit-identical
+tokens, so its throughput column isolates the read-path implementation;
+off-TPU the kernel runs in interpret mode and the row only guards against
+pathological regressions (the bytes-read win is benchmarks/kernel_bench.py).
+
 With ``--spec`` (default: ngram), each scenario x residual mode also runs
 a speculative-decoding row (engine ``paged+spec-<mode>``) reporting
 accept-rate and tokens-per-forward alongside throughput.  Spec rows decode
@@ -58,13 +65,15 @@ def _percentiles(xs, ps=(50, 99)):
     return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
-def _make_engine(cfg, params, args, s_max, spec: str):
+def _make_engine(cfg, params, args, s_max, spec: str, use_pallas: bool):
     """Engine for one bench row: ragged oracle, plain paged, or paged with
-    the requested speculative drafter."""
+    the requested speculative drafter; `use_pallas` routes the paged
+    attention read through the block-table-native kernel."""
     if args.engine == "ragged":
         return sched.ContinuousServingEngine(
             cfg, params, batch_slots=args.slots, s_max=s_max,
             max_prefills_per_step=1)
+    pal = dict(use_pallas=True) if use_pallas else {}
     if spec != "off":
         from repro.serving.speculative import (SpeculativePagedEngine,
                                                derive_draft_cfg)
@@ -77,18 +86,90 @@ def _make_engine(cfg, params, args, s_max, spec: str):
             cfg, params, batch_slots=args.slots, s_max=s_max,
             block_size=args.block_size,
             max_prefill_tokens=args.prefill_budget,
-            spec_mode=spec, spec_k=args.spec_k, **kw)
+            spec_mode=spec, spec_k=args.spec_k, **kw, **pal)
     return sched.PagedServingEngine(
         cfg, params, batch_slots=args.slots, s_max=s_max,
         block_size=args.block_size,
-        max_prefill_tokens=args.prefill_budget)
+        max_prefill_tokens=args.prefill_budget, **pal)
+
+
+def _warm_paged_variants(engine, longest: int, temperature: float):
+    """Compile every reachable (prefill-bucket x block-table-width) and
+    (decode-or-verify x width) jit variant outside the clock.
+
+    Prefix-cache hits and chunking make chunk length and table width
+    independent — a 5-token tail chunk can attend through a 4-block-wide
+    table — and decode/verify widths depend on the live rows' kv lengths,
+    so traffic-shaped warmup cannot cover the grid reliably; each variant
+    instead runs one MASKED step (length 0 / active all-False: every
+    position is -1, K/V writes drop, sampled tokens discarded — engine
+    state is untouched)."""
+    import jax.numpy as jnp
+    from repro.serving.sampler import GREEDY_EPS
+
+    bs = engine.block_size
+    budget = engine.scheduler.max_prefill_tokens
+    greedy = temperature <= GREEDY_EPS
+    lbs, b = [], 16
+    while b < min(longest, budget):
+        lbs.append(b)
+        b *= 2
+    lbs.append(b)
+    widths = []
+    w = 1
+    while w < engine.max_blocks:
+        widths.append(w)
+        w *= 2
+    widths.append(engine.max_blocks)
+    nb = engine.batch_slots
+    zf = lambda n: jnp.zeros((n,), jnp.float32)
+    zi = lambda n: jnp.zeros((n,), jnp.int32)
+    for lb in lbs:
+        # smallest real chunk of bucket lb (the lowest bucket rounds every
+        # chunk of 1..lb tokens up, so its smallest chunk is 1 token)
+        min_chunk = 1 if lb == lbs[0] else lb // 2 + 1
+        min_blocks = -(-min_chunk // bs)
+        for w in widths:
+            if w < min_blocks:
+                continue  # unreachable: table can't hold the chunk
+            engine.caches, _ = engine._prefill_chunk(
+                engine.params, engine.caches,
+                jnp.zeros((1, lb), jnp.int32),
+                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+                jnp.zeros((1, w), jnp.int32),
+                jnp.asarray([temperature], jnp.float32), zi(1),
+                jnp.asarray([1.0], jnp.float32), zi(1))
+    spec_k = getattr(engine, "spec_k", None)
+    for w in widths:
+        bt = jnp.zeros((nb, w), jnp.int32)
+        inactive = jnp.zeros((nb,), bool)
+        if spec_k is not None:
+            # speculative engines decode through verify, never plain decode
+            base = (engine.params, engine.caches,
+                    jnp.zeros((nb, spec_k + 1), jnp.int32), zi(nb),
+                    inactive, jnp.ones((nb,), jnp.int32), bt)
+            if greedy:
+                engine.caches, _ = engine._verify_greedy(*base)
+            else:
+                engine.caches, _ = engine._verify(
+                    *base, zf(nb) + temperature, zi(nb), zf(nb) + 1.0,
+                    zi(nb))
+        else:
+            base = (engine.params, engine.caches, zi(nb), zi(nb), inactive,
+                    bt)
+            if greedy:
+                engine.caches, _ = engine._decode_greedy(*base)
+            else:
+                engine.caches, _ = engine._decode(
+                    *base, zf(nb) + temperature, zi(nb), zf(nb) + 1.0,
+                    zi(nb))
 
 
 def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
-    """One bench row.  `variant` is (engine_label, spec_mode, temperature);
-    None means the plain engine at the sampled default."""
-    label, spec, temperature = variant or (args.engine, "off",
-                                           args.temperature)
+    """One bench row.  `variant` is (engine_label, spec_mode, temperature,
+    use_pallas); None means the plain engine at the sampled default."""
+    label, spec, temperature, use_pallas = variant or (
+        args.engine, "off", args.temperature, False)
     cfg = REGISTRY[args.arch].reduced(
         n_layers=args.layers, d_model=args.d_model, n_heads=4,
         d_ff=2 * args.d_model, vocab_size=args.vocab,
@@ -109,13 +190,18 @@ def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
     for r in trace:
         r.prompt = shared + r.prompt
 
-    engine = _make_engine(cfg, params, args, s_max, spec)
+    engine = _make_engine(cfg, params, args, s_max, spec, use_pallas)
 
     # warmup: compile EVERY prefill bucket + the decode graph outside the
     # timed run (jit caches are shared through the process-wide tracing cache
-    # only per-callable, so warm the engine's own jitted fns)
+    # only per-callable, so warm the engine's own jitted fns).  The paged
+    # engines additionally retrace per block-table width bucket
+    # (scheduler._bt_width), so the warmup spans short AND long prompts AND
+    # runs each request to completion ALONE — a concurrent warmup batch
+    # would decode every row at the batch-max width and leave the small
+    # width buckets to compile inside the timed run.
     longest = max(len(r.prompt) for r in trace)
-    lengths, b = [], 16
+    lengths, b = [2], 16
     while b < longest:
         lengths.append(b)
         b *= 2
@@ -124,7 +210,9 @@ def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
         engine.submit(sched.Request(
             rid=-1 - i, prompt=[1] * min(lp, s_max - 2), max_new_tokens=2,
             sampling=sched.SamplingParams(temperature=temperature)))
-    engine.run()
+        engine.run()
+    if hasattr(engine, "_prefill_chunk"):  # paged engines only
+        _warm_paged_variants(engine, longest, temperature)
     engine.scheduler.finished.clear()
     if hasattr(engine, "reset_stats"):
         engine.reset_stats()
@@ -197,6 +285,12 @@ def main():
     ap.add_argument("--spec-temperature", type=float, default=0.0,
                     help="sampling temperature for the speculative rows "
                          "(greedy by default)")
+    ap.add_argument("--pallas", default="on", choices=["on", "off"],
+                    help="add a paged+pallas row per scenario/mode (paged "
+                         "attention through the block-table-native kernel; "
+                         "interpret mode off-TPU, so wall clock here only "
+                         "guards against pathological regressions — the "
+                         "bytes-read win lives in kernel_bench.py)")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.7)
@@ -207,12 +301,17 @@ def main():
                                          / "results" / "serve_bench.json"))
     args = ap.parse_args()
 
-    variants = [(args.engine, "off", args.temperature)]
+    variants = [(args.engine, "off", args.temperature, False)]
+    if args.engine == "paged" and args.pallas == "on":
+        # same traffic through the paged-attention kernel: tokens are
+        # bit-identical, so any count difference is a bug, not jitter
+        variants.append(("paged+pallas", "off", args.temperature, True))
     if args.engine == "paged" and args.spec != "off":
         # a plain greedy row at the spec temperature (apples-to-apples
         # counterpart), then one row per requested drafter
-        variants.append(("paged-greedy", "off", args.spec_temperature))
-        variants += [(f"paged+spec-{sp}", sp, args.spec_temperature)
+        variants.append(("paged-greedy", "off", args.spec_temperature,
+                         False))
+        variants += [(f"paged+spec-{sp}", sp, args.spec_temperature, False)
                      for sp in (x.strip() for x in args.spec.split(","))
                      if sp]
     rows = [bench_mode(m.strip(), sc.strip(), args, variant=v)

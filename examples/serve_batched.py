@@ -11,8 +11,14 @@ sampling.  The modeled TP-8/TP-16 latencies come from core/schedule.py
 (printed at the end).
 
     PYTHONPATH=src python examples/serve_batched.py
+
+``--use-pallas`` reads the KV pool through the block-table-native Pallas
+paged-attention kernel instead of the gather path — same tokens, bytes-read
+scaling with each row's actual kv length (DESIGN.md §Paged-attention
+kernel); interpret mode on CPU, so it is slower here and faster on TPU.
 """
 
+import argparse
 import sys
 import time
 from pathlib import Path
@@ -30,6 +36,12 @@ from repro.serving.scheduler import (PagedServingEngine, Request,
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="paged attention via the Pallas kernel "
+                         "(bit-identical tokens; interpret mode on CPU)")
+    args = ap.parse_args()
+
     cfg = REGISTRY["stablelm-3b"].reduced(
         n_layers=4, d_model=256, n_heads=8, d_ff=1024, vocab_size=4096
     ).replace(residual_mode=ResidualMode.LADDER)
@@ -37,7 +49,8 @@ def main():
 
     rng = np.random.default_rng(1)
     engine = PagedServingEngine(cfg, params, batch_slots=3, s_max=96,
-                                block_size=8, max_prefill_tokens=32)
+                                block_size=8, max_prefill_tokens=32,
+                                use_pallas=args.use_pallas or None)
 
     # 6 requests behind ONE shared 32-token system prompt (4 full blocks at
     # block_size=8): request 0 prefills it once, every later admission hits

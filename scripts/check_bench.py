@@ -11,6 +11,13 @@ Checks per row:
   * tokens_per_s      >= baseline * (1 - --tps-tol)
   * per-token p99 ms  <= baseline * (1 + --p99-tol)
 
+Additionally gates the paged-attention kernel's bytes-read model
+(results/kernel_bench.json, regenerated with --run): the kernel's KV
+traffic must stay below the full-table gather path's at every uniform
+occupancy >= 50%, and must show at least a 4x reduction at 25% occupancy
+(traffic scaling with actual kv length is the kernel's whole point —
+DESIGN.md §Paged-attention kernel).
+
 Default tolerances are deliberately loose (CI machines are noisy and the
 reduced-config bench runs on one CPU): the gate exists to catch the
 engine accidentally serializing, not 5% jitter.
@@ -37,7 +44,7 @@ _REPLAY = [
     "arch", "engine", "requests", "rate", "slots", "max_prompt", "max_new",
     "shared_len", "vocab", "block_size", "prefill_budget", "layers",
     "d_model", "temperature", "seed", "modes", "scenarios",
-    "spec", "spec_k", "spec_temperature",
+    "spec", "spec_k", "spec_temperature", "pallas",
 ]
 
 
@@ -84,6 +91,43 @@ def compare(baseline: dict, candidate: dict, tps_tol: float,
     return failures
 
 
+def check_kernel_bench(path: Path) -> int:
+    """Gate the paged-attention kernel's bytes-read model: traffic must
+    track actual kv length, not table width.  Rows come from
+    benchmarks/kernel_bench.py; the model is analytical (deterministic),
+    so this is a hard invariant, not a tolerance check."""
+    if not path.exists():
+        print(f"FAIL kernel_bench: {path} missing "
+              "(run benchmarks/kernel_bench.py)")
+        return 1
+    rows = json.loads(path.read_text())["rows"]
+    failures = 0
+    saw_25 = saw_50 = False
+    for r in rows:
+        if r.get("scenario") != "uniform":
+            continue
+        occ = r["occupancy"]
+        ok = True
+        if occ >= 0.5:
+            saw_50 = True
+            ok &= r["bytes_kernel"] <= r["bytes_gather_full"]
+        if abs(occ - 0.25) < 1e-6:
+            saw_25 = True
+            ok &= r["reduction_vs_full"] >= 4.0
+        print(f"{'ok  ' if ok else 'FAIL'} kernel_bench/occ{occ}: "
+              f"kernel {r['bytes_kernel']} B vs gather "
+              f"{r['bytes_gather_full']} B "
+              f"(x{r['reduction_vs_full']} reduction)")
+        failures += 0 if ok else 1
+    # an artifact without the gated rows must fail, not pass vacuously —
+    # the same rule compare() applies to dropped serve rows
+    if not (saw_25 and saw_50):
+        print("FAIL kernel_bench: gated occupancy rows missing "
+              "(need uniform rows at 0.25 and >= 0.5)")
+        failures += 1
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -92,17 +136,27 @@ def main(argv=None) -> int:
                     help="candidate result JSON (omit with --run)")
     ap.add_argument("--run", action="store_true",
                     help="run a fresh bench with the baseline's config "
-                         "into results/serve_bench.tmp.json and compare it")
+                         "into results/serve_bench.tmp.json and compare it "
+                         "(also regenerates the kernel_bench bytes model)")
     ap.add_argument("--tps-tol", type=float, default=0.5,
                     help="max fractional tokens/sec drop (default 0.5)")
     ap.add_argument("--p99-tol", type=float, default=1.0,
                     help="max fractional p99 increase (default 1.0 = 2x)")
+    ap.add_argument("--kernel-bench",
+                    default=str(ROOT / "results" / "kernel_bench.json"),
+                    help="kernel_bench artifact to gate (bytes-read model)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
+    kernel_path = Path(args.kernel_bench)
     if args.run:
         cand_path = ROOT / "results" / "serve_bench.tmp.json"
         run_bench(baseline, cand_path)
+        kernel_path = ROOT / "results" / "kernel_bench.tmp.json"
+        cmd = [sys.executable, str(ROOT / "benchmarks" / "kernel_bench.py"),
+               "--out", str(kernel_path)]
+        print("+", " ".join(cmd))
+        subprocess.run(cmd, check=True, stdout=subprocess.DEVNULL)
     elif args.candidate:
         cand_path = Path(args.candidate)
     else:
@@ -110,6 +164,7 @@ def main(argv=None) -> int:
     candidate = json.loads(Path(cand_path).read_text())
 
     failures = compare(baseline, candidate, args.tps_tol, args.p99_tol)
+    failures += check_kernel_bench(kernel_path)
     if failures:
         print(f"{failures} bench regression(s) vs {args.baseline}")
     else:

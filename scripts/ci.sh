@@ -21,7 +21,9 @@ if [[ "${1:-}" == "--lint" ]]; then
     # Format ratchet: files added since the CI pipeline landed are held to
     # `ruff format`; extend this list as older files get reformatted.
     python -m ruff format --check \
-        scripts/check_bench.py tests/test_paged.py tests/test_ci_pipeline.py
+        scripts/check_bench.py tests/test_paged.py tests/test_ci_pipeline.py \
+        src/repro/kernels/paged_attention.py tests/test_paged_kernel.py \
+        benchmarks/kernel_bench.py
     exit 0
 fi
 

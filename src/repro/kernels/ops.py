@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import rwkv6 as _rw
 from repro.kernels import ssm_scan as _ssm
@@ -38,6 +39,23 @@ def flash_attention(q, k, v, *, scale: float, window: int = 0,
     out = _fa.flash_attention(qf, kf, vf, scale=scale, window=window,
                               softcap=softcap, interpret=_interpret())
     return out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("scale", "block_size", "softcap",
+                                   "num_splits"))
+def paged_attention(q, k, v, block_tables, positions, *, scale: float,
+                    block_size: int, softcap: float = 0.0,
+                    num_splits: int = 0):
+    """Model-facing: q (B, Q, Hq, hd) at per-query absolute `positions`
+    (B, Q) (-1 = padding/inactive), against the paged pool k/v
+    (Hkv, n_blocks*bs, hd) through `block_tables` (B, M).  Replaces the
+    paged_view gather + _cached_attention read on the serving hot path —
+    bytes-read scales with each row's actual kv length instead of the
+    table width (kernels/paged_attention.py)."""
+    return _pa.paged_attention(q, k, v, block_tables, positions,
+                               scale=scale, block_size=block_size,
+                               softcap=softcap, num_splits=num_splits,
+                               interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("eps",))

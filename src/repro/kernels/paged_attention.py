@@ -1,0 +1,245 @@
+"""Pallas TPU paged attention: block-table-native flash decoding.
+
+The serving engine's paged branch used to read the KV cache with a dense
+gather (``paged_view``): every decode step materialised each row's entire
+``max_blocks * block_size`` padded logical view before attending, so HBM
+traffic scaled with pool width instead of actual sequence length.  This
+kernel walks the block table *in-kernel* instead — the BlockSpec index_map
+translates a logical block index into the physical pool block via a
+scalar-prefetched ``block_tables`` argument, so only the row's own KV
+blocks are ever streamed from HBM and bytes-read scales with
+``ceil(kv_len / block_size)`` (benchmarks/kernel_bench.py pins the model).
+
+Grid ``(B * Hkv, num_splits, blocks_per_split)``:
+
+* axis 0 fuses (batch row, local kv head) — one online-softmax state per
+  cell, GQA without materialised KV repetition: the group's ``Q * G`` query
+  rows stay resident in VMEM while that kv head's tiles stream past (same
+  trick as kernels/flash_attention.py, with the group dim folded into the
+  q-tile rows instead of the grid).
+* axis 1 is the split-K dimension: each split covers a contiguous range of
+  logical blocks and emits PARTIAL softmax statistics ``(m, l, acc)``; the
+  host-side combine (``_combine_splits``) merges them with exactly the
+  ``(m, l)`` contract ``_cached_attention`` already uses for seq-sharded
+  flash decoding, so a TP/DP stats combine composes unchanged on top.
+* axis 2 walks the split's logical blocks (grid-minor: VMEM scratch carries
+  the online-softmax state across iterations).  Tiles whose first position
+  lies beyond the row's last query position are skipped with ``pl.when`` —
+  the per-row ragged early exit.
+
+Queries are general ``Q >= 1`` with *per-query absolute positions*
+(padding / inactive rows at -1), so plain decode (Q = 1), speculative K+1
+verification and chunked prefill all run through the same kernel: the mask
+``kv_pos <= q_pos`` is simultaneously the ragged length mask and the
+causal mask among fresh tokens (their K/V is scattered into the pool
+before the kernel runs — engine.build_paged_steps).
+
+Validated in interpret mode against the ``paged_view`` gather oracle over
+block_size x GQA group x ragged kv_len x Q x softcap
+(tests/test_paged_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    bt_ref,
+    qpos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    m_out,
+    l_out,
+    acc_out,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    softcap: float,
+    block_size: int,
+    group: int,
+    blocks_per_split: int,
+    hkv: int,
+):
+    cell = pl.program_id(0)  # fused (row, kv head)
+    split = pl.program_id(1)
+    j = pl.program_id(2)  # block within this split
+    row = cell // hkv
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    logical = split * blocks_per_split + j
+    qp = qpos_ref[row]  # (Q,) absolute query positions
+    # ragged early exit: tiles past the row's last query position hold no
+    # readable KV (reads are masked to kv_pos <= q_pos); inactive rows
+    # (all positions -1) skip every tile and emit l = 0
+    in_range = logical * block_size <= jnp.max(qp)
+
+    @pl.when(in_range)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale  # (Q*G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qg = q.shape[0]
+        # query row i*G+g carries query i's position (the (Q, G) q-tile
+        # layout below flattens row-major)
+        qpg = jnp.repeat(qp, group, total_repeat_length=qg)
+        kvpos = logical * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (qg, block_size), 1
+        )
+        s = jnp.where(kvpos <= qpg[:, None], s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        # query rows with no valid key yet keep l = 0 (m still NEG_INF
+        # makes exp(s - m) collapse to exp(0) = 1, not 0)
+        p = jnp.where(m_new[:, None] > NEG_INF / 2, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p,
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == blocks_per_split - 1)
+    def _finalize():
+        m_out[0, 0] = m_ref[...]
+        l_out[0, 0] = l_ref[...]
+        acc_out[0, 0] = acc_ref[...]
+
+
+def _combine_splits(ms, ls, accs):
+    """Merge split-K partial stats over axis 1 — the flash-decoding
+    ``(m, l)`` contract (cf. models/attention._cached_attention's
+    seq-sharded combine, which psums the same quantities over 'data')."""
+    m_glob = jnp.max(ms, axis=1)  # (BH, QG)
+    corr = jnp.exp(ms - m_glob[:, None])
+    num = jnp.sum(accs * corr[..., None], axis=1)  # (BH, QG, hd)
+    den = jnp.sum(ls * corr, axis=1)
+    return num / jnp.maximum(den, 1e-37)[..., None]
+
+
+def paged_attention(
+    q,
+    k,
+    v,
+    block_tables,
+    qpos,
+    *,
+    scale: float,
+    block_size: int,
+    softcap: float = 0.0,
+    num_splits: int = 0,
+    interpret: bool = False,
+):
+    """Attention of q against a paged KV pool, through the block table.
+
+    q: (B, Q, Hq, hd) — Q >= 1 query tokens per row (decode Q=1,
+        speculative verify Q=K+1, prefill chunks Q=chunk).
+    k, v: (Hkv, num_blocks * block_size, hd) physical pool; block ``b``
+        owns pool slots [b*bs, (b+1)*bs).
+    block_tables: (B, M) int32 logical -> physical block ids (M may be any
+        host-sliced width covering every block the rows use).
+    qpos: (B, Q) int32 absolute position of each query token; -1 marks
+        padding / inactive rows (their output is 0 — callers never read it).
+    num_splits: split-K parallelism (0 = auto); long rows fan out over the
+        grid and partials merge host-side in ``_combine_splits``.
+
+    Returns (B, Q, Hq, hd) in q.dtype.
+    """
+    b, nq, hq, hd = q.shape
+    hkv, n_tok, _ = k.shape
+    group = hq // hkv
+    qg = nq * group
+    m = block_tables.shape[1]
+    if num_splits <= 0:
+        # enough splits that short grids still spread, never more than the
+        # table has blocks
+        num_splits = max(1, min(4, m // 2))
+    ns = min(num_splits, m)
+    bps = -(-m // ns)
+    pad = ns * bps - m
+    if pad:
+        # padded logical blocks index past every row's last position, so
+        # the in_range guard skips them (entry 0 keeps the index_map safe)
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad)))
+    kp = k.reshape(hkv, n_tok // block_size, block_size, hd)
+    vp = v.reshape(hkv, n_tok // block_size, block_size, hd)
+    # (B, Q, Hkv, G, hd) -> (B*Hkv, Q*G, hd): the kv head is grid-major,
+    # its whole query group rides in one VMEM-resident q tile
+    qf = q.reshape(b, nq, hkv, group, hd).transpose(0, 2, 1, 3, 4)
+    qf = qf.reshape(b * hkv, qg, hd)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        softcap=softcap,
+        block_size=block_size,
+        group=group,
+        blocks_per_split=bps,
+        hkv=hkv,
+    )
+
+    def kv_map(c, s, j, bt, qp):
+        # logical block (s * bps + j) of row (c // hkv) -> physical block
+        return (c % hkv, bt[c // hkv, s * bps + j], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, qpos
+        grid=(b * hkv, ns, bps),
+        in_specs=[
+            pl.BlockSpec((1, qg, hd), lambda c, s, j, bt, qp: (c, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, hd), kv_map),
+            pl.BlockSpec((1, 1, block_size, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, qg), lambda c, s, j, bt, qp: (c, s, 0)),
+            pl.BlockSpec((1, 1, qg), lambda c, s, j, bt, qp: (c, s, 0)),
+            pl.BlockSpec((1, 1, qg, hd), lambda c, s, j, bt, qp: (c, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qg,), jnp.float32),  # running max
+            pltpu.VMEM((qg,), jnp.float32),  # running denominator
+            pltpu.VMEM((qg, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    ms, ls, accs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, ns, qg), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, ns, qg), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, ns, qg, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, qpos, qf, kp, vp)
+
+    out = _combine_splits(ms, ls, accs)
+    out = out.reshape(b, hkv, nq, group, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, nq, hq, hd).astype(q.dtype)

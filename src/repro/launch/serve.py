@@ -42,6 +42,13 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=128,
                     help="paged engine: max prompt tokens prefilled per "
                          "engine step (chunked prefill)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="run attention through the Pallas kernels: the "
+                         "paged engine reads the KV pool with the "
+                         "block-table-native paged-attention kernel "
+                         "(bytes-read tracks each row's actual kv length); "
+                         "tokens are bit-identical to the default gather "
+                         "path.  Compiled on TPU, interpret mode elsewhere")
     ap.add_argument("--spec-decode", default="off",
                     choices=["off", "ngram", "draft"],
                     help="speculative decoding on the paged engine: ngram "
@@ -85,6 +92,8 @@ def main():
     if args.reduced:
         cfg = cfg.reduced(n_layers=4, d_model=256, n_heads=4, d_ff=512,
                           vocab_size=2048)
+    if args.use_pallas:
+        cfg = cfg.replace(use_pallas=True)
     pcfg = ParallelConfig(tp=args.tp, dp=args.dp)
     mesh = make_mesh_for(pcfg.world, args.tp) if pcfg.world > 1 else None
 
@@ -163,9 +172,14 @@ def main():
         wall = time.time() - t0
 
     n_tok = sum(len(f.tokens) for f in finished.values())
+    # the paged-attention kernel only exists on the paged path; a ragged
+    # fallback run must not be labelled as if the kernel served it
+    pallas_tag = "+pallas" if args.use_pallas and kind.startswith("paged") \
+        else ""
     print(f"[serve] {len(finished)}/{len(trace)} requests, {n_tok} tokens "
           f"in {wall:.2f}s ({n_tok / max(wall, 1e-9):.1f} tok/s) "
-          f"engine={kind} slots={args.slots} tp={args.tp} dp={args.dp}")
+          f"engine={kind}{pallas_tag} "
+          f"slots={args.slots} tp={args.tp} dp={args.dp}")
     if kind.startswith("paged"):
         st = engine.stats()
         print(f"[serve] paged: prefix_hit_rate={st['prefix_hit_rate']:.2f} "

@@ -210,20 +210,36 @@ def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
         ko, vo, kv_mask = kv_override
         out = _encoder_attention(q * scale, ko, vo, kv_mask, softcap)
     elif isinstance(cache, PagedKVCache):
-        # Paged path (prefill chunks AND decode): scatter this step's K/V
-        # into the block pool, then attend against the row's gathered
-        # logical view.  One code path for every step shape is what makes
-        # chunked == one-shot == prefix-hit prefills bit-identical — every
-        # query attends over the same view width with the same valid set,
-        # regardless of how the prompt was chunked (DESIGN.md §Paged KV).
+        # Paged path (prefill chunks, decode AND speculative verify):
+        # scatter this step's K/V into the block pool, then attend against
+        # the row's logical view.  One code path for every step shape is
+        # what makes chunked == one-shot == prefix-hit prefills
+        # bit-identical — every query attends over the same valid set with
+        # the mask kv_pos <= query_pos, regardless of how the prompt was
+        # chunked (DESIGN.md §Paged KV).
+        #
+        # use_pallas picks the read implementation: the Pallas kernel walks
+        # the block table in-kernel and streams only the row's own blocks
+        # (DESIGN.md §Paged-attention kernel); the default gather
+        # (paged_view) materialises the full table width and stays as the
+        # bit-level oracle the kernel is validated against
+        # (tests/test_paged_kernel.py).
         if window:
             raise NotImplementedError("paged caches for sliding-window "
                                       "attention (ring layers)")
         if block_tables is None:
             raise ValueError("paged cache requires block_tables")
         cache = paged_update(cache, k, v, positions, block_tables)
-        out = _cached_attention(q * scale, paged_view(cache, block_tables),
-                                positions, env, softcap=softcap)
+        if use_pallas:
+            from repro.kernels import ops
+            out = ops.paged_attention(q, cache.k, cache.v, block_tables,
+                                      positions, scale=scale,
+                                      block_size=cache.block_size,
+                                      softcap=softcap)
+        else:
+            out = _cached_attention(q * scale,
+                                    paged_view(cache, block_tables),
+                                    positions, env, softcap=softcap)
     elif cache is None or s > 1:
         # train, or prefill: attention over the fresh K/V via the blocked
         # online-softmax path (prefill additionally writes the cache; the

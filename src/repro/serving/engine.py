@@ -25,6 +25,8 @@ with a psum over 'data') — see models/attention._cached_attention.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -342,15 +344,29 @@ def build_continuous_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
 
 
 def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
-                      batch_slots: int, rng_seed: int = 0):
+                      batch_slots: int, rng_seed: int = 0,
+                      use_pallas: Optional[bool] = None):
     """Steps for the paged-KV serving engine (block-pool caches; see
     serving/scheduler.PagedScheduler for the host-side block management).
+
+    use_pallas: override ``cfg.use_pallas`` for these steps — True routes
+    the paged attention read through the block-table-native Pallas kernel
+    (kernels/paged_attention.py), False forces the paged_view gather
+    oracle, None keeps the config's setting.  Token streams are
+    bit-identical either way (tests/test_paged_kernel.py).
+
+    Block tables: every step takes a ``bt``/``bts`` table of shape
+    (rows, W) where W is ANY width covering every block the step's rows
+    use — the host slices the static ``max_blocks`` table down to the
+    bucketed max in-use block count (scheduler.PagedServingEngine._bt_width)
+    so both the gather path's traffic and the kernel's grid track actual
+    pool occupancy instead of the worst case.
 
     prefill_chunk(params, caches, tokens, start, length, bt, temp, top_k,
                   top_p, seed)
         Run ONE chunk of ONE request's prompt: tokens (1, C) right-padded,
         `length` real tokens at absolute positions start..start+length-1.
-        K/V scatters through the (1, max_blocks) block table `bt`; the chunk
+        K/V scatters through the (1, W) block table `bt`; the chunk
         attends to everything the table already holds (earlier chunks and
         prefix-cache hits included), so long prompts interleave with decode
         in bounded per-step token budgets.  Also samples the token following
@@ -380,6 +396,8 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
     ragged engine, so paged and ragged serving emit identical tokens — and
     speculative verification emits identical tokens to step-by-step decode.
     """
+    if use_pallas is not None and use_pallas != cfg.use_pallas:
+        cfg = cfg.replace(use_pallas=use_pallas)
     env = make_axis_env(pcfg)
     pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
     base_key = jax.random.key(rng_seed)

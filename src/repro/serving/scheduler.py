@@ -746,7 +746,8 @@ class PagedServingEngine(_ServingEngineBase):
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  pcfg=None, mesh=None, eos_id: Optional[int] = None,
                  rng_seed: int = 0, max_prefill_tokens: int = 128,
-                 prefill_bucket_min: int = 16, prefix_caching: bool = True):
+                 prefill_bucket_min: int = 16, prefix_caching: bool = True,
+                 use_pallas: Optional[bool] = None):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -773,6 +774,11 @@ class PagedServingEngine(_ServingEngineBase):
             raise NotImplementedError(
                 "paged serving shards over TP only (the block pool has no "
                 "batch axis for DP)")
+        if use_pallas is not None and use_pallas != cfg.use_pallas:
+            # route the paged attention read through the block-table-native
+            # Pallas kernel (or force the gather oracle); token streams are
+            # bit-identical either way (tests/test_paged_kernel.py)
+            cfg = cfg.replace(use_pallas=use_pallas)
 
         self._jnp, self._np = jnp, np
         self.cfg = cfg
@@ -793,7 +799,8 @@ class PagedServingEngine(_ServingEngineBase):
 
         steps = engine_mod.build_paged_steps(cfg, pcfg,
                                              batch_slots=batch_slots,
-                                             rng_seed=rng_seed)
+                                             rng_seed=rng_seed,
+                                             use_pallas=use_pallas)
         self.caches, cache_specs = engine_mod.build_caches(
             cfg, batch_slots, s_max, pcfg, for_decode=False, paged=True,
             num_blocks=self.num_blocks, block_size=block_size)
@@ -886,13 +893,26 @@ class PagedServingEngine(_ServingEngineBase):
         self.scheduler.ensure_decode_blocks()
         for slot in live:
             self._fill_bt_row(slot)
-        return self._decode_step(live, (self._jnp.asarray(self._bt),))
+        w = self._bt_width(live)
+        return self._decode_step(live, (self._jnp.asarray(self._bt[:, :w]),))
 
     # -- internals ----------------------------------------------------------
     def _fill_bt_row(self, slot: int):
         row = self.scheduler.block_table_row(slot)
         self._bt[slot, :len(row)] = row
         self._bt[slot, len(row):] = 0
+
+    def _bt_width(self, slots: List[int]) -> int:
+        """Power-of-two bucket of the max in-use block count among `slots`.
+
+        The steps accept any table width covering the rows' blocks
+        (engine.build_paged_steps), so passing the bucketed live width
+        instead of the static ``max_blocks`` makes the gather oracle's
+        traffic — and the Pallas kernel's grid — track actual pool
+        occupancy, at the cost of O(log max_blocks) jit variants (same
+        trade as the prefill length buckets)."""
+        used = max(len(self.scheduler.slots[s].blocks) for s in slots)
+        return min(_bucket(used, 1), self.max_blocks)
 
     def _run_chunk(self, slot: int, req: Request, chunk: List[int],
                    start: int) -> int:
@@ -903,10 +923,11 @@ class PagedServingEngine(_ServingEngineBase):
         toks = np.zeros((1, lb), np.int32)
         toks[0, :c] = chunk
         self._fill_bt_row(slot)
+        w = self._bt_width([slot])
         self.caches, tok = self._prefill_chunk(
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(start, jnp.int32), jnp.asarray(c, jnp.int32),
-            jnp.asarray(self._bt[slot:slot + 1]),
+            jnp.asarray(self._bt[slot:slot + 1, :w]),
             jnp.asarray([sp.temperature], jnp.float32),
             jnp.asarray([sp.top_k], jnp.int32),
             jnp.asarray([sp.top_p], jnp.float32),

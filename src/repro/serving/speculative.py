@@ -358,9 +358,10 @@ class SpeculativePagedEngine(PagedServingEngine):
             sched.ensure_blocks_through(slot, int(self._pos[slot]) + len(d))
             self._fill_bt_row(slot)
 
+        w = self._bt_width(live)
         base = (self.params, self.caches, jnp.asarray(toks),
                 jnp.asarray(self._pos), jnp.asarray(self._active),
-                jnp.asarray(klen), jnp.asarray(self._bt))
+                jnp.asarray(klen), jnp.asarray(self._bt[:, :w]))
         if all(self._temp[s] <= GREEDY_EPS for s in live):
             self.caches, tgt = self._verify_greedy(*base)
         else:

@@ -457,12 +457,73 @@ def serve_spec_tp():
               eng.stats()["verify_forwards"] > 0)
 
 
+def serve_kernel_tp():
+    """Paged engine with the block-table-native Pallas paged-attention
+    kernel (use_pallas=True, interpret mode) on a TP=2 mesh emits
+    bit-identical tokens to the ragged TP=1 gather oracle — for plain
+    decode, chunked prefill AND speculative K+1 verification, the pool
+    sharded over kv heads and the kernel's split-K stats combined per
+    shard."""
+    from repro.serving.scheduler import (ContinuousServingEngine,
+                                         PagedServingEngine, Request,
+                                         SamplingParams)
+    from repro.serving.speculative import SpeculativePagedEngine
+    cfg = _cfg("stablelm-3b", "ladder", d_model=64, n_heads=4, d_ff=128,
+               vocab_size=256)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 16).tolist()
+    reqs = [Request(rid=i,
+                    prompt=(shared if i != 1 else []) +
+                    rng.integers(0, cfg.vocab_size, lp).tolist(),
+                    max_new_tokens=g, sampling=s)
+            for i, (lp, g, s) in enumerate([
+                (5, 6, SamplingParams()),
+                (11, 4, SamplingParams(temperature=0.7, top_k=12, seed=3)),
+                (7, 5, SamplingParams(temperature=1.0, top_p=0.9, seed=8))])]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+
+    iso = {}
+    for r in reqs:
+        e = ContinuousServingEngine(cfg, params, batch_slots=1, s_max=48)
+        e.submit(clone(r))
+        iso[r.rid] = e.run()[r.rid].tokens
+
+    pcfg = ParallelConfig(tp=2, dp=1)
+    mesh2 = compat.make_mesh((2,), ("model",))
+    p2, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
+    eng = PagedServingEngine(cfg, p2, batch_slots=2, s_max=48, block_size=8,
+                             max_prefill_tokens=16, pcfg=pcfg, mesh=mesh2,
+                             use_pallas=True)
+    for r in reqs:
+        eng.submit(clone(r))
+    paged = eng.run()
+    for rid, toks in iso.items():
+        check(f"serve_kernel tp2 rid={rid}", toks == paged[rid].tokens)
+
+    eng = SpeculativePagedEngine(
+        cfg, p2, batch_slots=2, s_max=48, block_size=8,
+        max_prefill_tokens=16, pcfg=pcfg, mesh=mesh2, use_pallas=True,
+        spec_mode="ngram", spec_k=3)
+    for r in reqs:
+        eng.submit(clone(r))
+    spec = eng.run()
+    for rid, toks in iso.items():
+        check(f"serve_kernel tp2 spec rid={rid}", toks == spec[rid].tokens)
+    check("serve_kernel tp2 spec verified",
+          eng.stats()["verify_forwards"] > 0)
+
+
 CHECKS = dict(tp=tp_equivalence, fsdp=fsdp_equivalence,
               zero1=zero1_equivalence, sp=sp_equivalence,
               padded=padded_heads, flashdec=flash_decode_seq_sharded,
               pp=pipeline_parity, compress=grad_compression,
               q8=q8_weight_gather, serve_cb=serve_continuous_batching,
-              serve_paged=serve_paged_tp, serve_spec=serve_spec_tp)
+              serve_paged=serve_paged_tp, serve_spec=serve_spec_tp,
+              serve_kernel=serve_kernel_tp)
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"

@@ -165,6 +165,33 @@ def test_check_bench_rejects_degraded_and_missing_rows(tmp_path):
     assert r2.returncode != 0 and "missing" in r2.stdout
 
 
+def test_check_bench_kernel_bytes_gate(tmp_path):
+    """The paged-attention kernel's bytes-read model is gated: kernel
+    traffic above the gather path's (or a missing artifact) must fail."""
+    kb_path = ROOT / "results" / "kernel_bench.json"
+    bad = json.loads(kb_path.read_text())
+    for row in bad["rows"]:
+        row["bytes_kernel"] = row["bytes_gather_full"] * 2
+        row["reduction_vs_full"] = 0.5
+    p = tmp_path / "kernel_bad.json"
+    p.write_text(json.dumps(bad))
+    r = subprocess.run(
+        [sys.executable, str(CHECK), "--candidate", str(BASELINE),
+         "--kernel-bench", str(p)],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode != 0 and "kernel_bench" in r.stdout
+
+    r2 = subprocess.run(
+        [sys.executable, str(CHECK), "--candidate", str(BASELINE),
+         "--kernel-bench", str(tmp_path / "nope.json")],
+        capture_output=True,
+        text=True,
+    )
+    assert r2.returncode != 0 and "missing" in r2.stdout
+
+
 def test_check_bench_p99_gate(tmp_path):
     base = json.loads(BASELINE.read_text())
     slow = json.loads(json.dumps(base))

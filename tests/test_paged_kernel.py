@@ -1,0 +1,384 @@
+"""Paged-attention kernel tests (DESIGN.md §Paged-attention kernel).
+
+Layers, bottom-up:
+
+* kernel vs gather oracle — interpret-mode equivalence of
+  ``kernels.paged_attention`` against the ``paged_view`` +
+  ``_cached_attention`` read it replaces, swept over block_size x GQA
+  group x ragged kv_len x Q (plain decode and K+1 verify shapes) x
+  softcap, including inactive (-1) rows and permuted/shared block tables.
+* split-K — partial-stats combine is invariant to the split count.
+* host-side table slicing — the engine feeds the jitted steps bucketed
+  live-width tables, so the oracle path's gather traffic tracks occupancy.
+* engine equivalence — ``use_pallas=True`` emits token streams
+  bit-identical to the gather path for ladder/standard/desync2, chunked
+  prefill, mixed sampling, and speculative decoding with both drafters
+  (the TP=2 group lives in tests/distributed_impl.py: ``serve_kernel``).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, ResidualMode
+from repro.kernels.paged_attention import paged_attention
+from repro.models import transformer as tfm
+from repro.models.attention import _cached_attention
+from repro.parallel.collectives import NULL_ENV
+from repro.serving.kv_cache import (
+    PagedKVCache,
+    make_paged_kv_cache,
+    paged_update,
+    paged_view,
+)
+from repro.serving.scheduler import (
+    ContinuousServingEngine,
+    PagedServingEngine,
+    Request,
+    SamplingParams,
+)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs the gather oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _pool_case(seed, b, q_len, hkv, g, hd, bs, num_blocks, m):
+    """Random pool + per-row permuted block tables + q at given positions."""
+    key = jax.random.key(seed)
+    hq = hkv * g
+    q = jax.random.normal(key, (b, q_len, hq, hd), jnp.float32)
+    k = jax.random.normal(
+        jax.random.fold_in(key, 1), (hkv, num_blocks * bs, hd), jnp.float32
+    )
+    v = jax.random.normal(
+        jax.random.fold_in(key, 2), (hkv, num_blocks * bs, hd), jnp.float32
+    )
+    rng = np.random.default_rng(seed)
+    bt = np.zeros((b, m), np.int32)
+    for row in range(b):  # rows may share blocks (prefix reuse)
+        bt[row] = rng.choice(num_blocks, size=m, replace=False)
+    bt[1:, 0] = bt[0, 0]
+    return q, k, v, jnp.asarray(bt)
+
+
+def _oracle(q, k, v, bt, qpos, *, scale, bs, softcap=0.0):
+    """The read path the kernel replaces: gather the logical view, then the
+    masked softmax read (paged_view + _cached_attention)."""
+    cache = PagedKVCache(k=k, v=v, block_size=bs)
+    view = paged_view(cache, bt)
+    return _cached_attention(q * scale, view, qpos, NULL_ENV, softcap=softcap)
+
+
+@pytest.mark.parametrize(
+    "bs,g,q_len,softcap",
+    [
+        (8, 1, 1, 0.0),  # MHA decode
+        (8, 2, 1, 0.0),  # GQA decode
+        (4, 4, 1, 30.0),  # GQA decode + softcap
+        (8, 2, 5, 0.0),  # K+1 speculative verify
+        (16, 1, 4, 20.0),  # verify + softcap, bigger blocks
+    ],
+)
+def test_kernel_matches_gather_oracle(bs, g, q_len, softcap):
+    b, hkv, hd, num_blocks, m = 3, 2, 32, 16, 4
+    q, k, v, bt = _pool_case(0, b, q_len, hkv, g, hd, bs, num_blocks, m)
+    scale = hd**-0.5
+    # ragged: every row at a different kv length; verify rows additionally
+    # at different klen (trailing queries padded to -1)
+    base = jnp.asarray([2, bs + 3, m * bs - q_len])[:b]
+    ar = jnp.arange(q_len)[None, :]
+    klen = jnp.asarray([q_len, max(1, q_len - 2), 1])[:b]
+    qpos = jnp.where(ar < klen[:, None], base[:, None] + ar, -1)
+    qpos = qpos.astype(jnp.int32)
+
+    got = paged_attention(
+        q,
+        k,
+        v,
+        bt,
+        qpos,
+        scale=scale,
+        block_size=bs,
+        softcap=softcap,
+        interpret=True,
+    )
+    want = _oracle(q, k, v, bt, qpos, scale=scale, bs=bs, softcap=softcap)
+    valid = (qpos >= 0)[:, :, None, None]
+    np.testing.assert_allclose(
+        np.where(valid, got, 0),
+        np.where(valid, want, 0),
+        atol=2e-5,
+        rtol=2e-5,
+    )
+
+
+def test_kernel_inactive_rows_and_single_block():
+    """A fully inactive row (all positions -1) yields zeros — never read by
+    the host, but it must not poison the softmax stats (NaN/inf)."""
+    b, hkv, g, hd, bs = 2, 1, 2, 16, 4
+    q, k, v, bt = _pool_case(1, b, 1, hkv, g, hd, bs, 8, 1)
+    qpos = jnp.asarray([[0], [-1]], jnp.int32)
+    got = paged_attention(
+        q, k, v, bt, qpos, scale=hd**-0.5, block_size=bs, interpret=True
+    )
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_array_equal(np.asarray(got[1]), 0.0)
+    want = _oracle(q, k, v, bt, qpos, scale=hd**-0.5, bs=bs)
+    np.testing.assert_allclose(got[0], want[0], atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_split_k_invariance():
+    """Partial (m, l, acc) stats merge to the same output for any split
+    count — the host-side combine contract flash decoding relies on."""
+    b, hkv, g, hd, bs, m = 2, 2, 2, 32, 8, 6
+    q, k, v, bt = _pool_case(2, b, 3, hkv, g, hd, bs, 16, m)
+    qpos = jnp.asarray([[10, 11, 12], [m * bs - 3, m * bs - 2, -1]], jnp.int32)
+    outs = [
+        paged_attention(
+            q,
+            k,
+            v,
+            bt,
+            qpos,
+            scale=hd**-0.5,
+            block_size=bs,
+            num_splits=ns,
+            interpret=True,
+        )
+        for ns in (1, 2, 3, 6)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), atol=1e-6, rtol=1e-6
+        )
+
+
+def test_kernel_reads_only_written_blocks():
+    """Poisoning pool blocks OUTSIDE every row's table (and inside the
+    table but past each row's kv length) must not change the output: the
+    kernel's block walk + position mask never touches them."""
+    b, hkv, g, hd, bs, nb, m = 2, 1, 1, 16, 4, 12, 3
+    q, k, v, bt = _pool_case(3, b, 1, hkv, g, hd, bs, nb, m)
+    qpos = jnp.asarray([[5], [9]], jnp.int32)
+    ref = paged_attention(
+        q, k, v, bt, qpos, scale=hd**-0.5, block_size=bs, interpret=True
+    )
+    used = set(np.asarray(bt).ravel().tolist())
+    poison_k, poison_v = np.array(k), np.array(v)
+    for blk in set(range(nb)) - used:
+        lo = blk * bs
+        hi = lo + bs
+        poison_k[:, lo:hi] = np.nan
+        poison_v[:, lo:hi] = np.nan
+    got = paged_attention(
+        jnp.asarray(q),
+        jnp.asarray(poison_k),
+        jnp.asarray(poison_v),
+        bt,
+        qpos,
+        scale=hd**-0.5,
+        block_size=bs,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# host-side table slicing (the oracle-path traffic fix)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg(mode):
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=256
+    )
+    return cfg.replace(residual_mode=ResidualMode(mode))
+
+
+def test_engine_slices_block_table_to_live_width():
+    """The decode step must see a power-of-two bucket of the max in-use
+    block count, not the static max_blocks table width."""
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    # s_max=64 at block_size 4 -> max_blocks=16, but a 5-token prompt with
+    # 3 generated tokens touches only ceil(8/4)=2 blocks
+    eng = PagedServingEngine(cfg, params, batch_slots=2, s_max=64, block_size=4)
+    eng.submit(
+        Request(
+            rid=0,
+            prompt=list(range(5)),
+            max_new_tokens=3,
+            sampling=SamplingParams(),
+        )
+    )
+    assert eng.max_blocks == 16
+    widths = []
+    while eng.has_work():
+        eng.step()
+        live = eng.scheduler.decoding_slots()
+        if live:
+            widths.append(eng._bt_width(live))
+    assert widths and all(w == 2 for w in widths)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalences (kernel on == gather oracle, bit-identical tokens)
+# ---------------------------------------------------------------------------
+
+
+def _trace(vocab, rng):
+    shared = rng.integers(0, vocab, 16).tolist()  # 2 full blocks at bs=8
+    cases = [
+        (shared + rng.integers(0, vocab, 5).tolist(), 5, SamplingParams()),
+        (
+            rng.integers(0, vocab, 9).tolist(),
+            4,
+            SamplingParams(temperature=0.8, top_k=20, top_p=0.9, seed=7),
+        ),
+        (shared + rng.integers(0, vocab, 3).tolist(), 4, SamplingParams()),
+    ]
+    return [
+        Request(rid=i, prompt=p, max_new_tokens=g, sampling=sp)
+        for i, (p, g, sp) in enumerate(cases)
+    ]
+
+
+def _clone(r):
+    return Request(
+        rid=r.rid,
+        prompt=list(r.prompt),
+        max_new_tokens=r.max_new_tokens,
+        sampling=r.sampling,
+    )
+
+
+def _run_paged(cfg, params, reqs, *, use_pallas, spec_mode=None, **kw):
+    if spec_mode:
+        from repro.serving.speculative import SpeculativePagedEngine
+
+        eng = SpeculativePagedEngine(
+            cfg,
+            params,
+            batch_slots=2,
+            s_max=48,
+            block_size=8,
+            max_prefill_tokens=16,
+            use_pallas=use_pallas,
+            spec_mode=spec_mode,
+            spec_k=3,
+            **kw,
+        )
+    else:
+        eng = PagedServingEngine(
+            cfg,
+            params,
+            batch_slots=2,
+            s_max=48,
+            block_size=8,
+            max_prefill_tokens=16,
+            use_pallas=use_pallas,
+            **kw,
+        )
+    eng.submit(_clone(reqs[0]))
+    eng.submit(_clone(reqs[1]))
+    eng.step()
+    for r in reqs[2:]:
+        eng.submit(_clone(r))
+    fin = eng.run()
+    return {rid: f.tokens for rid, f in fin.items()}, eng
+
+
+@pytest.mark.parametrize("mode", ["ladder", "standard", "desync2"])
+def test_paged_engine_kernel_matches_gather(mode):
+    """Chunked prefill + mixed-age decode through the kernel emits token
+    streams bit-identical to the gather oracle, all residual modes."""
+    cfg = _tiny_cfg(mode)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    reqs = _trace(cfg.vocab_size, np.random.default_rng(0))
+    want, _ = _run_paged(cfg, params, reqs, use_pallas=False)
+    got, _ = _run_paged(cfg, params, reqs, use_pallas=True)
+    assert got == want
+
+
+@pytest.mark.parametrize("spec_mode", ["ngram", "draft"])
+def test_speculative_verify_kernel_matches_plain_decode(spec_mode):
+    """K+1 verify through the kernel stays bit-identical to plain decode
+    (the ragged oracle), for both drafters."""
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    # repetitive prompts so ngram drafting actually engages
+    reqs = [
+        Request(
+            rid=0,
+            prompt=[5, 6, 7, 5, 6, 7, 5, 6],
+            max_new_tokens=6,
+            sampling=SamplingParams(),
+        ),
+        Request(
+            rid=1,
+            prompt=rng.integers(0, cfg.vocab_size, 9).tolist(),
+            max_new_tokens=4,
+            sampling=SamplingParams(temperature=0.9, top_k=12, seed=3),
+        ),
+        Request(
+            rid=2,
+            prompt=[5, 6, 7, 5, 6, 7],
+            max_new_tokens=5,
+            sampling=SamplingParams(),
+        ),
+    ]
+    iso = {}
+    for r in reqs:
+        e = ContinuousServingEngine(cfg, params, batch_slots=1, s_max=48)
+        e.submit(_clone(r))
+        iso[r.rid] = e.run()[r.rid].tokens
+
+    kw = {}
+    if spec_mode == "draft":
+        dcfg = cfg.reduced(n_layers=1)
+        kw = dict(
+            draft_cfg=dcfg,
+            draft_params=tfm.init_params(dcfg, jax.random.key(7)),
+        )
+    got, eng = _run_paged(
+        cfg, params, reqs, use_pallas=True, spec_mode=spec_mode, **kw
+    )
+    assert got == iso
+    assert eng.stats()["verify_forwards"] > 0
+
+
+def test_paged_update_then_kernel_round_trip():
+    """Scatter + kernel read: writes through the block table land where the
+    kernel's walk finds them (no gather view in between)."""
+    bs, hkv, hd = 4, 1, 16
+    cache = make_paged_kv_cache(
+        num_blocks=6, block_size=bs, hkv=hkv, hd=hd, dtype=jnp.float32
+    )
+    bt = jnp.asarray([[3, 1, 4]], jnp.int32)
+    key = jax.random.key(5)
+    kv_len = 9
+    kn = jax.random.normal(key, (1, kv_len, hkv, hd))
+    vn = jax.random.normal(jax.random.fold_in(key, 1), (1, kv_len, hkv, hd))
+    pos = jnp.arange(kv_len)[None]
+    cache = paged_update(cache, kn, vn, pos, bt)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, hkv, hd))
+    qpos = jnp.asarray([[kv_len - 1]], jnp.int32)
+    got = paged_attention(
+        q,
+        cache.k,
+        cache.v,
+        bt,
+        qpos,
+        scale=hd**-0.5,
+        block_size=bs,
+        interpret=True,
+    )
+    want = _oracle(q, cache.k, cache.v, bt, qpos, scale=hd**-0.5, bs=bs)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5
+    )
