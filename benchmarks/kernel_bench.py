@@ -11,12 +11,17 @@ occupancies:
     gather (full table) : B * max_blocks        * bs * 2 * Hkv * hd * isize
     gather (live-sliced): B * bucket(used_blks) * bs * 2 * Hkv * hd * isize
     kernel              : sum_b ceil(kv_len_b / bs) * bs * 2 * Hkv * hd * isize
+    kernel (int8 pool)  : sum_b ceil(kv_len_b / bs) * bs * 2 * Hkv * (hd + 4)
 
   "gather (live-sliced)" is the oracle path after the host-side table
   slicing fix (scheduler.PagedServingEngine._bt_width): its traffic tracks
   occupancy in power-of-two buckets, but every row still pays the batch
   max; the kernel's per-row early exit pays only its own length.  q, block
-  table, and output bytes are identical across paths and omitted.
+  table, and output bytes are identical across paths and omitted.  The
+  int8 row is the kernel walking an int8 pool (DESIGN.md §KV memory
+  tiers): each (token, head) reads hd int8 elements plus one f32 scale per
+  k and v, dequantized in VMEM — a further ~4x (f32 pools) / ~2x (bf16)
+  cut on top of the occupancy win, gated at >= 1.8x by check_bench.py.
 
 * **measured step time** — wall time of the jitted decode-attention read
   on THIS host.  On CPU the kernel runs in Pallas interpret mode (the
@@ -50,8 +55,16 @@ from repro.serving.kv_cache import PagedKVCache, paged_view  # noqa: E402
 from repro.serving.scheduler import _bucket  # noqa: E402
 
 
+from repro.serving.kv_cache import kv_block_bytes  # noqa: E402
+
+
 def _kv_bytes(n_blocks_read, bs, hkv, hd, isize):
-    return n_blocks_read * bs * 2 * hkv * hd * isize
+    return n_blocks_read * kv_block_bytes(bs, hkv, hd, isize)
+
+
+def _kv_bytes_int8(n_blocks_read, bs, hkv, hd):
+    # int8 element + one f32 scale per (token, head) per k/v plane
+    return n_blocks_read * kv_block_bytes(bs, hkv, hd, 0, "int8")
 
 
 def _time_fn(fn, *args, iters):
@@ -101,13 +114,29 @@ def _bench_case(scenario, kv_lens, args):
     def kernel_read(q, k, v, bt, qpos):
         return ops.paged_attention(q, k, v, bt, qpos, scale=scale, block_size=bs)
 
+    # int8 pool: same contents quantized per (token, head); the kernel
+    # streams int8 tiles + scale tiles and dequantizes in VMEM
+    from repro.quant import quantize_kv
+
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+
+    def kernel_read_int8(q, k8, v8, ks, vs, bt, qpos):
+        return ops.paged_attention(
+            q, k8, v8, bt, qpos, scale=scale, block_size=bs, k_scale=ks, v_scale=vs
+        )
+
     gather = jax.jit(gather_read)
     t_gather = _time_fn(gather, q, k, v, bt_live, qpos, iters=args.iters)
     t_kernel = _time_fn(kernel_read, q, k, v, bt_live, qpos, iters=args.iters)
+    t_kernel_int8 = _time_fn(
+        kernel_read_int8, q, k8, v8, ks, vs, bt_live, qpos, iters=args.iters
+    )
 
     bytes_full = _kv_bytes(b * max_blocks, bs, hkv, hd, isize)
     bytes_sliced = _kv_bytes(b * w, bs, hkv, hd, isize)
     bytes_kernel = _kv_bytes(sum(used), bs, hkv, hd, isize)
+    bytes_kernel_int8 = _kv_bytes_int8(sum(used), bs, hkv, hd)
     return dict(
         scenario=scenario,
         occupancy=round(sum(used) / (b * max_blocks), 4),
@@ -119,10 +148,13 @@ def _bench_case(scenario, kv_lens, args):
         bytes_gather_full=bytes_full,
         bytes_gather_sliced=bytes_sliced,
         bytes_kernel=bytes_kernel,
+        bytes_kernel_int8=bytes_kernel_int8,
         reduction_vs_full=round(bytes_full / bytes_kernel, 3),
         reduction_vs_sliced=round(bytes_sliced / bytes_kernel, 3),
+        reduction_int8_vs_fp=round(bytes_kernel / bytes_kernel_int8, 3),
         t_gather_us=round(t_gather * 1e6, 1),
         t_kernel_us=round(t_kernel * 1e6, 1),
+        t_kernel_int8_us=round(t_kernel_int8 * 1e6, 1),
         kernel_interpreted=jax.default_backend() != "tpu",
     )
 
@@ -184,10 +216,12 @@ def main(argv=None):
         print(
             f"kernel_bench/{tag},{r['t_kernel_us']:.1f},"
             f"bytes_kernel={r['bytes_kernel']} "
+            f"bytes_kernel_int8={r['bytes_kernel_int8']} "
             f"bytes_gather_full={r['bytes_gather_full']} "
             f"bytes_gather_sliced={r['bytes_gather_sliced']} "
             f"reduction_vs_full={r['reduction_vs_full']}x "
             f"reduction_vs_sliced={r['reduction_vs_sliced']}x "
+            f"reduction_int8_vs_fp={r['reduction_int8_vs_fp']}x "
             f"t_gather={r['t_gather_us']:.1f}us{interp}"
         )
     return record

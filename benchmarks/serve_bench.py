@@ -13,6 +13,17 @@ scenarios per residual mode:
   prompt: the regime the paged KV cache targets.  Rows add the paged
   engine's prefix-hit rate and block utilization so regressions in block
   economy are as visible as throughput regressions.
+* ``overload``       — the same arrivals against a pool deliberately too
+  small for the offered load, served by the oversubscribing preemptive
+  scheduler (serving/memory.py): rows report preemption/resume/swap
+  counts, and check_bench.py gates that every request still completes.
+
+Every paged row also reports the pool economics (DESIGN.md §KV memory
+tiers): per-layer pool bytes, bytes per slot, and ``effective_slots`` —
+how many worst-case rows fit the FP pool's byte budget under that row's
+KV storage mode.  The ``paged-int8`` variant rows store the pool int8
+with per-(token, head) scales; check_bench.py gates that their
+effective_slots is >= 1.8x the fp rows' at equal pool bytes.
 
 With ``--pallas on`` (the default), each scenario x residual mode adds a
 ``paged+pallas`` row serving the SAME trace through the block-table-native
@@ -65,15 +76,30 @@ def _percentiles(xs, ps=(50, 99)):
     return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
-def _make_engine(cfg, params, args, s_max, spec: str, use_pallas: bool):
+def _overload_pool(args, s_max):
+    """(num_blocks, oversubscribe) for the overload scenario: room for
+    ~1.5 worst-case rows while `slots` stay admitted via oversubscription,
+    so the scheduler MUST preempt to keep everyone moving."""
+    worst = -(-(s_max - 1) // args.block_size)
+    return worst + max(1, worst // 2), 4.0
+
+
+def _make_engine(cfg, params, args, s_max, spec: str, use_pallas: bool,
+                 kv_quant: str = "fp", overload: bool = False):
     """Engine for one bench row: ragged oracle, plain paged, or paged with
     the requested speculative drafter; `use_pallas` routes the paged
-    attention read through the block-table-native kernel."""
+    attention read through the block-table-native kernel, `kv_quant`
+    selects fp or int8 pool storage, and `overload` swaps in the tiny
+    oversubscribed pool driven by the preemptive scheduler."""
     if args.engine == "ragged":
         return sched.ContinuousServingEngine(
             cfg, params, batch_slots=args.slots, s_max=s_max,
             max_prefills_per_step=1)
     pal = dict(use_pallas=True) if use_pallas else {}
+    mem = dict(kv_quant=kv_quant)
+    if overload:
+        num_blocks, over = _overload_pool(args, s_max)
+        mem.update(num_blocks=num_blocks, oversubscribe=over)
     if spec != "off":
         from repro.serving.speculative import (SpeculativePagedEngine,
                                                derive_draft_cfg)
@@ -86,11 +112,11 @@ def _make_engine(cfg, params, args, s_max, spec: str, use_pallas: bool):
             cfg, params, batch_slots=args.slots, s_max=s_max,
             block_size=args.block_size,
             max_prefill_tokens=args.prefill_budget,
-            spec_mode=spec, spec_k=args.spec_k, **kw, **pal)
+            spec_mode=spec, spec_k=args.spec_k, **kw, **pal, **mem)
     return sched.PagedServingEngine(
         cfg, params, batch_slots=args.slots, s_max=s_max,
         block_size=args.block_size,
-        max_prefill_tokens=args.prefill_budget, **pal)
+        max_prefill_tokens=args.prefill_budget, **pal, **mem)
 
 
 def _warm_paged_variants(engine, longest: int, temperature: float):
@@ -165,11 +191,36 @@ def _warm_paged_variants(engine, longest: int, temperature: float):
                     zi(nb))
 
 
+def _pool_economics(cfg, args, s_max, engine) -> dict:
+    """Per-layer KV pool economics for a paged row: pool bytes under this
+    row's storage mode, and how many WORST-CASE rows the fp pool's byte
+    budget would admit under it (the equal-pool-bytes concurrency gate)."""
+    import jax.numpy as jnp
+
+    from repro.serving.kv_cache import kv_block_bytes
+    bs = args.block_size
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    esize = jnp.dtype(cfg.dtype).itemsize
+    fp_block = kv_block_bytes(bs, hkv, hd, esize)
+    block_bytes = kv_block_bytes(bs, hkv, hd, esize, engine.kv_quant)
+    budget = engine.num_blocks * fp_block    # equal-bytes yardstick
+    worst = -(-(s_max - 1) // bs)
+    return dict(
+        kv_quant=engine.kv_quant,
+        pool_blocks=engine.num_blocks,
+        pool_bytes_per_layer=engine.num_blocks * block_bytes,
+        pool_bytes_per_row=round(engine.num_blocks * block_bytes
+                                 / args.slots),
+        effective_slots=(budget // block_bytes) // worst,
+    )
+
+
 def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
     """One bench row.  `variant` is (engine_label, spec_mode, temperature,
-    use_pallas); None means the plain engine at the sampled default."""
-    label, spec, temperature, use_pallas = variant or (
-        args.engine, "off", args.temperature, False)
+    use_pallas, kv_quant, overload); None means the plain engine at the
+    sampled default."""
+    label, spec, temperature, use_pallas, kv_quant, overload = variant or (
+        args.engine, "off", args.temperature, False, "fp", False)
     cfg = REGISTRY[args.arch].reduced(
         n_layers=args.layers, d_model=args.d_model, n_heads=4,
         d_ff=2 * args.d_model, vocab_size=args.vocab,
@@ -190,7 +241,8 @@ def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
     for r in trace:
         r.prompt = shared + r.prompt
 
-    engine = _make_engine(cfg, params, args, s_max, spec, use_pallas)
+    engine = _make_engine(cfg, params, args, s_max, spec, use_pallas,
+                          kv_quant=kv_quant, overload=overload)
 
     # warmup: compile EVERY prefill bucket + the decode graph outside the
     # timed run (jit caches are shared through the process-wide tracing cache
@@ -247,7 +299,14 @@ def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
             block_util_peak=round(st["block_util_peak"], 4),
             block_allocs=st["total_block_allocs"],
             deferred_admissions=st["deferred_admissions"],
+            **_pool_economics(cfg, args, s_max, engine),
         )
+        if "preemptions" in st:
+            row.update(
+                preemptions=st["preemptions"],
+                resumes=st["resumes"],
+                swapped_out_blocks=st["swapped_out_blocks"],
+            )
     if spec != "off":
         row.update(
             accept_rate=round(st["accept_rate"], 4),
@@ -285,6 +344,11 @@ def main():
     ap.add_argument("--spec-temperature", type=float, default=0.0,
                     help="sampling temperature for the speculative rows "
                          "(greedy by default)")
+    ap.add_argument("--int8", default="on", choices=["on", "off"],
+                    help="add a paged-int8 row per scenario/mode (int8 KV "
+                         "pool with per-token scales; reports pool "
+                         "economics — check_bench gates >= 1.8x "
+                         "effective_slots vs fp at equal pool bytes)")
     ap.add_argument("--pallas", default="on", choices=["on", "off"],
                     help="add a paged+pallas row per scenario/mode (paged "
                          "attention through the block-table-native kernel; "
@@ -296,28 +360,51 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--modes", default="ladder,standard")
-    ap.add_argument("--scenarios", default="poisson,shared_prefix")
+    ap.add_argument("--scenarios",
+                    default="poisson,shared_prefix,overload")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
                                          / "results" / "serve_bench.json"))
     args = ap.parse_args()
 
-    variants = [(args.engine, "off", args.temperature, False)]
+    variants = [(args.engine, "off", args.temperature, False, "fp", False)]
     if args.engine == "paged" and args.pallas == "on":
         # same traffic through the paged-attention kernel: tokens are
         # bit-identical, so any count difference is a bug, not jitter
-        variants.append(("paged+pallas", "off", args.temperature, True))
+        variants.append(("paged+pallas", "off", args.temperature, True,
+                         "fp", False))
+    if args.engine == "paged" and args.int8 == "on":
+        # same traffic on an int8 pool: tokens may differ within the
+        # bounded logit error; the row's point is the pool economics
+        # (2x+ rows per byte) and that throughput holds up
+        variants.append(("paged-int8", "off", args.temperature, False,
+                         "int8", False))
     if args.engine == "paged" and args.spec != "off":
         # a plain greedy row at the spec temperature (apples-to-apples
         # counterpart), then one row per requested drafter
         variants.append(("paged-greedy", "off", args.spec_temperature,
-                         False))
-        variants += [(f"paged+spec-{sp}", sp, args.spec_temperature, False)
+                         False, "fp", False))
+        variants += [(f"paged+spec-{sp}", sp, args.spec_temperature, False,
+                      "fp", False)
                      for sp in (x.strip() for x in args.spec.split(","))
                      if sp]
-    rows = [bench_mode(m.strip(), sc.strip(), args, variant=v)
-            for sc in args.scenarios.split(",")
+    # the overload scenario exercises the preemptive memory tier only:
+    # a fp and an int8 row on the deliberately-too-small pool
+    overload_variants = [
+        ("paged-preempt", "off", args.temperature, False, "fp", True),
+        ("paged-preempt-int8", "off", args.temperature, False, "int8",
+         True),
+    ]
+    scenarios = [sc.strip() for sc in args.scenarios.split(",")]
+    if args.engine == "ragged" and "overload" in scenarios:
+        # the memory tiers only exist on the paged path: a ragged run must
+        # drop the scenario, not emit rows mislabeled paged-preempt*
+        print("serve_bench: skipping overload scenario (--engine ragged)")
+        scenarios = [sc for sc in scenarios if sc != "overload"]
+    rows = [bench_mode(m.strip(), sc, args, variant=v)
+            for sc in scenarios
             for m in args.modes.split(",")
-            for v in variants]
+            for v in (overload_variants if sc == "overload"
+                      else variants)]
     record = dict(bench="serve_bench", config=vars(args), rows=rows)
 
     out = Path(args.out)
@@ -331,6 +418,12 @@ def main():
         if "accept_rate" in r:
             extra += (f" accept={r['accept_rate']:.2f} "
                       f"tok/fwd={r['tokens_per_forward']:.2f}")
+        if "effective_slots" in r:
+            extra += (f" quant={r['kv_quant']} "
+                      f"slots@budget={r['effective_slots']}")
+        if "preemptions" in r:
+            extra += (f" preempt={r['preemptions']} "
+                      f"resume={r['resumes']}")
         print(f"serve_bench/{r['scenario']}/{r['engine']}/{r['mode']},"
               f"{1e6 / max(r['tokens_per_s'], 1e-9):.1f},"
               f"tok_per_s={r['tokens_per_s']} "

@@ -16,6 +16,12 @@ sampling.  The modeled TP-8/TP-16 latencies come from core/schedule.py
 paged-attention kernel instead of the gather path — same tokens, bytes-read
 scaling with each row's actual kv length (DESIGN.md §Paged-attention
 kernel); interpret mode on CPU, so it is slower here and faster on TPU.
+
+``--kv-int8`` demonstrates the KV memory tiers (DESIGN.md §KV memory
+tiers): the pool is stored int8 with per-(token, head) scales inside the
+SAME byte budget the fp default uses — which fits ~3.5x the blocks — and
+TWICE the requests are served with admission oversubscribed and the
+preemptive scheduler swapping rows through the host tier under pressure.
 """
 
 import argparse
@@ -40,6 +46,11 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="paged attention via the Pallas kernel "
                          "(bit-identical tokens; interpret mode on CPU)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="store the KV pool int8 inside the fp default's "
+                         "byte budget, oversubscribe admission, and serve "
+                         "2x the requests through the preemptive memory "
+                         "tier (DESIGN.md §KV memory tiers)")
     args = ap.parse_args()
 
     cfg = REGISTRY["stablelm-3b"].reduced(
@@ -47,18 +58,44 @@ def main():
     ).replace(residual_mode=ResidualMode.LADDER)
     params = tfm.init_params(cfg, jax.random.key(0))
 
-    rng = np.random.default_rng(1)
-    engine = PagedServingEngine(cfg, params, batch_slots=3, s_max=96,
-                                block_size=8, max_prefill_tokens=32,
-                                use_pallas=args.use_pallas or None)
+    from repro.serving.kv_cache import kv_block_bytes
 
-    # 6 requests behind ONE shared 32-token system prompt (4 full blocks at
+    rng = np.random.default_rng(1)
+    bs, s_max, slots = 8, 96, 3
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    esize = np.dtype(cfg.dtype).itemsize
+    fp_blocks = slots * (s_max // bs)           # the fp default pool
+    fp_block_bytes = kv_block_bytes(bs, hkv, hd, esize)
+    i8_block_bytes = kv_block_bytes(bs, hkv, hd, esize, "int8")
+    mem_kw = {}
+    if args.kv_int8:
+        # same byte budget, int8 layout -> ~3.5x the blocks; oversubscribe
+        # so admission uses them eagerly and preemption handles the rest
+        mem_kw = dict(kv_quant="int8",
+                      num_blocks=fp_blocks * fp_block_bytes
+                      // i8_block_bytes,
+                      oversubscribe=2.0)
+    engine = PagedServingEngine(cfg, params, batch_slots=slots, s_max=s_max,
+                                block_size=bs, max_prefill_tokens=32,
+                                use_pallas=args.use_pallas or None,
+                                **mem_kw)
+    pool_mb = engine.num_blocks * (i8_block_bytes if args.kv_int8
+                                   else fp_block_bytes) / 1e6
+    print(f"KV pool: {engine.num_blocks} blocks "
+          f"({'int8' if args.kv_int8 else 'fp32'}, {pool_mb:.2f} MB/layer; "
+          f"fp default is {fp_blocks} blocks, "
+          f"{fp_blocks * fp_block_bytes / 1e6:.2f} MB/layer)")
+
+    # 6 requests (12 with --kv-int8: same byte budget, twice the load)
+    # behind ONE shared 32-token system prompt (4 full blocks at
     # block_size=8): request 0 prefills it once, every later admission hits
     # the prefix cache and allocates fresh blocks only for its own tail.
     system = rng.integers(0, cfg.vocab_size, 32).tolist()
+    shapes = [(9, 12), (33, 8), (17, 16), (50, 10), (5, 20), (24, 6)]
+    if args.kv_int8:
+        shapes = shapes + [(lp + 3, gen) for lp, gen in shapes]
     requests = []
-    for rid, (lp, gen) in enumerate([(9, 12), (33, 8), (17, 16),
-                                     (50, 10), (5, 20), (24, 6)]):
+    for rid, (lp, gen) in enumerate(shapes):
         samp = SamplingParams() if rid % 2 == 0 else \
             SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=rid)
         requests.append(Request(
@@ -90,6 +127,11 @@ def main():
           f"({st['prefix_hit_tokens']} of "
           f"{st['prefix_hit_tokens'] + st['prefill_tokens']} prompt tokens "
           f"reused), block_util peak={st['block_util_peak']:.2f}")
+    if "preemptions" in st:
+        print(f"memory tier: preemptions={st['preemptions']} "
+              f"resumes={st['resumes']} "
+              f"swapped_out={st['swapped_out_blocks']} blocks "
+              f"(oversubscribe x{st['oversubscribe']:.1f})")
     for rid in sorted(finished):
         f = finished[rid]
         rs = engine.scheduler.request_stats[rid]

@@ -14,9 +14,16 @@ Checks per row:
 Additionally gates the paged-attention kernel's bytes-read model
 (results/kernel_bench.json, regenerated with --run): the kernel's KV
 traffic must stay below the full-table gather path's at every uniform
-occupancy >= 50%, and must show at least a 4x reduction at 25% occupancy
+occupancy >= 50%, must show at least a 4x reduction at 25% occupancy
 (traffic scaling with actual kv length is the kernel's whole point —
-DESIGN.md §Paged-attention kernel).
+DESIGN.md §Paged-attention kernel), and the int8-pool variant must cut
+the kernel's own traffic by a further >= 1.8x (dequant-in-VMEM).
+
+KV memory-tier gates (``check_serve_memory``, hard invariants on the
+candidate serve rows — DESIGN.md §KV memory tiers): every paged-int8 row
+must admit >= 1.8x the fp row's worst-case concurrent rows at equal pool
+bytes, and the ``overload`` scenario must engage preemption while
+completing every request.
 
 Default tolerances are deliberately loose (CI machines are noisy and the
 reduced-config bench runs on one CPU): the gate exists to catch the
@@ -44,7 +51,7 @@ _REPLAY = [
     "arch", "engine", "requests", "rate", "slots", "max_prompt", "max_new",
     "shared_len", "vocab", "block_size", "prefill_budget", "layers",
     "d_model", "temperature", "seed", "modes", "scenarios",
-    "spec", "spec_k", "spec_temperature", "pallas",
+    "spec", "spec_k", "spec_temperature", "pallas", "int8",
 ]
 
 
@@ -91,6 +98,60 @@ def compare(baseline: dict, candidate: dict, tps_tol: float,
     return failures
 
 
+def check_serve_memory(candidate: dict) -> int:
+    """KV memory-tier gates on the candidate rows (hard invariants, not
+    baseline-relative — DESIGN.md §KV memory tiers):
+
+      * every (scenario, mode) with a fp ``paged`` row must carry a
+        ``paged-int8`` row whose ``effective_slots`` (worst-case rows
+        admitted at EQUAL pool bytes) is >= 1.8x the fp row's;
+      * the ``overload`` scenario must be present, actually engage
+        preemption, and complete every request — oversubscription must
+        never drop or deadlock a request.
+    """
+    rows = candidate["rows"]
+    by = {(r.get("scenario"), r["mode"], r.get("engine")): r for r in rows}
+    failures = 0
+    pairs = 0
+    for (sc, m, e), r in sorted(by.items(), key=lambda kv: str(kv[0])):
+        if e != "paged-int8":
+            continue
+        base = by.get((sc, m, "paged"))
+        if base is None:
+            continue
+        pairs += 1
+        ratio = r["effective_slots"] / max(base["effective_slots"], 1)
+        ok = ratio >= 1.8
+        print(f"{'ok  ' if ok else 'FAIL'} kv_int8/{sc}/{m}: "
+              f"effective_slots {r['effective_slots']} vs fp "
+              f"{base['effective_slots']} (x{ratio:.2f}, need >= 1.8)")
+        failures += 0 if ok else 1
+    if pairs == 0:
+        print("FAIL kv_int8: no paged-int8 rows paired with fp paged rows")
+        failures += 1
+
+    saw_overload = preempted = False
+    for r in rows:
+        if r.get("scenario") != "overload":
+            continue
+        saw_overload = True
+        ok = r["completed"] == r["requests"]
+        preempted |= r.get("preemptions", 0) > 0
+        print(f"{'ok  ' if ok else 'FAIL'} overload/{r['engine']}/"
+              f"{r['mode']}: {r['completed']}/{r['requests']} completed, "
+              f"{r.get('preemptions', 0)} preemptions "
+              f"{r.get('swapped_out_blocks', 0)} blocks swapped")
+        failures += 0 if ok else 1
+    if not saw_overload:
+        print("FAIL overload: scenario rows missing")
+        failures += 1
+    elif not preempted:
+        print("FAIL overload: preemption never engaged (pool not "
+              "oversubscribed enough to test the memory tier)")
+        failures += 1
+    return failures
+
+
 def check_kernel_bench(path: Path) -> int:
     """Gate the paged-attention kernel's bytes-read model: traffic must
     track actual kv length, not table width.  Rows come from
@@ -114,10 +175,15 @@ def check_kernel_bench(path: Path) -> int:
         if abs(occ - 0.25) < 1e-6:
             saw_25 = True
             ok &= r["reduction_vs_full"] >= 4.0
+        # int8 pools must cut the kernel's own traffic by >= 1.8x more —
+        # the dequant-in-VMEM win stacks on the occupancy win (a missing
+        # field is a failure: the int8 model must not silently vanish)
+        ok &= r.get("reduction_int8_vs_fp", 0.0) >= 1.8
         print(f"{'ok  ' if ok else 'FAIL'} kernel_bench/occ{occ}: "
               f"kernel {r['bytes_kernel']} B vs gather "
               f"{r['bytes_gather_full']} B "
-              f"(x{r['reduction_vs_full']} reduction)")
+              f"(x{r['reduction_vs_full']} reduction, "
+              f"int8 x{r.get('reduction_int8_vs_fp', 0.0)} further)")
         failures += 0 if ok else 1
     # an artifact without the gated rows must fail, not pass vacuously —
     # the same rule compare() applies to dropped serve rows
@@ -164,6 +230,7 @@ def main(argv=None) -> int:
     candidate = json.loads(Path(cand_path).read_text())
 
     failures = compare(baseline, candidate, args.tps_tol, args.p99_tol)
+    failures += check_serve_memory(candidate)
     failures += check_kernel_bench(kernel_path)
     if failures:
         print(f"{failures} bench regression(s) vs {args.baseline}")

@@ -23,7 +23,8 @@ if [[ "${1:-}" == "--lint" ]]; then
     python -m ruff format --check \
         scripts/check_bench.py tests/test_paged.py tests/test_ci_pipeline.py \
         src/repro/kernels/paged_attention.py tests/test_paged_kernel.py \
-        benchmarks/kernel_bench.py
+        benchmarks/kernel_bench.py \
+        src/repro/serving/memory.py src/repro/quant.py tests/test_memory.py
     exit 0
 fi
 

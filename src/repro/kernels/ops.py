@@ -45,16 +45,19 @@ def flash_attention(q, k, v, *, scale: float, window: int = 0,
                                    "num_splits"))
 def paged_attention(q, k, v, block_tables, positions, *, scale: float,
                     block_size: int, softcap: float = 0.0,
-                    num_splits: int = 0):
+                    num_splits: int = 0, k_scale=None, v_scale=None):
     """Model-facing: q (B, Q, Hq, hd) at per-query absolute `positions`
     (B, Q) (-1 = padding/inactive), against the paged pool k/v
     (Hkv, n_blocks*bs, hd) through `block_tables` (B, M).  Replaces the
     paged_view gather + _cached_attention read on the serving hot path —
     bytes-read scales with each row's actual kv length instead of the
-    table width (kernels/paged_attention.py)."""
+    table width (kernels/paged_attention.py).  For int8 pools pass the
+    per-(token, head) `k_scale`/`v_scale` arrays: tiles load as int8 and
+    dequantize in VMEM (DESIGN.md §KV memory tiers)."""
     return _pa.paged_attention(q, k, v, block_tables, positions,
                                scale=scale, block_size=block_size,
                                softcap=softcap, num_splits=num_splits,
+                               k_scale=k_scale, v_scale=v_scale,
                                interpret=_interpret())
 
 

@@ -34,9 +34,16 @@ verification and chunked prefill all run through the same kernel: the mask
 causal mask among fresh tokens (their K/V is scattered into the pool
 before the kernel runs — engine.build_paged_steps).
 
+int8 pools (DESIGN.md §KV memory tiers) add two scale-tile inputs walked
+by the same logical -> physical index_map as the KV tiles: KV tiles load
+as int8 and dequantize in VMEM against their per-(token, head) scales, so
+HBM bytes-read drops a further ~4x (f32 pools) on top of the occupancy
+win — benchmarks/kernel_bench.py carries the model,
+scripts/check_bench.py gates it.
+
 Validated in interpret mode against the ``paged_view`` gather oracle over
 block_size x GQA group x ragged kv_len x Q x softcap
-(tests/test_paged_kernel.py).
+(tests/test_paged_kernel.py; int8 parity in tests/test_memory.py).
 """
 
 from __future__ import annotations
@@ -57,20 +64,24 @@ def _kernel(
     q_ref,
     k_ref,
     v_ref,
-    m_out,
-    l_out,
-    acc_out,
-    m_ref,
-    l_ref,
-    acc_ref,
-    *,
+    *refs,
     scale: float,
     softcap: float,
     block_size: int,
     group: int,
     blocks_per_split: int,
     hkv: int,
+    quant: bool,
 ):
+    # int8 pools carry two extra inputs: per-token scale tiles walked by
+    # the same logical -> physical index_map as the KV tiles (they are the
+    # pool's block-major scale arrays reshaped (Hkv, nb, bs)); KV tiles
+    # load as int8 and dequantize in VMEM, so HBM bytes-read drops ~4x vs
+    # an f32 pool (benchmarks/kernel_bench.py pins the model)
+    if quant:
+        ks_ref, vs_ref, m_out, l_out, acc_out, m_ref, l_ref, acc_ref = refs
+    else:
+        m_out, l_out, acc_out, m_ref, l_ref, acc_ref = refs
     cell = pl.program_id(0)  # fused (row, kv head)
     split = pl.program_id(1)
     j = pl.program_id(2)  # block within this split
@@ -93,6 +104,8 @@ def _kernel(
     def _body():
         q = q_ref[0].astype(jnp.float32) * scale  # (Q*G, hd)
         k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+        if quant:
+            k = k * ks_ref[0, 0][:, None]
         s = jax.lax.dot_general(
             q,
             k,
@@ -119,6 +132,8 @@ def _kernel(
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quant:
+            v = v * vs_ref[0, 0][:, None]
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
             p,
             v,
@@ -157,6 +172,8 @@ def paged_attention(
     softcap: float = 0.0,
     num_splits: int = 0,
     interpret: bool = False,
+    k_scale=None,
+    v_scale=None,
 ):
     """Attention of q against a paged KV pool, through the block table.
 
@@ -170,9 +187,17 @@ def paged_attention(
         padding / inactive rows (their output is 0 — callers never read it).
     num_splits: split-K parallelism (0 = auto); long rows fan out over the
         grid and partials merge host-side in ``_combine_splits``.
+    k_scale, v_scale: (Hkv, num_blocks * block_size) float32 per-(token,
+        head) dequant scales for int8 pools (both or neither).  Scale tiles
+        ride the same block-table translation as the KV tiles and the
+        dequant multiply happens in VMEM — int8 bytes stream from HBM, not
+        a dequantized fp image (DESIGN.md §KV memory tiers).
 
     Returns (B, Q, Hq, hd) in q.dtype.
     """
+    quant = k_scale is not None
+    if quant != (v_scale is not None):
+        raise ValueError("int8 pools need both k_scale and v_scale")
     b, nq, hq, hd = q.shape
     hkv, n_tok, _ = k.shape
     group = hq // hkv
@@ -204,20 +229,33 @@ def paged_attention(
         group=group,
         blocks_per_split=bps,
         hkv=hkv,
+        quant=quant,
     )
 
     def kv_map(c, s, j, bt, qp):
         # logical block (s * bps + j) of row (c // hkv) -> physical block
         return (c % hkv, bt[c // hkv, s * bps + j], 0, 0)
 
+    def scale_map(c, s, j, bt, qp):
+        return (c % hkv, bt[c // hkv, s * bps + j], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, qg, hd), lambda c, s, j, bt, qp: (c, 0, 0)),
+        pl.BlockSpec((1, 1, block_size, hd), kv_map),
+        pl.BlockSpec((1, 1, block_size, hd), kv_map),
+    ]
+    inputs = [qf, kp, vp]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, block_size), scale_map)] * 2
+        inputs += [
+            k_scale.reshape(hkv, n_tok // block_size, block_size),
+            v_scale.reshape(hkv, n_tok // block_size, block_size),
+        ]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # block_tables, qpos
         grid=(b * hkv, ns, bps),
-        in_specs=[
-            pl.BlockSpec((1, qg, hd), lambda c, s, j, bt, qp: (c, 0, 0)),
-            pl.BlockSpec((1, 1, block_size, hd), kv_map),
-            pl.BlockSpec((1, 1, block_size, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, qg), lambda c, s, j, bt, qp: (c, s, 0)),
             pl.BlockSpec((1, 1, qg), lambda c, s, j, bt, qp: (c, s, 0)),
@@ -238,7 +276,7 @@ def paged_attention(
             jax.ShapeDtypeStruct((b * hkv, ns, qg, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables, qpos, qf, kp, vp)
+    )(block_tables, qpos, *inputs)
 
     out = _combine_splits(ms, ls, accs)
     out = out.reshape(b, hkv, nq, group, hd).transpose(0, 2, 1, 3, 4)

@@ -42,6 +42,24 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=128,
                     help="paged engine: max prompt tokens prefilled per "
                          "engine step (chunked prefill)")
+    ap.add_argument("--kv-quant", default="fp", choices=["fp", "int8"],
+                    help="paged engine KV storage: int8 stores the block "
+                         "pool quantized with per-(token, head) scales — "
+                         "~2x+ the rows per pool byte and ~2x less decode "
+                         "read traffic; tokens may differ from fp within a "
+                         "bounded logit error (DESIGN.md §KV memory tiers)")
+    ap.add_argument("--oversubscribe", type=float, default=1.0,
+                    help="paged engine: admit decode reservations against "
+                         "this multiple of the physical pool; > 1 enables "
+                         "preemption — on pressure the lowest-priority "
+                         "decoding row swaps out to the host tier and "
+                         "resumes verbatim (bit-identical tokens)")
+    ap.add_argument("--swap-blocks", type=int, default=0,
+                    help="host swap tier capacity in blocks (0 = "
+                         "unbounded).  Only bounds the tier — preemption "
+                         "itself engages only under --oversubscribe > 1 "
+                         "(without it every reservation is physically "
+                         "backed and the pool can never run dry)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="run attention through the Pallas kernels: the "
                          "paged engine reads the KV pool with the "
@@ -109,13 +127,19 @@ def main():
     kind = args.engine
     if args.spec_decode != "off" and kind == "ragged":
         raise SystemExit("--spec-decode requires the paged engine")
+    if kind == "ragged" and (args.kv_quant != "fp" or
+                             args.oversubscribe != 1.0 or args.swap_blocks):
+        raise SystemExit("--kv-quant/--oversubscribe/--swap-blocks require "
+                         "the paged engine")
     if kind != "ragged":
         try:
             paged_kw = dict(
                 batch_slots=args.slots, s_max=s_max, pcfg=pcfg, mesh=mesh,
                 block_size=args.block_size,
                 num_blocks=args.num_blocks or None,
-                max_prefill_tokens=args.prefill_budget)
+                max_prefill_tokens=args.prefill_budget,
+                kv_quant=args.kv_quant, oversubscribe=args.oversubscribe,
+                swap_blocks=args.swap_blocks)
             if args.spec_decode != "off":
                 from repro.serving.speculative import (
                     SpeculativePagedEngine, derive_draft_cfg)
@@ -134,7 +158,11 @@ def main():
                 engine = sched.PagedServingEngine(cfg, params, **paged_kw)
                 kind = "paged"
         except NotImplementedError as e:
-            if args.engine == "paged" or args.spec_decode != "off":
+            if args.engine == "paged" or args.spec_decode != "off" or \
+                    args.kv_quant != "fp" or args.oversubscribe != 1.0 or \
+                    args.swap_blocks:
+                # memory-tier flags exist only on the paged path: error
+                # instead of silently serving without them
                 raise
             print(f"[serve] paged engine unavailable ({e}); using ragged")
     if engine is None:
@@ -186,7 +214,14 @@ def main():
               f"block_util mean={st['block_util_mean']:.2f} "
               f"peak={st['block_util_peak']:.2f} "
               f"allocs={st['total_block_allocs']} "
-              f"deferred={st['deferred_admissions']}")
+              f"deferred={st['deferred_admissions']} "
+              f"kv_quant={args.kv_quant}")
+        if "preemptions" in st:
+            print(f"[serve] memory: preemptions={st['preemptions']} "
+                  f"resumes={st['resumes']} "
+                  f"swapped_out={st['swapped_out_blocks']} blocks "
+                  f"(swap peak {st['swap_peak_blocks']}) "
+                  f"oversubscribe={st['oversubscribe']:.2f}")
         if "accept_rate" in st:
             print(f"[serve] spec: accept_rate={st['accept_rate']:.2f} "
                   f"tokens_per_forward={st['tokens_per_forward']:.2f} "

@@ -232,10 +232,15 @@ def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
         cache = paged_update(cache, k, v, positions, block_tables)
         if use_pallas:
             from repro.kernels import ops
+            # int8 pools hand the kernel their per-(token, head) scales so
+            # dequantization happens on the int8 tiles in VMEM; the gather
+            # oracle below dequantizes inside paged_view with the same math
             out = ops.paged_attention(q, cache.k, cache.v, block_tables,
                                       positions, scale=scale,
                                       block_size=cache.block_size,
-                                      softcap=softcap)
+                                      softcap=softcap,
+                                      k_scale=cache.k_scale,
+                                      v_scale=cache.v_scale)
         else:
             out = _cached_attention(q * scale,
                                     paged_view(cache, block_tables),

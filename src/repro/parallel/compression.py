@@ -11,40 +11,22 @@ precision; only the 4x-slower inter-pod reduction is compressed — pmean over
 dequantized bf16 image, halving bytes vs fp32) -> dequantize + feedback.
 
 ``compressed_pmean`` is a drop-in for jax.lax.pmean over the pod axis.
+
+The int8 quantize/dequantize primitives themselves now live in
+``repro.quant`` (shared with the paged KV pool's int8 storage mode —
+DESIGN.md §KV memory tiers); they are re-exported here so existing
+imports and the EF-SGD call sites are untouched.
 """
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-BLOCK = 256
-
-
-def _pad_to(x, m):
-    n = x.shape[0]
-    return jnp.pad(x, (0, -n % m)), n
-
-
-def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-block symmetric int8.  Returns (q (N/B, B) int8, scale (N/B,))."""
-    flat, n = _pad_to(g.astype(jnp.float32).reshape(-1), BLOCK)
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
-    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)[:, None])
-    return q.astype(jnp.int8), scale
-
-
-def dequantize_int8(q, scale, shape) -> jnp.ndarray:
-    """Inverse of quantize_int8: (q (N/B, B) int8, scale (N/B,)) back to a
-    float32 array of `shape` (padding introduced by blocking is dropped)."""
-    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
-    n = 1
-    for d in shape:
-        n *= d
-    return flat[:n].reshape(shape)
+from repro.quant import (BLOCK, dequantize_int8,  # noqa: F401  (re-export)
+                         quantize_int8)
 
 
 def compressed_pmean(grads, axis: str, error: Any = None):

@@ -1,0 +1,83 @@
+"""Shared int8 quantization primitives.
+
+Two symmetric-int8 layouts live here, serving two different memory systems:
+
+* **Flat per-block** (``quantize_int8`` / ``dequantize_int8``, ``BLOCK`` =
+  256 elements): the gradient-compression layout — an arbitrary array is
+  flattened, padded, and quantized in 256-element blocks with one scale per
+  block.  ``parallel/compression.py`` re-exports these for
+  ``compressed_pmean`` (EF-int8 cross-pod gradient reduction).
+
+* **Per-token, per-head** (``quantize_kv`` / ``dequantize_kv``): the KV-pool
+  layout (serving/kv_cache.py int8 mode; DESIGN.md §KV memory tiers).  Each
+  (token, head) vector of ``head_dim`` elements gets its own scale, so a
+  token's quantized bytes are a pure function of that token's K/V alone.
+  That granularity is what makes the paged pool's incremental writes exact:
+  chunked prefill, decode, and speculative verify scatter tokens into a
+  block at different times, and a shared per-block scale would have to be
+  re-fitted (re-quantizing earlier tokens) on every write — breaking the
+  chunked == one-shot bit-equality contract and the swap tier's
+  "quantized bytes move, never re-quantized" idempotence rule.  Block
+  structure still matters for the *placement* of the scales: the pool
+  stores them block-major ((Hkv, num_blocks * block_size)), so the paged
+  attention kernel walks scale tiles with the same logical -> physical
+  block translation as the KV tiles.
+
+Quantization error is bounded per element by ``scale / 2`` with
+``scale = max|x| / 127`` over the quantization group (the round-to-nearest
+half-step); tests/test_property.py pins both layouts to that bound.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BLOCK = 256
+
+INT8_MAX = 127.0
+_EPS = 1e-12
+
+
+def _pad_to(x, m):
+    n = x.shape[0]
+    return jnp.pad(x, (0, -n % m)), n
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8.  Returns (q (N/B, B) int8, scale (N/B,))."""
+    flat, n = _pad_to(g.astype(jnp.float32).reshape(-1), BLOCK)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / INT8_MAX
+    q = jnp.round(blocks / jnp.maximum(scale, _EPS)[:, None])
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale, shape) -> jnp.ndarray:
+    """Inverse of quantize_int8: (q (N/B, B) int8, scale (N/B,)) back to a
+    float32 array of `shape` (padding introduced by blocking is dropped)."""
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(token, head) symmetric int8 over the trailing head_dim axis.
+
+    x: (..., hd) float.  Returns (q (..., hd) int8, scale (...) float32)
+    with ``q = round(x / scale)``, ``scale = max|x| / 127`` per leading
+    index.  An all-zero vector quantizes to zeros with scale 0 (the
+    dequantized image is exactly zero, not NaN).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / INT8_MAX
+    q = jnp.round(xf / jnp.maximum(scale, _EPS)[..., None])
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of quantize_kv: q (..., hd) int8, scale (...) -> (..., hd)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

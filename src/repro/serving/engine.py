@@ -48,7 +48,7 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
                  seq_shard_data: bool = False, enc_s: int = 0,
                  structs_only: bool = False, ragged: bool = False,
                  paged: bool = False, num_blocks: int = 0,
-                 block_size: int = 16):
+                 block_size: int = 16, kv_quant: str = "fp"):
     """Build (caches, cache_pspecs) as GLOBAL pytrees.
 
     seq_shard_data: shard KV sequence over the data axis (flash decoding) —
@@ -62,6 +62,8 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
     shared PagedKVCache pool of `num_blocks` x `block_size` token slots
     instead of per-slot s_max regions; `batch` is ignored for those layers
     (the block tables map rows to blocks).  Full attention only.
+    kv_quant: "int8" stores the paged pool quantized with per-(token, head)
+    scales (DESIGN.md §KV memory tiers); "fp" keeps the model dtype.
     """
     if ragged and seq_shard_data:
         raise NotImplementedError("ragged + seq-sharded caches")
@@ -101,10 +103,15 @@ def build_caches(cfg: ModelConfig, batch: int, s_max: int,
                 if paged and sub == "attn":
                     c = kvc.make_paged_kv_cache(num_blocks, block_size,
                                                 hp.kv_eff, cfg.head_dim,
-                                                dtype, lead=lead, alloc=alloc)
+                                                dtype, lead=lead, alloc=alloc,
+                                                quant=kv_quant)
+                    sc_spec = P(None, tp_ax, None) \
+                        if kv_quant == "int8" else None
                     s = kvc.PagedKVCache(k=P(None, tp_ax, None, None),
                                          v=P(None, tp_ax, None, None),
-                                         block_size=block_size)
+                                         k_scale=sc_spec, v_scale=sc_spec,
+                                         block_size=block_size,
+                                         quant=kv_quant)
                 elif sub in ("attn", "shared_attn"):
                     c = kvc.make_kv_cache(batch, s_max, hp.kv_eff,
                                           cfg.head_dim, dtype, alloc=alloc,

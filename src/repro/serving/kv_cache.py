@@ -26,7 +26,10 @@ Cache kinds
 * PagedKVCache   full attention over a shared physical BLOCK POOL: rows own
                  logical block tables instead of contiguous s_max regions,
                  so memory is admitted block-by-block and common prompt
-                 prefixes share blocks (DESIGN.md §Paged KV).
+                 prefixes share blocks (DESIGN.md §Paged KV).  Optionally
+                 stored int8 with per-(token, head) scales — 2x+ rows per
+                 pool byte, dequantized in the kernel or the gather view
+                 (DESIGN.md §KV memory tiers).
 * Mamba / RWKV   plain dicts of recurrent state (O(1) per layer).
 
 The host-side allocator for the paged pool (``BlockAllocator``) and the
@@ -88,8 +91,8 @@ class MLACache:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["k", "v"],
-         meta_fields=["block_size"])
+         data_fields=["k", "v", "k_scale", "v_scale"],
+         meta_fields=["block_size", "quant"])
 @dataclass
 class PagedKVCache:
     """Physical block pool shared by every request (DESIGN.md §Paged KV).
@@ -100,10 +103,23 @@ class PagedKVCache:
     Which rows own which blocks lives host-side (``BlockAllocator`` +
     the paged scheduler's block tables) — the device only ever sees a
     ``block_tables: (B, max_blocks)`` int32 argument per step.
+
+    quant == "int8" stores the pool as symmetric int8 with per-(token,
+    head) float32 scales alongside (DESIGN.md §KV memory tiers): pool slot
+    ``t`` of head ``h`` dequantizes to ``k[h, t] * k_scale[h, t]``.  Scales
+    are block-major like the token slots, so readers translate logical ->
+    physical once and slice both arrays with it; quantized bytes + scale
+    are a pure function of that token's K/V, never re-fitted by later
+    writes — which is what keeps chunked prefill bit-equal to one-shot and
+    makes swap round-trips byte-identical (quantized bytes move, never
+    re-quantized).
     """
     k: jnp.ndarray            # (Hkv_local, num_blocks * block_size, hd)
     v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray] = None   # (Hkv_local, num_blocks * bs)
+    v_scale: Optional[jnp.ndarray] = None
     block_size: int = 16
+    quant: str = "fp"         # "fp" | "int8"
 
     def get(self, name, default=None):
         return getattr(self, name, default)
@@ -150,12 +166,39 @@ def make_kv_cache(batch: int, s_max: int, hkv: int, hd: int, dtype,
         seq_sharded=seq_shards > 1)
 
 
+def kv_block_bytes(block_size: int, hkv: int, hd: int, esize: int,
+                   quant: str = "fp") -> int:
+    """Bytes one physical block occupies under a pool storage mode: the
+    k AND v planes, plus (int8) one float32 scale per (token, head) per
+    plane.  The single source of truth for pool-economics math
+    (benchmarks/serve_bench.py, benchmarks/kernel_bench.py,
+    examples/serve_batched.py)."""
+    if quant == "int8":
+        return block_size * 2 * hkv * (hd + 4)
+    return block_size * 2 * hkv * hd * esize
+
+
 def make_paged_kv_cache(num_blocks: int, block_size: int, hkv: int, hd: int,
                         dtype, lead: Tuple[int, ...] = (),
-                        alloc=_alloc_default) -> PagedKVCache:
+                        alloc=_alloc_default,
+                        quant: str = "fp") -> PagedKVCache:
     """Allocate a physical block pool of ``num_blocks * block_size`` token
-    slots (shared across all requests; `lead` prepends scan group dims)."""
+    slots (shared across all requests; `lead` prepends scan group dims).
+
+    quant="int8" stores the pool as int8 with per-(token, head) float32
+    scales — half-or-better HBM per slot vs bf16/f32 pools, so the same
+    byte budget admits ~2x the concurrent rows (DESIGN.md §KV memory
+    tiers)."""
+    if quant not in ("fp", "int8"):
+        raise ValueError(f"unknown KV quant mode {quant!r}")
     shape = (*lead, hkv, num_blocks * block_size, hd)
+    if quant == "int8":
+        sshape = shape[:-1]
+        return PagedKVCache(
+            k=alloc(shape, jnp.int8), v=alloc(shape, jnp.int8),
+            k_scale=alloc(sshape, jnp.float32),
+            v_scale=alloc(sshape, jnp.float32),
+            block_size=block_size, quant=quant)
     return PagedKVCache(k=alloc(shape, dtype), v=alloc(shape, dtype),
                         block_size=block_size)
 
@@ -355,6 +398,19 @@ def paged_update(cache: PagedKVCache, k_new, v_new, positions,
     flat = flat.reshape(-1)                               # (B*S,)
     kf = k_new.reshape(-1, *k_new.shape[2:]).swapaxes(0, 1)   # (Hkv,B*S,hd)
     vf = v_new.reshape(-1, *v_new.shape[2:]).swapaxes(0, 1)
+    if cache.quant == "int8":
+        # quantize-on-scatter: each (token, head) vector gets its own int8
+        # image + scale, so a write never disturbs other tokens' bytes
+        # (DESIGN.md §KV memory tiers)
+        from repro.quant import quantize_kv
+        kq, ks = quantize_kv(kf)
+        vq, vs = quantize_kv(vf)
+        return PagedKVCache(
+            k=cache.k.at[:, flat].set(kq, mode="drop"),
+            v=cache.v.at[:, flat].set(vq, mode="drop"),
+            k_scale=cache.k_scale.at[:, flat].set(ks, mode="drop"),
+            v_scale=cache.v_scale.at[:, flat].set(vs, mode="drop"),
+            block_size=bs, quant=cache.quant)
     return PagedKVCache(
         k=cache.k.at[:, flat].set(kf.astype(cache.k.dtype), mode="drop"),
         v=cache.v.at[:, flat].set(vf.astype(cache.v.dtype), mode="drop"),
@@ -371,6 +427,10 @@ def paged_view(cache: PagedKVCache, block_tables) -> KVCache:
     are masked.  When ``max_blocks * block_size == s_max`` this view is
     shape- and bit-identical to the dense ragged cache read, which is what
     the paged-vs-ragged engine equivalence tests pin down.
+
+    int8 pools dequantize in the gather (``q * scale`` per token, head) —
+    this stays the bit-level oracle for the kernel's in-VMEM dequant path
+    (tests/test_memory.py).
     """
     bs = cache.block_size
     b, m = block_tables.shape
@@ -378,6 +438,12 @@ def paged_view(cache: PagedKVCache, block_tables) -> KVCache:
            jnp.arange(bs, dtype=block_tables.dtype)).reshape(b, m * bs)
     k = jnp.take(cache.k, idx, axis=1).swapaxes(0, 1)     # (B, Hkv, L, hd)
     v = jnp.take(cache.v, idx, axis=1).swapaxes(0, 1)
+    if cache.quant == "int8":
+        from repro.quant import dequantize_kv
+        ks = jnp.take(cache.k_scale, idx, axis=1).swapaxes(0, 1)  # (B,Hkv,L)
+        vs = jnp.take(cache.v_scale, idx, axis=1).swapaxes(0, 1)
+        k = dequantize_kv(k, ks)
+        v = dequantize_kv(v, vs)
     sp = jnp.broadcast_to(jnp.arange(m * bs, dtype=jnp.int32), (b, m * bs))
     return KVCache(k=k, v=v, slot_pos=sp, ring=False, seq_sharded=False)
 
@@ -431,6 +497,15 @@ def insert_slot(caches, slot_caches, slot):
 # host-side block management (paged serving; DESIGN.md §Paged KV)
 # ---------------------------------------------------------------------------
 
+class BlockAllocationError(RuntimeError):
+    """Raised when the pool has no free (or reclaimable) block.
+
+    The non-preemptive scheduler's reservation accounting makes this
+    unreachable mid-flight; the preemptive scheduler (serving/memory.py)
+    catches it as the signal to swap out a victim row.
+    """
+
+
 class BlockAllocator:
     """Free-list + refcount allocator over the physical block pool.
 
@@ -439,6 +514,14 @@ class BlockAllocator:
     be written while its refcount is exactly 1 (the scheduler asserts this —
     the copy-on-write invariant: diverge by allocating a fresh block, never
     by mutating a shared one).
+
+    Misuse raises instead of corrupting state: refcount underflow
+    (double-``decref``), freeing a live block, and double-``free`` all
+    raise ``ValueError`` — an exception here means a scheduler bug, and a
+    silently double-inserted free-list entry would hand the same physical
+    block to two rows (cross-request K/V corruption, the worst possible
+    failure mode).  Exceptions, not asserts: the guards must survive
+    ``python -O``.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -448,6 +531,7 @@ class BlockAllocator:
         self.block_size = block_size
         # stack: low ids allocated first (stable tests / readable tables)
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._free_set = set(self._free)       # O(1) double-free detection
         self._ref: List[int] = [0] * num_blocks
         self.total_allocs = 0          # lifetime alloc() count (stats)
 
@@ -462,26 +546,41 @@ class BlockAllocator:
 
     def alloc(self) -> int:
         if not self._free:
-            raise RuntimeError("BlockAllocator: out of KV blocks")
-        blk = self._free.pop()
-        assert self._ref[blk] == 0
+            raise BlockAllocationError("BlockAllocator: out of KV blocks")
+        blk = self._free[-1]            # validate BEFORE mutating any state
+        if self._ref[blk] != 0:
+            raise ValueError(f"free-listed block {blk} has refcount "
+                             f"{self._ref[blk]}")
+        self._free.pop()
+        self._free_set.discard(blk)
         self._ref[blk] = 1
         self.total_allocs += 1
         return blk
 
     def incref(self, blk: int) -> int:
+        if blk in self._free_set:
+            raise ValueError(f"incref of free-listed block {blk}")
+        # refcount 0 is legal here: evictable prefix-cache residents are
+        # revived by increfing 0 -> 1 (they are off the free list)
         self._ref[blk] += 1
         return self._ref[blk]
 
     def decref(self, blk: int) -> int:
-        assert self._ref[blk] > 0, f"double free of block {blk}"
+        if self._ref[blk] <= 0:
+            raise ValueError(f"refcount underflow: double decref of "
+                             f"block {blk}")
         self._ref[blk] -= 1
         return self._ref[blk]
 
     def free(self, blk: int):
         """Return a refcount-0 block to the free list."""
-        assert self._ref[blk] == 0, f"freeing live block {blk}"
+        if self._ref[blk] != 0:
+            raise ValueError(f"freeing live block {blk} "
+                             f"(refcount {self._ref[blk]})")
+        if blk in self._free_set:
+            raise ValueError(f"double free of block {blk}")
         self._free.append(blk)
+        self._free_set.add(blk)
 
 
 class PrefixCache:

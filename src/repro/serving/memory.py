@@ -1,0 +1,335 @@
+"""KV memory tiers: host swap pool + preemptive paged scheduling.
+
+The paged scheduler (serving/scheduler.PagedScheduler) admits on a
+*worst-case* block reservation: a request only enters when the pool could
+hold its prompt plus every token it might ever generate.  That makes
+mid-flight OOM impossible but leaves the pool underutilised whenever
+requests finish early — which is most of the time.  This module lets the
+scheduler **oversubscribe** the pool instead (DESIGN.md §KV memory tiers):
+
+* ``PreemptivePagedScheduler`` — admission counts decode reservations
+  against a virtual pool of ``oversubscribe * num_blocks`` blocks (prompt
+  blocks are still physically covered at admission, so prefill never
+  OOMs).  When a decode allocation finds the physical pool dry, the engine
+  preempts the lowest-priority decoding row: its blocks are swapped out to
+  the host tier and freed, its slot and reservation released.  The row
+  resumes — same tokens, bit-identical stream — once blocks free up.
+
+* ``SwapPool`` — the host tier: retired-block contents keyed by
+  ``(seq, block-idx)``.  Payloads are raw pool bytes (plus scales for int8
+  pools): the swap round-trip is bit-identical for fp pools and idempotent
+  for int8 — quantized bytes move, they are never re-quantized, so a
+  preempt/resume cycle cannot compound quantization error.
+
+* ``extract_blocks`` / ``insert_blocks`` — the device <-> host block moves,
+  generic over the engine's cache pytree (every ``PagedKVCache`` leaf, fp
+  or int8, across scan sections).
+
+Why preemption preserves bit-identity: a resumed row's K/V bytes are
+restored verbatim into freshly allocated physical blocks, and nothing in
+the forward pass observes *which* physical blocks back a logical position
+— the block table indirection is total.  Sampling keys fold (seed,
+absolute position), never the slot or step index, so the resumed row's
+next token is computed from exactly the state the never-preempted run had
+(tests/test_memory.py pins this for the paged and speculative engines,
+and the TP=2 ``serve_memory`` group in tests/distributed_impl.py).
+
+Interaction with the prefix cache: preemption releases blocks through the
+same path retirement does, so a preempted row's registered prompt blocks
+stay in the prefix cache (evictable at refcount 0) and keep serving hits.
+Resume never consults the prefix cache — it restores the row's own bytes
+into fresh blocks — which keeps the state machine two-phase and simple at
+the cost of a possible duplicate of a shared prefix in the pool.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.scheduler import PagedScheduler, _PagedSeq
+
+
+# ---------------------------------------------------------------------------
+# device <-> host block movement
+# ---------------------------------------------------------------------------
+
+
+def _paged_leaves(caches) -> List[Tuple[int, int, PagedKVCache]]:
+    """(section, entry, leaf) for every PagedKVCache in the cache pytree."""
+    out = []
+    for si, sec in enumerate(caches):
+        for ei, c in enumerate(sec):
+            if isinstance(c, PagedKVCache):
+                out.append((si, ei, c))
+    return out
+
+
+def _block_slots(blocks: List[int], block_size: int) -> np.ndarray:
+    """Flat pool token slots covered by `blocks`, block-major."""
+    ids = np.asarray(blocks, np.int64)
+    return (ids[:, None] * block_size + np.arange(block_size)).reshape(-1)
+
+
+def extract_blocks(caches, blocks: List[int], block_size: int) -> List[Dict]:
+    """Copy the contents of physical `blocks` to host, one payload dict per
+    block (k/v slices, plus scales for int8 pools), each a list over the
+    cache pytree's PagedKVCache leaves.  Pure reads — caches untouched."""
+    import jax.numpy as jnp
+
+    slots = jnp.asarray(_block_slots(blocks, block_size))
+    per_leaf = []
+    for _, _, leaf in _paged_leaves(caches):
+        entry = dict(
+            k=np.asarray(jnp.take(leaf.k, slots, axis=leaf.k.ndim - 2)),
+            v=np.asarray(jnp.take(leaf.v, slots, axis=leaf.v.ndim - 2)),
+        )
+        if leaf.quant == "int8":
+            ks, vs = leaf.k_scale, leaf.v_scale
+            entry["k_scale"] = np.asarray(
+                jnp.take(ks, slots, axis=ks.ndim - 1)
+            )
+            entry["v_scale"] = np.asarray(
+                jnp.take(vs, slots, axis=vs.ndim - 1)
+            )
+        per_leaf.append(entry)
+    # split block-major payloads into one entry per block
+    bs = block_size
+    out = []
+    for bi in range(len(blocks)):
+        blk_entry = []
+        for entry in per_leaf:
+            e = {}
+            for name, arr in entry.items():
+                ax = arr.ndim - (2 if name in ("k", "v") else 1)
+                idx = np.arange(bi * bs, (bi + 1) * bs)
+                e[name] = np.take(arr, idx, axis=ax)
+            blk_entry.append(e)
+        out.append(blk_entry)
+    return out
+
+
+def insert_blocks(
+    caches, blocks: List[int], payloads: List[List[Dict]], block_size: int
+):
+    """Scatter swapped-out block payloads back into (possibly different)
+    physical `blocks`.  Bytes land verbatim — int8 payloads are already
+    quantized and are never re-quantized (the idempotence contract)."""
+    import jax.numpy as jnp
+
+    assert len(blocks) == len(payloads), "payload/block count mismatch"
+    slots = jnp.asarray(_block_slots(blocks, block_size))
+    leaves = _paged_leaves(caches)
+    caches = [list(sec) for sec in caches]
+    for li, (si, ei, leaf) in enumerate(leaves):
+        merged = {}
+        for name in payloads[0][li]:
+            ax = payloads[0][li][name].ndim
+            ax -= 2 if name in ("k", "v") else 1
+            merged[name] = np.concatenate(
+                [p[li][name] for p in payloads], axis=ax
+            )
+        kw = dict(
+            k=leaf.k.at[..., slots, :].set(jnp.asarray(merged["k"])),
+            v=leaf.v.at[..., slots, :].set(jnp.asarray(merged["v"])),
+        )
+        if leaf.quant == "int8":
+            kw["k_scale"] = leaf.k_scale.at[..., slots].set(
+                jnp.asarray(merged["k_scale"])
+            )
+            kw["v_scale"] = leaf.v_scale.at[..., slots].set(
+                jnp.asarray(merged["v_scale"])
+            )
+        caches[si][ei] = PagedKVCache(
+            block_size=leaf.block_size, quant=leaf.quant, **kw
+        )
+    return [tuple(sec) for sec in caches]
+
+
+# ---------------------------------------------------------------------------
+# host swap tier
+# ---------------------------------------------------------------------------
+
+
+class SwapPool:
+    """Host buffer of swapped-out block contents keyed by (seq, block-idx).
+
+    ``capacity_blocks = 0`` means unbounded (the default: host DRAM is
+    orders of magnitude larger than the device pool).  A bounded pool
+    raises on overflow instead of silently evicting — losing a swapped
+    block would corrupt the preempted row on resume.
+    """
+
+    def __init__(self, capacity_blocks: int = 0):
+        if capacity_blocks < 0:
+            raise ValueError("capacity_blocks must be >= 0 (0 = unbounded)")
+        self.capacity_blocks = capacity_blocks
+        self._store: Dict[Tuple[int, int], List[Dict]] = {}
+        self.total_swapped_out = 0  # lifetime blocks in (stats)
+        self.total_swapped_in = 0  # lifetime blocks back out (stats)
+        self.peak_blocks = 0
+
+    def num_held(self) -> int:
+        return len(self._store)
+
+    def can_hold(self, n_blocks: int) -> bool:
+        if not self.capacity_blocks:
+            return True
+        return self.num_held() + n_blocks <= self.capacity_blocks
+
+    def put(self, seq_uid: int, block_idx: int, payload: List[Dict]):
+        key = (seq_uid, block_idx)
+        if key in self._store:
+            raise ValueError(f"swap slot {key} already occupied")
+        if not self.can_hold(1):
+            raise RuntimeError(
+                f"SwapPool: capacity {self.capacity_blocks} blocks "
+                f"exhausted (raise --swap-blocks or lower --oversubscribe)"
+            )
+        self._store[key] = payload
+        self.total_swapped_out += 1
+        self.peak_blocks = max(self.peak_blocks, self.num_held())
+
+    def take(self, seq_uid: int, block_idx: int) -> List[Dict]:
+        key = (seq_uid, block_idx)
+        if key not in self._store:
+            raise ValueError(f"swap slot {key} is empty (double resume?)")
+        payload = self._store.pop(key)
+        self.total_swapped_in += 1
+        return payload
+
+    def put_seq(self, seq_uid: int, payloads: List[List[Dict]]):
+        if not self.can_hold(len(payloads)):
+            raise RuntimeError(
+                f"SwapPool: capacity {self.capacity_blocks} blocks cannot "
+                f"hold {len(payloads)} more (held {self.num_held()}); "
+                f"raise --swap-blocks or lower --oversubscribe"
+            )
+        for bi, p in enumerate(payloads):
+            self.put(seq_uid, bi, p)
+
+    def take_seq(self, seq_uid: int, n_blocks: int) -> List[List[Dict]]:
+        return [self.take(seq_uid, bi) for bi in range(n_blocks)]
+
+
+# ---------------------------------------------------------------------------
+# preemptive scheduler
+# ---------------------------------------------------------------------------
+
+
+class PreemptivePagedScheduler(PagedScheduler):
+    """Block-granular admission with oversubscription and preemption.
+
+    Admission differs from the base scheduler in one term: decode
+    reservations are checked against ``oversubscribe * num_blocks`` virtual
+    blocks instead of the physical pool (``_admission_headroom``).  Prompt
+    blocks are still allocated physically at admission, so the only place
+    the pool can run dry is a *decode* allocation — which the engine
+    resolves by preempting a victim row (``pick_victim`` -> engine swap-out
+    -> ``preempt``) and retrying.
+
+    Victim policy: lowest ``Request.priority`` first, newest admission
+    first among equals — the oldest highest-priority row is never chosen
+    while any other decoding row exists, which is what guarantees global
+    progress (somebody always runs to retirement, and retirement frees
+    blocks for resumes).
+
+    Preempted rows wait in FIFO order and resume before any new admission
+    (``resume_ready``): a resume re-allocates the row's block count
+    physically, the engine restores the swapped bytes, and decoding
+    continues from exactly the saved position.
+    """
+
+    def __init__(self, *args, oversubscribe: float = 1.0, **kw):
+        super().__init__(*args, **kw)
+        if oversubscribe < 1.0:
+            raise ValueError("oversubscribe must be >= 1.0")
+        self.oversubscribe = oversubscribe
+        self.preempted: Deque[_PagedSeq] = deque()
+        self.preemptions = 0
+        self.resumes = 0
+
+    def _admission_headroom(self) -> int:
+        return int((self.oversubscribe - 1.0) * self.allocator.num_blocks)
+
+    # -- preemption ---------------------------------------------------------
+    def pick_victim(self) -> Optional[int]:
+        """Slot of the lowest-priority decoding row (newest admission
+        breaks ties), or None when no decoding row exists."""
+        cands = [
+            (s.request.priority, -s.admit_id, i)
+            for i, s in enumerate(self.slots)
+            if s is not None and s.decoding and s.tokens
+        ]
+        return min(cands)[2] if cands else None
+
+    def preempt(self, slot: int) -> _PagedSeq:
+        """Release a decoding row's blocks, slot, and reservation; park it
+        on the resume queue.  The engine must have captured the block
+        contents (extract_blocks -> SwapPool) BEFORE calling this — the
+        freed blocks may be rewritten by the very next allocation."""
+        seq = self.slots[slot]
+        if seq is None or not seq.decoding or not seq.tokens:
+            # exception, not assert: must survive python -O (same hardening
+            # standard as BlockAllocator's guards)
+            raise ValueError(f"slot {slot} is not a decoding row")
+        seq.swapped_blocks = len(seq.blocks)
+        self.total_reserved -= seq.reserved
+        for blk in seq.blocks:
+            self._release_block(blk)
+        seq.blocks = []
+        self.slots[slot] = None
+        self.preempted.append(seq)
+        self.preemptions += 1
+        return seq
+
+    def resume_ready(self) -> Optional[Tuple[int, _PagedSeq]]:
+        """Re-admit the oldest preempted row if a slot and its physical
+        block count fit; allocates the blocks and restores the reservation.
+        Returns (slot, seq) — the engine then restores the swapped bytes
+        into ``seq.blocks`` — or None."""
+        if not self.preempted:
+            return None
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return None
+        seq = self.preempted[0]
+        need = seq.swapped_blocks
+        ev = self.prefix.num_evictable() if self.prefix is not None else 0
+        if self.allocator.num_free() + ev < need:
+            return None
+        budget = self.available_blocks() + self._admission_headroom()
+        if budget < need + seq.reserved:
+            return None
+        self.preempted.popleft()
+        seq.blocks = [self._alloc_block() for _ in range(need)]
+        seq.fresh_blocks += need
+        seq.swapped_blocks = 0
+        self.total_reserved += seq.reserved
+        slot = free[0]
+        self.slots[slot] = seq
+        self.resumes += 1
+        return slot, seq
+
+    # -- bookkeeping --------------------------------------------------------
+    def has_work(self) -> bool:
+        return super().has_work() or bool(self.preempted)
+
+    def reset_stats(self):
+        """Zero counters (bench warmup); preempted rows are untouched."""
+        super().reset_stats()
+        self.preemptions = 0
+        self.resumes = 0
+
+    def stats(self):
+        s = super().stats()
+        s.update(
+            preemptions=self.preemptions,
+            resumes=self.resumes,
+            preempted_waiting=len(self.preempted),
+            oversubscribe=self.oversubscribe,
+        )
+        return s

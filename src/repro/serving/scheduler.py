@@ -24,6 +24,14 @@ Split of responsibilities:
   paged engine, replacing its decode phase with draft-and-verify
   (DESIGN.md §Speculative decoding); the hooks it relies on here are
   ``_decode_phase``, ``ensure_blocks_through`` and ``rollback_blocks``.
+* ``PreemptivePagedScheduler`` / ``SwapPool`` (serving/memory.py) — the KV
+  memory tiers (DESIGN.md §KV memory tiers): admission may oversubscribe
+  the pool (``oversubscribe`` / ``swap_blocks`` engine kwargs); on decode
+  allocation pressure the engine swaps the lowest-priority decoding row
+  out to the host tier (``_swap_out`` / ``_ensure_through``) and resumes
+  it verbatim later (``_resume_preempted``) — output streams stay
+  bit-identical (tests/test_memory.py).  ``kv_quant="int8"`` additionally
+  stores the pool quantized (2x+ rows per pool byte).
 
 Determinism contract: a request's output tokens depend only on (prompt,
 sampling params, seed) — never on which slot it lands in, what else is in
@@ -59,12 +67,15 @@ class SamplingParams:
 class Request:
     """One generation request: `prompt` is a token-id list (non-empty,
     at most s_max - 1 long), `max_new_tokens` >= 1 the generation budget,
-    `sampling` the per-request sampling controls."""
+    `sampling` the per-request sampling controls.  `priority` only matters
+    under the preemptive scheduler (serving/memory.py): lower-priority
+    rows are preempted first when the pool runs dry."""
     rid: int
     prompt: List[int]
     max_new_tokens: int
     sampling: SamplingParams = field(default_factory=SamplingParams)
     arrival: float = 0.0          # bench bookkeeping (seconds or step index)
+    priority: int = 0
 
 
 @dataclass
@@ -386,6 +397,7 @@ class _PagedSeq:
     fresh_blocks: int = 0         # blocks newly allocated for this request
     pos: int = -1                 # last sampled token's position (decode)
     tokens: List[int] = field(default_factory=list)
+    swapped_blocks: int = 0       # blocks held in the swap tier (preempted)
 
     @property
     def decoding(self) -> bool:
@@ -476,6 +488,13 @@ class PagedScheduler:
         ev = self.prefix.num_evictable() if self.prefix is not None else 0
         return self.allocator.num_free() + ev - self.total_reserved
 
+    def _admission_headroom(self) -> int:
+        """Virtual blocks admission may count beyond the physical pool.
+        0 here (reservations are fully backed — no mid-flight OOM by
+        construction); the preemptive scheduler (serving/memory.py)
+        returns the oversubscription slack instead."""
+        return 0
+
     def _alloc_block(self) -> int:
         if self.allocator.num_free() == 0 and self.prefix is not None and \
                 self.prefix.num_evictable():
@@ -525,9 +544,15 @@ class PagedScheduler:
             need_later = self._worst_case_blocks(req) - n_prompt
             # budget check BEFORE committing the hits: evictable hit blocks
             # are about to be pinned, so they cannot also fund allocations
-            # (and a failed attempt must not touch the LRU order)
+            # (and a failed attempt must not touch the LRU order).  The
+            # reservation term may draw on oversubscription headroom
+            # (preemptive scheduler), but the prompt blocks allocated RIGHT
+            # NOW must be physically available either way.
+            ev = self.prefix.num_evictable() if self.prefix is not None else 0
             ev_hits = sum(1 for b in hits if self.allocator.refcount(b) == 0)
-            if self.available_blocks() - ev_hits < need_now + need_later:
+            if (self.available_blocks() + self._admission_headroom() -
+                    ev_hits < need_now + need_later) or \
+                    (self.allocator.num_free() + ev - ev_hits < need_now):
                 self.deferred_admissions += 1
                 break                             # strict FIFO: head waits
             for blk in hits:
@@ -747,7 +772,8 @@ class PagedServingEngine(_ServingEngineBase):
                  pcfg=None, mesh=None, eos_id: Optional[int] = None,
                  rng_seed: int = 0, max_prefill_tokens: int = 128,
                  prefill_bucket_min: int = 16, prefix_caching: bool = True,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None, kv_quant: str = "fp",
+                 oversubscribe: float = 1.0, swap_blocks: int = 0):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -790,12 +816,28 @@ class PagedServingEngine(_ServingEngineBase):
         self.num_blocks = num_blocks if num_blocks is not None else \
             batch_slots * self.max_blocks
         self.prefill_bucket_min = prefill_bucket_min
+        self.kv_quant = kv_quant
 
         self.allocator = BlockAllocator(self.num_blocks, block_size)
         self.prefix = PrefixCache() if prefix_caching else None
-        self.scheduler = PagedScheduler(
-            batch_slots, s_max, self.allocator, prefix_cache=self.prefix,
-            eos_id=eos_id, max_prefill_tokens=max_prefill_tokens)
+        if oversubscribe != 1.0 or swap_blocks > 0:
+            # KV memory tiers (serving/memory.py; DESIGN.md §KV memory
+            # tiers): admission may oversubscribe the pool; on allocation
+            # pressure the engine swaps out the lowest-priority decoding
+            # row and resumes it verbatim when blocks free up
+            from repro.serving.memory import (PreemptivePagedScheduler,
+                                              SwapPool)
+            self.scheduler = PreemptivePagedScheduler(
+                batch_slots, s_max, self.allocator,
+                prefix_cache=self.prefix, eos_id=eos_id,
+                max_prefill_tokens=max_prefill_tokens,
+                oversubscribe=oversubscribe)
+            self.swap = SwapPool(capacity_blocks=swap_blocks)
+        else:
+            self.scheduler = PagedScheduler(
+                batch_slots, s_max, self.allocator, prefix_cache=self.prefix,
+                eos_id=eos_id, max_prefill_tokens=max_prefill_tokens)
+            self.swap = None
 
         steps = engine_mod.build_paged_steps(cfg, pcfg,
                                              batch_slots=batch_slots,
@@ -803,7 +845,8 @@ class PagedServingEngine(_ServingEngineBase):
                                              use_pallas=use_pallas)
         self.caches, cache_specs = engine_mod.build_caches(
             cfg, batch_slots, s_max, pcfg, for_decode=False, paged=True,
-            num_blocks=self.num_blocks, block_size=block_size)
+            num_blocks=self.num_blocks, block_size=block_size,
+            kv_quant=kv_quant)
 
         if mesh is not None and pcfg.world > 1:
             ps = steps["pspecs"]
@@ -854,6 +897,10 @@ class PagedServingEngine(_ServingEngineBase):
         s = self.scheduler.stats()
         s["block_util_mean"] = self._util_sum / max(self._util_steps, 1)
         s["block_util_peak"] = self._util_peak
+        if self.swap is not None:
+            s["swapped_out_blocks"] = self.swap.total_swapped_out
+            s["swapped_in_blocks"] = self.swap.total_swapped_in
+            s["swap_peak_blocks"] = self.swap.peak_blocks
         return s
 
     def reset_stats(self):
@@ -861,12 +908,17 @@ class PagedServingEngine(_ServingEngineBase):
         self.scheduler.reset_stats()
         self._util_sum = self._util_peak = 0.0
         self._util_steps = 0
+        if self.swap is not None:
+            self.swap.total_swapped_out = 0
+            self.swap.total_swapped_in = 0
+            self.swap.peak_blocks = self.swap.num_held()
 
     def step(self) -> List[Tuple[int, int]]:
         """One engine iteration.  Returns (rid, token) events emitted."""
         events: List[Tuple[int, int]] = []
 
         with self._mesh_ctx():
+            self._resume_preempted()    # swapped-out rows are oldest: first
             self.scheduler.admissions()
             for slot, chunk, start in self.scheduler.prefill_work():
                 req = self.scheduler.slots[slot].request
@@ -890,11 +942,79 @@ class PagedServingEngine(_ServingEngineBase):
     def _decode_phase(self, live: List[int]) -> List[Tuple[int, int]]:
         """One batched decode of the in-flight rows (the speculative engine
         overrides this with a draft-and-verify round)."""
-        self.scheduler.ensure_decode_blocks()
+        for slot in live:
+            if self.scheduler.slots[slot] is None:
+                continue                # preempted as an earlier victim
+            self._ensure_through(slot, self.scheduler.slots[slot].pos)
+        # a later ensure may have preempted an earlier row: keep survivors
+        live = [s for s in live if self.scheduler.slots[s] is not None]
+        if not live:
+            return []
         for slot in live:
             self._fill_bt_row(slot)
         w = self._bt_width(live)
         return self._decode_step(live, (self._jnp.asarray(self._bt[:, :w]),))
+
+    # -- KV memory tiers (preemption + swap; DESIGN.md §KV memory tiers) ----
+    def _ensure_through(self, slot: int, last_pos: int) -> bool:
+        """``ensure_blocks_through`` with preemption-on-pressure: when the
+        physical pool runs dry (only possible under the oversubscribing
+        scheduler), the lowest-priority decoding row is swapped out and the
+        allocation retried.  Returns False iff `slot` itself was the victim
+        (the caller drops it from this step's batch)."""
+        from repro.serving.kv_cache import BlockAllocationError
+        while True:
+            try:
+                self.scheduler.ensure_blocks_through(slot, last_pos)
+                return True
+            except BlockAllocationError:
+                victim = getattr(self.scheduler, "pick_victim",
+                                 lambda: None)()
+                if victim is None or self.swap is None:
+                    raise
+                self._swap_out(victim)
+                if victim == slot:
+                    return False
+
+    def _swap_out(self, slot: int):
+        """Preempt `slot`: copy its blocks' contents to the host swap tier,
+        then release the blocks/slot/reservation.  Raw pool bytes move —
+        bit-identical for fp pools, never re-quantized for int8."""
+        from repro.serving import memory
+        seq = self.scheduler.slots[slot]
+        payloads = memory.extract_blocks(self.caches, seq.blocks,
+                                         self.block_size)
+        self.swap.put_seq(seq.admit_id, payloads)
+        self.scheduler.preempt(slot)
+        self._active[slot] = False
+
+    def _resume_preempted(self):
+        """Swap preempted rows back in (FIFO) while slots and blocks allow;
+        each resumes decoding from exactly its saved position."""
+        if self.swap is None:
+            return
+        from repro.serving import memory
+        while True:
+            r = self.scheduler.resume_ready()
+            if r is None:
+                break
+            slot, seq = r
+            payloads = self.swap.take_seq(seq.admit_id, len(seq.blocks))
+            self.caches = memory.insert_blocks(self.caches, seq.blocks,
+                                               payloads, self.block_size)
+            self._resume_decode_slot(slot, seq)
+
+    def _resume_decode_slot(self, slot: int, seq) -> None:
+        """Re-arm the host decode vectors for a resumed row (the
+        speculative engine additionally re-prefills its drafter)."""
+        sp = seq.request.sampling
+        self._tokens[slot] = seq.tokens[-1]
+        self._pos[slot] = seq.pos
+        self._active[slot] = True
+        self._temp[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._seeds[slot] = sp.seed
 
     # -- internals ----------------------------------------------------------
     def _fill_bt_row(self, slot: int):

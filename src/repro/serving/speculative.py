@@ -327,6 +327,14 @@ class SpeculativePagedEngine(PagedServingEngine):
         super()._start_decode_slot(slot, req, tok)
         self.drafter.prefill(slot, req.prompt, tok)
 
+    def _resume_decode_slot(self, slot: int, seq):
+        """A preempted row may resume in a DIFFERENT slot: re-prefill the
+        drafter there (the draft-model drafter's catch-up loop then replays
+        the committed generated tokens before its next proposal, so
+        proposals — and therefore accepts — pick up where they left off)."""
+        super()._resume_decode_slot(slot, seq)
+        self.drafter.prefill(slot, seq.request.prompt, seq.tokens[0])
+
     def _spec_budget(self, slot: int) -> int:
         """Draft tokens row `slot` may verify this step without writing
         past its reservation or past s_max - 2 (the last legal write)."""
@@ -351,11 +359,21 @@ class SpeculativePagedEngine(PagedServingEngine):
         toks = np.zeros((self.batch_slots, k1), np.int32)
         klen = np.ones((self.batch_slots,), np.int32)
         for slot in live:
+            if sched.slots[slot] is None:
+                continue            # preempted as an earlier row's victim
             d = list(drafts.get(slot, []))[:budgets[slot]]
             toks[slot, 0] = self._tokens[slot]
             toks[slot, 1:1 + len(d)] = d
             klen[slot] = 1 + len(d)
-            sched.ensure_blocks_through(slot, int(self._pos[slot]) + len(d))
+            # preemption-aware (serving/memory.py): the slot may itself be
+            # swapped out under pool pressure, dropping it from this round
+            # — its drafts are simply discarded (a verify never ran, so
+            # there is nothing to roll back)
+            self._ensure_through(slot, int(self._pos[slot]) + len(d))
+        live = [s for s in live if sched.slots[s] is not None]
+        if not live:
+            return []
+        for slot in live:
             self._fill_bt_row(slot)
 
         w = self._bt_width(live)

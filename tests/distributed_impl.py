@@ -517,13 +517,76 @@ def serve_kernel_tp():
           eng.stats()["verify_forwards"] > 0)
 
 
+def serve_memory_tp():
+    """KV memory tiers on a TP=2 mesh: a tiny oversubscribed pool whose
+    rows are preempted (blocks swapped to host, sharded over kv heads)
+    and resumed emits bit-identical tokens to a roomy never-preempting
+    TP=2 run — for the plain paged engine AND the speculative engine, fp
+    pools; the int8 pool's preempted run must match its own roomy int8
+    run bit-exactly (quantized bytes + scales move verbatim, TP-local
+    shards each swap their own head slice)."""
+    from repro.serving.scheduler import (PagedServingEngine, Request,
+                                         SamplingParams)
+    from repro.serving.speculative import SpeculativePagedEngine
+    cfg = _cfg("stablelm-3b", "ladder", d_model=64, n_heads=4, d_ff=128,
+               vocab_size=256)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, lp).tolist(),
+                    max_new_tokens=g, sampling=s)
+            for i, (lp, g, s) in enumerate([
+                (9, 8, SamplingParams()),
+                (11, 6, SamplingParams(temperature=0.7, top_k=12, seed=3)),
+                (7, 7, SamplingParams(temperature=1.0, top_p=0.9, seed=8)),
+                (13, 5, SamplingParams())])]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+
+    def run(engine):
+        for r in reqs:
+            engine.submit(clone(r))
+        return {rid: f.tokens for rid, f in engine.run().items()}
+
+    pcfg = ParallelConfig(tp=2, dp=1)
+    mesh2 = compat.make_mesh((2,), ("model",))
+    p2, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
+    tight_kw = dict(batch_slots=3, s_max=48, block_size=4, num_blocks=8,
+                    oversubscribe=2.5, pcfg=pcfg, mesh=mesh2)
+    roomy_kw = dict(batch_slots=3, s_max=48, block_size=4, pcfg=pcfg,
+                    mesh=mesh2)
+
+    for quant in ("fp", "int8"):
+        want = run(PagedServingEngine(cfg, p2, kv_quant=quant, **roomy_kw))
+        eng = PagedServingEngine(cfg, p2, kv_quant=quant, **tight_kw)
+        got = run(eng)
+        check(f"serve_memory tp2 {quant} preempted",
+              eng.stats()["preemptions"] > 0)
+        for rid, toks in want.items():
+            check(f"serve_memory tp2 {quant} rid={rid}",
+                  toks == got[rid])
+
+    spec_want = run(PagedServingEngine(cfg, p2, **roomy_kw))
+    eng = SpeculativePagedEngine(cfg, p2, spec_mode="ngram", spec_k=3,
+                                 **tight_kw)
+    spec_got = run(eng)
+    check("serve_memory tp2 spec preempted",
+          eng.stats()["preemptions"] > 0)
+    check("serve_memory tp2 spec verified",
+          eng.stats()["verify_forwards"] > 0)
+    for rid, toks in spec_want.items():
+        check(f"serve_memory tp2 spec rid={rid}", toks == spec_got[rid])
+
+
 CHECKS = dict(tp=tp_equivalence, fsdp=fsdp_equivalence,
               zero1=zero1_equivalence, sp=sp_equivalence,
               padded=padded_heads, flashdec=flash_decode_seq_sharded,
               pp=pipeline_parity, compress=grad_compression,
               q8=q8_weight_gather, serve_cb=serve_continuous_batching,
               serve_paged=serve_paged_tp, serve_spec=serve_spec_tp,
-              serve_kernel=serve_kernel_tp)
+              serve_kernel=serve_kernel_tp, serve_memory=serve_memory_tp)
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"

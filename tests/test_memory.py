@@ -1,0 +1,626 @@
+"""KV memory-tier tests (DESIGN.md §KV memory tiers).
+
+Layers, bottom-up:
+
+* BlockAllocator hardening — misuse (refcount underflow, freeing a live
+  block, double free) raises instead of corrupting the free list; the free
+  list is fully reusable after preemption-style mass frees.
+* SwapPool — (seq, block-idx) keyed host tier: capacity accounting,
+  overflow and double-insert guards.
+* extract_blocks / insert_blocks — device <-> host round trips are
+  byte-identical for fp pools and move int8 bytes + scales verbatim.
+* PreemptivePagedScheduler — oversubscribed admission, victim policy
+  (priority first, newest admission among equals), preempt/resume
+  bookkeeping, resume deferral until blocks free up.
+* int8 pool semantics — quantize-on-scatter / dequantize-on-gather, the
+  kernel's in-VMEM dequant path vs the gather oracle, and a bounded
+  int8-vs-fp logit error at the model level.
+* Engine equivalences (the acceptance invariants) — preempt -> swap-out ->
+  swap-in -> resume produces token streams bit-identical to the
+  never-preempted run for ladder/standard/desync2, on the plain paged and
+  the speculative engines (both drafters), fp and int8 pools; the TP=2
+  group lives in tests/distributed_impl.py (``serve_memory``).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, ResidualMode
+from repro.models import transformer as tfm
+from repro.serving import engine as engine_mod
+from repro.serving.kv_cache import (
+    BlockAllocationError,
+    BlockAllocator,
+    PrefixCache,
+    make_paged_kv_cache,
+    paged_update,
+    paged_view,
+)
+from repro.serving.memory import (
+    PreemptivePagedScheduler,
+    SwapPool,
+    extract_blocks,
+    insert_blocks,
+)
+from repro.serving.scheduler import (
+    PagedServingEngine,
+    Request,
+    SamplingParams,
+)
+
+
+# ---------------------------------------------------------------------------
+# allocator hardening (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_double_decref_raises():
+    a = BlockAllocator(num_blocks=2, block_size=4)
+    blk = a.alloc()
+    assert a.decref(blk) == 0
+    with pytest.raises(ValueError, match="underflow"):
+        a.decref(blk)
+    assert a.refcount(blk) == 0  # state untouched by the failed decref
+
+
+def test_allocator_free_guards():
+    a = BlockAllocator(num_blocks=2, block_size=4)
+    blk = a.alloc()
+    with pytest.raises(ValueError, match="live block"):
+        a.free(blk)  # refcount still 1
+    a.decref(blk)
+    a.free(blk)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(blk)
+    assert a.num_free() == 2  # the double free did not duplicate the entry
+
+
+def test_allocator_incref_of_free_block_raises():
+    a = BlockAllocator(num_blocks=1, block_size=4)
+    with pytest.raises(ValueError, match="free-listed"):
+        a.incref(0)
+
+
+def test_allocator_oom_is_distinct_allocation_error():
+    a = BlockAllocator(num_blocks=1, block_size=4)
+    a.alloc()
+    with pytest.raises(BlockAllocationError):
+        a.alloc()
+    # BlockAllocationError is a RuntimeError subclass (old callers catch it)
+    assert issubclass(BlockAllocationError, RuntimeError)
+
+
+def test_allocator_free_list_reusable_after_mass_frees():
+    """Preemption frees a whole row's blocks at once; the pool must hand
+    every one of them out again with refcounts intact."""
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = [a.alloc() for _ in range(8)]
+    for blk in blocks[2:7]:  # preemption-style mass release
+        a.decref(blk)
+        a.free(blk)
+    assert a.num_free() == 5
+    again = [a.alloc() for _ in range(5)]
+    assert sorted(again) == sorted(blocks[2:7])
+    assert len(set(again)) == 5  # no block handed out twice
+    assert all(a.refcount(b) == 1 for b in again)
+    with pytest.raises(BlockAllocationError):
+        a.alloc()
+
+
+# ---------------------------------------------------------------------------
+# swap pool (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_swap_pool_keys_and_capacity():
+    sp = SwapPool(capacity_blocks=2)
+    sp.put(7, 0, ["a"])
+    sp.put(7, 1, ["b"])
+    with pytest.raises(ValueError, match="occupied"):
+        sp.put(7, 0, ["dup"])
+    with pytest.raises(RuntimeError, match="capacity"):
+        sp.put(8, 0, ["c"])
+    assert sp.take(7, 0) == ["a"]
+    sp.put(8, 0, ["c"])  # freed capacity is reusable
+    assert sp.num_held() == 2 and sp.peak_blocks == 2
+    assert sp.take_seq(8, 1) == [["c"]]
+
+
+def test_swap_pool_seq_put_checks_capacity_upfront():
+    sp = SwapPool(capacity_blocks=2)
+    with pytest.raises(RuntimeError, match="cannot"):
+        sp.put_seq(1, [["a"], ["b"], ["c"]])
+    assert sp.num_held() == 0  # nothing partially inserted
+    sp2 = SwapPool()  # unbounded
+    sp2.put_seq(1, [["a"]] * 10)
+    assert sp2.num_held() == 10
+
+
+# ---------------------------------------------------------------------------
+# block movement round trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", ["fp", "int8"])
+def test_extract_insert_block_round_trip(quant):
+    """Swap-out -> swap-in restores pool bytes exactly, into the SAME or
+    DIFFERENT physical blocks (resume re-allocates).  For int8 the
+    quantized bytes and scales move verbatim — never re-quantized."""
+    bs, hkv, hd, nb = 4, 2, 8, 6
+    cache = make_paged_kv_cache(nb, bs, hkv, hd, jnp.float32, quant=quant)
+    key = jax.random.key(0)
+    kn = jax.random.normal(key, (1, 12, hkv, hd))
+    vn = jax.random.normal(jax.random.fold_in(key, 1), (1, 12, hkv, hd))
+    bt = jnp.asarray([[4, 1, 3]], jnp.int32)
+    cache = paged_update(cache, kn, vn, jnp.arange(12)[None], bt)
+    caches = [(cache,)]
+
+    payloads = extract_blocks(caches, [4, 1, 3], bs)
+    assert len(payloads) == 3
+    # restore into different physical blocks: the logical view must match
+    restored = insert_blocks(caches, [0, 2, 5], payloads, bs)
+    bt2 = jnp.asarray([[0, 2, 5]], jnp.int32)
+    want = paged_view(caches[0][0], bt)
+    got = paged_view(restored[0][0], bt2)
+    np.testing.assert_array_equal(np.asarray(want.k), np.asarray(got.k))
+    np.testing.assert_array_equal(np.asarray(want.v), np.asarray(got.v))
+    if quant == "int8":
+        old, new = caches[0][0], restored[0][0]
+        for blk_old, blk_new in zip([4, 1, 3], [0, 2, 5]):
+            sl_o = slice(blk_old * bs, (blk_old + 1) * bs)
+            sl_n = slice(blk_new * bs, (blk_new + 1) * bs)
+            np.testing.assert_array_equal(  # raw int8 bytes, not dequant
+                np.asarray(old.k[:, sl_o]), np.asarray(new.k[:, sl_n])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(old.k_scale[:, sl_o]),
+                np.asarray(new.k_scale[:, sl_n]),
+            )
+
+
+# ---------------------------------------------------------------------------
+# preemptive scheduler host logic (no jax)
+# ---------------------------------------------------------------------------
+
+
+def _psched(n_slots=2, s_max=32, num_blocks=8, bs=4, oversubscribe=2.0, **kw):
+    return PreemptivePagedScheduler(
+        n_slots,
+        s_max,
+        BlockAllocator(num_blocks, bs),
+        prefix_cache=PrefixCache(),
+        oversubscribe=oversubscribe,
+        **kw,
+    )
+
+
+def _drive_prefill(s, tok=7):
+    for slot, chunk, start in s.prefill_work():
+        seq = s.slots[slot]
+        s.chunk_filled(slot, len(chunk))
+        if start + len(chunk) == len(seq.request.prompt):
+            s.start_decode(slot, tok)
+
+
+def test_oversubscribed_admission_admits_beyond_reservations():
+    """Two requests each worst-case 4 blocks; pool of 6.  The strict
+    scheduler defers the second, the oversubscribing one admits both
+    (prompt blocks are physically covered; only reservations float)."""
+    mk = lambda rid: Request(rid=rid, prompt=list(range(6)), max_new_tokens=9)
+    strict = _psched(num_blocks=6, oversubscribe=1.0)
+    strict.submit(mk(0))
+    strict.submit(mk(1))
+    assert [r.rid for _, r in strict.admissions()] == [0]
+    assert strict.deferred_admissions == 1
+
+    over = _psched(num_blocks=6, oversubscribe=2.0)
+    over.submit(mk(0))
+    over.submit(mk(1))
+    assert [r.rid for _, r in over.admissions()] == [0, 1]
+
+
+def test_admission_still_requires_physical_prompt_blocks():
+    """Oversubscription never floats the blocks allocated RIGHT NOW: a
+    9-token prompt (3 blocks) must defer when only 2 physical blocks are
+    free, no matter the factor."""
+    s = _psched(n_slots=2, num_blocks=5, oversubscribe=10.0)
+    s.submit(Request(rid=0, prompt=list(range(10)), max_new_tokens=2))
+    s.admissions()
+    assert s.allocator.num_free() == 2
+    s.submit(Request(rid=1, prompt=list(range(9)), max_new_tokens=2))
+    assert s.admissions() == []
+    assert s.deferred_admissions == 1
+
+
+def test_victim_policy_priority_then_newest():
+    s = _psched(n_slots=3, num_blocks=24, bs=4, oversubscribe=1.0)
+    for rid, prio in [(0, 1), (1, 0), (2, 0)]:
+        s.submit(Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=4, priority=prio))
+    s.admissions()
+    _drive_prefill(s)
+    # priorities: rid0=1, rid1=0, rid2=0 -> lowest priority first, newest
+    # admission among equals: victim is rid2's slot
+    victim = s.pick_victim()
+    assert s.slots[victim].request.rid == 2
+    s.preempt(victim)
+    assert s.slots[s.pick_victim()].request.rid == 1
+    s.preempt(s.pick_victim())
+    assert s.slots[s.pick_victim()].request.rid == 0
+
+
+def test_preempt_resume_bookkeeping():
+    s = _psched(n_slots=2, num_blocks=6, bs=4, oversubscribe=2.0)
+    s.submit(Request(rid=0, prompt=list(range(6)), max_new_tokens=9))
+    s.submit(Request(rid=1, prompt=list(range(6)), max_new_tokens=9))
+    s.admissions()
+    _drive_prefill(s)
+    in_use = s.allocator.num_in_use()
+    reserved = s.total_reserved
+    seq1 = s.slots[1]
+    held = len(seq1.blocks)
+
+    victim = s.pick_victim()
+    assert victim == 1  # same priority, newest admission
+    s.preempt(victim)
+    assert s.slots[1] is None and s.has_work()
+    assert s.allocator.num_in_use() == in_use - held
+    assert s.total_reserved == reserved - seq1.reserved
+    assert seq1.swapped_blocks == held and seq1.blocks == []
+
+    # resume restores the reservation and allocates the same block count
+    slot, seq = s.resume_ready()
+    assert seq is seq1 and len(seq.blocks) == held
+    assert s.total_reserved == reserved
+    assert s.resume_ready() is None  # queue drained
+
+
+def test_resume_defers_until_blocks_free():
+    s = _psched(n_slots=2, num_blocks=6, bs=4, oversubscribe=2.0)
+    s.submit(Request(rid=0, prompt=list(range(6)), max_new_tokens=17))
+    s.submit(Request(rid=1, prompt=list(range(6)), max_new_tokens=9))
+    s.admissions()
+    _drive_prefill(s)
+    s.preempt(1)
+    # row 0 grows into its (fully backed) reservation until the pool is too
+    # tight for row 1's two swapped-out blocks
+    while s.allocator.num_free() >= 2:
+        s.slots[0].pos += 4
+        s.ensure_blocks_through(0, s.slots[0].pos)
+    assert s.resume_ready() is None
+    # retire row 0 -> its blocks free -> row 1 resumes
+    s.slots[0].tokens = [9] * 17
+    s._maybe_retire(0)
+    slot, seq = s.resume_ready()
+    assert seq.request.rid == 1
+
+
+# ---------------------------------------------------------------------------
+# int8 pool semantics + kernel dequant path
+# ---------------------------------------------------------------------------
+
+
+def test_int8_update_quantizes_per_token_and_is_write_order_invariant():
+    """Writing a block's tokens across two scatters yields byte-identical
+    pool state to one scatter — per-(token, head) scales make a token's
+    bytes a pure function of that token's K/V (the chunked == one-shot
+    contract)."""
+    bs, hkv, hd, nb = 4, 1, 8, 4
+    key = jax.random.key(1)
+    kn = jax.random.normal(key, (1, 6, hkv, hd)) * 3
+    vn = jax.random.normal(jax.random.fold_in(key, 1), (1, 6, hkv, hd))
+    bt = jnp.asarray([[2, 0]], jnp.int32)
+
+    one = make_paged_kv_cache(nb, bs, hkv, hd, jnp.float32, quant="int8")
+    one = paged_update(one, kn, vn, jnp.arange(6)[None], bt)
+
+    two = make_paged_kv_cache(nb, bs, hkv, hd, jnp.float32, quant="int8")
+    two = paged_update(two, kn[:, :3], vn[:, :3], jnp.arange(3)[None], bt)
+    two = paged_update(two, kn[:, 3:], vn[:, 3:], jnp.arange(3, 6)[None], bt)
+
+    for name in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(one, name)), np.asarray(getattr(two, name))
+        )
+
+
+@pytest.mark.parametrize(
+    "bs,g,q_len,softcap",
+    [
+        (8, 2, 1, 0.0),  # GQA decode
+        (4, 4, 1, 30.0),  # GQA decode + softcap
+        (8, 2, 5, 0.0),  # K+1 speculative verify
+    ],
+)
+def test_int8_kernel_matches_int8_gather_oracle(bs, g, q_len, softcap):
+    """The kernel's in-VMEM dequant (int8 tile * scale tile) must agree
+    with the paged_view gather oracle's dequantized read."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.models.attention import _cached_attention
+    from repro.parallel.collectives import NULL_ENV
+
+    b, hkv, hd, num_blocks, m = 3, 2, 32, 16, 4
+    key = jax.random.key(2)
+    hq = hkv * g
+    cache = make_paged_kv_cache(num_blocks, bs, hkv, hd, jnp.float32, quant="int8")
+    rng = np.random.default_rng(0)
+    bt = np.zeros((b, m), np.int32)
+    for row in range(b):
+        bt[row] = rng.choice(num_blocks, size=m, replace=False)
+    bt = jnp.asarray(bt)
+    kn = jax.random.normal(key, (b, m * bs, hkv, hd)) * 2
+    vn = jax.random.normal(jax.random.fold_in(key, 1), (b, m * bs, hkv, hd))
+    cache = paged_update(
+        cache, kn, vn, jnp.broadcast_to(jnp.arange(m * bs), (b, m * bs)), bt
+    )
+    q = jax.random.normal(jax.random.fold_in(key, 2), (b, q_len, hq, hd))
+    base = jnp.asarray([2, bs + 3, m * bs - q_len])[:b]
+    ar = jnp.arange(q_len)[None, :]
+    klen = jnp.asarray([q_len, max(1, q_len - 2), 1])[:b]
+    qpos = jnp.where(ar < klen[:, None], base[:, None] + ar, -1)
+    qpos = qpos.astype(jnp.int32)
+
+    scale = hd**-0.5
+    got = paged_attention(
+        q,
+        cache.k,
+        cache.v,
+        bt,
+        qpos,
+        scale=scale,
+        block_size=bs,
+        softcap=softcap,
+        k_scale=cache.k_scale,
+        v_scale=cache.v_scale,
+        interpret=True,
+    )
+    want = _cached_attention(
+        q * scale, paged_view(cache, bt), qpos, NULL_ENV, softcap=softcap
+    )
+    valid = (qpos >= 0)[:, :, None, None]
+    np.testing.assert_allclose(
+        np.where(valid, got, 0),
+        np.where(valid, want, 0),
+        atol=2e-5,
+        rtol=2e-5,
+    )
+
+
+def _tiny_cfg(mode):
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=256
+    )
+    return cfg.replace(residual_mode=ResidualMode(mode))
+
+
+def test_int8_vs_fp_logit_error_bounded():
+    """Decode logits from an int8 pool must stay within a small bound of
+    the fp pool's — the quality contract that makes int8 deployable.
+    (tests/test_property.py carries the hypothesis round-trip bound; this
+    pins the error end-to-end through attention + MLP + lm head.)"""
+    from repro.configs.base import ParallelConfig
+    from repro.parallel.tp import make_axis_env
+
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    env = make_axis_env(ParallelConfig())
+    bt = jnp.arange(4, dtype=jnp.int32)[None]
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        toks = jnp.asarray(rng.integers(0, 256, (1, 12)), jnp.int32)
+        logits = {}
+        for quant in ("fp", "int8"):
+            caches, _ = engine_mod.build_caches(
+                cfg,
+                1,
+                64,
+                ParallelConfig(),
+                for_decode=False,
+                paged=True,
+                num_blocks=8,
+                block_size=4,
+                kv_quant=quant,
+            )
+            hidden, _, _ = tfm.forward(
+                cfg,
+                params,
+                toks,
+                env,
+                positions=jnp.arange(12)[None],
+                caches=caches,
+                block_tables=bt,
+            )
+            logits[quant] = np.asarray(tfm.logits_shard(cfg, params, hidden[:, -1:]))
+        err = np.abs(logits["fp"] - logits["int8"]).max()
+        ref = np.abs(logits["fp"]).max()
+        assert err <= 0.05 * (1.0 + ref), (err, ref)  # measured ~0.004
+
+
+# ---------------------------------------------------------------------------
+# engine equivalences (the acceptance invariants)
+# ---------------------------------------------------------------------------
+
+
+def _trace(vocab, rng):
+    cases = [
+        ([5, 6, 7, 5, 6, 7, 5, 6], 8, SamplingParams()),
+        (
+            rng.integers(0, vocab, 12).tolist(),
+            6,
+            SamplingParams(temperature=0.9, top_k=12, seed=3),
+        ),
+        ([5, 6, 7, 5, 6, 7], 7, SamplingParams()),
+        (
+            rng.integers(0, vocab, 9).tolist(),
+            5,
+            SamplingParams(temperature=0.8, top_p=0.9, seed=11),
+        ),
+    ]
+    return [
+        Request(rid=i, prompt=p, max_new_tokens=g, sampling=sp)
+        for i, (p, g, sp) in enumerate(cases)
+    ]
+
+
+def _clone(r):
+    return Request(
+        rid=r.rid,
+        prompt=list(r.prompt),
+        max_new_tokens=r.max_new_tokens,
+        sampling=r.sampling,
+        priority=r.priority,
+    )
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(_clone(r))
+    return {rid: f.tokens for rid, f in engine.run().items()}
+
+
+@pytest.mark.parametrize("mode", ["ladder", "standard", "desync2"])
+def test_preempted_engine_matches_unpreempted(mode):
+    """preempt -> swap-out -> swap-in -> resume is bit-invisible: a tiny
+    oversubscribed pool (preemption provably engaged) emits token streams
+    identical to a roomy never-preempting pool."""
+    cfg = _tiny_cfg(mode)
+    params = tfm.init_params(cfg, jax.random.key(0))
+    reqs = _trace(cfg.vocab_size, np.random.default_rng(0))
+
+    roomy = PagedServingEngine(cfg, params, batch_slots=3, s_max=48, block_size=4)
+    want = _run(roomy, reqs)
+
+    tight = PagedServingEngine(
+        cfg,
+        params,
+        batch_slots=3,
+        s_max=48,
+        block_size=4,
+        num_blocks=8,
+        oversubscribe=2.5,
+    )
+    got = _run(tight, reqs)
+    st = tight.stats()
+    assert st["preemptions"] > 0 and st["resumes"] > 0
+    assert st["swapped_out_blocks"] == st["swapped_in_blocks"]
+    assert got == want
+
+
+@pytest.mark.parametrize("spec_mode", ["ngram", "draft"])
+def test_preempted_speculative_engine_matches_plain(spec_mode):
+    """Speculative rollback composes with preemption: the oversubscribed
+    speculative engine still emits bit-identical streams to plain decode,
+    for both drafters."""
+    from repro.serving.speculative import SpeculativePagedEngine
+
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    reqs = _trace(cfg.vocab_size, np.random.default_rng(1))
+
+    plain = PagedServingEngine(cfg, params, batch_slots=3, s_max=48, block_size=4)
+    want = _run(plain, reqs)
+
+    kw = {}
+    if spec_mode == "draft":
+        dcfg = cfg.reduced(n_layers=1)
+        kw = dict(
+            draft_cfg=dcfg,
+            draft_params=tfm.init_params(dcfg, jax.random.key(7)),
+        )
+    spec = SpeculativePagedEngine(
+        cfg,
+        params,
+        batch_slots=3,
+        s_max=48,
+        block_size=4,
+        num_blocks=8,
+        oversubscribe=2.5,
+        spec_mode=spec_mode,
+        spec_k=3,
+        **kw,
+    )
+    got = _run(spec, reqs)
+    st = spec.stats()
+    assert st["preemptions"] > 0 and st["verify_forwards"] > 0
+    assert got == want
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_int8_engine_preempt_and_kernel_match_oracle(use_pallas):
+    """int8 pools: the preempted-and-resumed run matches the
+    never-preempted int8 run bit-exactly (quantized bytes moved, never
+    re-quantized), through both the gather oracle and the kernel's
+    dequant-in-VMEM path — and kernel == oracle."""
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    reqs = _trace(cfg.vocab_size, np.random.default_rng(2))
+
+    roomy = PagedServingEngine(
+        cfg,
+        params,
+        batch_slots=3,
+        s_max=48,
+        block_size=4,
+        kv_quant="int8",
+        use_pallas=use_pallas,
+    )
+    want = _run(roomy, reqs)
+
+    tight = PagedServingEngine(
+        cfg,
+        params,
+        batch_slots=3,
+        s_max=48,
+        block_size=4,
+        num_blocks=8,
+        oversubscribe=2.5,
+        kv_quant="int8",
+        use_pallas=use_pallas,
+    )
+    got = _run(tight, reqs)
+    assert tight.stats()["preemptions"] > 0
+    assert got == want
+
+
+def test_int8_kernel_engine_matches_int8_gather_engine():
+    """use_pallas=True over an int8 pool emits the same tokens as the int8
+    gather oracle path — the engine-level pin of the kernel dequant."""
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    reqs = _trace(cfg.vocab_size, np.random.default_rng(3))
+    outs = []
+    for pallas in (False, True):
+        eng = PagedServingEngine(
+            cfg,
+            params,
+            batch_slots=2,
+            s_max=48,
+            block_size=8,
+            max_prefill_tokens=16,
+            kv_quant="int8",
+            use_pallas=pallas,
+        )
+        outs.append(_run(eng, reqs))
+    assert outs[0] == outs[1]
+
+
+def test_swap_pool_capacity_guard_surfaces_cleanly():
+    """A bounded swap tier that cannot hold a victim raises a clear error
+    instead of silently dropping blocks."""
+    cfg = _tiny_cfg("ladder")
+    params = tfm.init_params(cfg, jax.random.key(0))
+    reqs = _trace(cfg.vocab_size, np.random.default_rng(0))
+    eng = PagedServingEngine(
+        cfg,
+        params,
+        batch_slots=3,
+        s_max=48,
+        block_size=4,
+        num_blocks=8,
+        oversubscribe=2.5,
+        swap_blocks=1,  # too small for any whole row
+    )
+    with pytest.raises(RuntimeError, match="SwapPool"):
+        _run(eng, reqs)

@@ -61,8 +61,8 @@ def test_allocator_oom_raises_and_guards_double_free():
     blk = a.alloc()
     with pytest.raises(RuntimeError):
         a.alloc()
-    with pytest.raises(AssertionError):
-        a.free(blk)  # refcount still 1
+    with pytest.raises(ValueError):
+        a.free(blk)  # refcount still 1 (guards raise; tests/test_memory.py)
 
 
 def test_prefix_cache_chain_lookup_and_lru_eviction():

@@ -134,6 +134,84 @@ def test_ring_weights_bounded(n, kind):
 
 
 @SETTINGS
+@given(seed=st.integers(0, 1000), n=st.integers(1, 2000),
+       scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_int8_roundtrip_error_bound(seed, n, scale):
+    """quantize_int8 -> dequantize_int8 error is bounded per element by
+    half a quantization step: max|block| / 254 (round-to-nearest of a
+    symmetric 127-level grid), for any shape and magnitude."""
+    from repro.quant import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    img = dequantize_int8(q, s, x.shape)
+    # per-256-block bound: each element's error <= its block's scale / 2
+    bound = np.repeat(np.asarray(s) / 2, 256)[:n] + 1e-7
+    assert np.all(np.abs(np.asarray(img - x)) <= bound)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 1000), tokens=st.integers(1, 32),
+       hd=st.sampled_from([4, 16, 64]), scale=st.sampled_from([1e-2, 1.0, 50.0]))
+def test_kv_int8_roundtrip_error_bound(seed, tokens, hd, scale):
+    """Per-(token, head) KV quantization round-trips within half a step of
+    each token's own scale — the bound that makes the int8 pool's logit
+    error controllable (DESIGN.md §KV memory tiers)."""
+    from repro.quant import dequantize_kv, quantize_kv
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(tokens, 2, hd)) * scale, jnp.float32)
+    q, s = quantize_kv(x)
+    img = dequantize_kv(q, s)
+    bound = np.asarray(s)[..., None] / 2 + 1e-7
+    assert np.all(np.abs(np.asarray(img - x)) <= bound)
+    # idempotence: re-quantizing the image is a fixed point (the swap
+    # tier's "bytes move, never re-quantized" contract is safe even if a
+    # bug re-quantized — but we pin exactness anyway)
+    q2, s2 = quantize_kv(img)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+
+
+@SETTINGS
+@given(seed=st.integers(0, 200))
+def test_int8_paged_attention_logit_error_bounded(seed):
+    """int8-vs-fp paged attention: the pre-softmax logits (scores) shift by
+    at most scale * (|q| . k_err + |k| . q-side rounding) and the output by
+    a comparable margin — asserted against an analytic per-case bound, not
+    a magic constant."""
+    from repro.parallel.collectives import NULL_ENV
+    from repro.models.attention import _cached_attention
+    from repro.serving.kv_cache import (make_paged_kv_cache, paged_update,
+                                        paged_view)
+    bs, hkv, hd, nb, m = 4, 2, 16, 8, 3
+    rng = np.random.default_rng(seed)
+    kv_len = int(rng.integers(1, m * bs))
+    kn = jnp.asarray(rng.normal(size=(1, kv_len, hkv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(1, kv_len, hkv, hd)), jnp.float32)
+    bt = jnp.asarray(rng.choice(nb, size=m, replace=False)[None], jnp.int32)
+    pos = jnp.arange(kv_len)[None]
+    q = jnp.asarray(rng.normal(size=(1, 1, hkv * 2, hd)), jnp.float32)
+    qpos = jnp.asarray([[kv_len - 1]], jnp.int32)
+    outs = {}
+    for quant in ("fp", "int8"):
+        c = make_paged_kv_cache(nb, bs, hkv, hd, jnp.float32, quant=quant)
+        c = paged_update(c, kn, vn, pos, bt)
+        outs[quant] = np.asarray(_cached_attention(
+            q * hd ** -0.5, paged_view(c, bt), qpos, NULL_ENV, softcap=0.0))
+    # v error: each element within v_scale/2 of fp; attention output is a
+    # convex combination of v rows, so |out_int8 - out_fp| is bounded by
+    # max-token v error plus the k-side softmax reweighting effect —
+    # coarsely, a few quantization steps of the largest row
+    v_step = float(np.abs(np.asarray(vn)).max()) / 254
+    k_step = float(np.abs(np.asarray(kn)).max()) / 254
+    qmag = float(np.abs(np.asarray(q)).max()) * hd ** -0.5
+    vmax = float(np.abs(np.asarray(vn)).max())
+    # score perturbation |ds| <= qmag * k_step * hd; softmax Lipschitz in
+    # infinity norm amplifies by <= 2 * |ds| on the weights, weights hit v
+    bound = v_step + 2 * (qmag * k_step * hd) * vmax + 1e-6
+    assert np.abs(outs["int8"] - outs["fp"]).max() <= bound
+
+
+@SETTINGS
 @given(seed=st.integers(0, 30), rows=st.integers(1, 6),
        d=st.sampled_from([8, 16, 64]))
 def test_rmsnorm_kernel_property(seed, rows, d):
