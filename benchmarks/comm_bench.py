@@ -1,0 +1,196 @@
+"""TP AllReduce benchmark: bytes-on-wire + exposed-comm-time model.
+
+The ladder residual's thesis is that the block-output AllReduce can hide
+under the next sub-block's compute; parallel/overlap.py adds the explicit
+chunked/compressed ring.  This bench pins both down the same two ways
+kernel_bench does:
+
+* **analytical model** (core/schedule.py) — per layer, per residual mode:
+
+    wire bytes     2 (tp-1)/tp * t * d * 2       (bf16 ring; int8 wire pays
+                                                  1 B/elem + 4 B per
+                                                  256-element scale block)
+    t_comm         chunks * latency + wire / link_bw
+    exposed        STANDARD: 2 * t_comm          (consumed immediately)
+                   LADDER:   max(0, t_comm - t_attn)
+                             + max(0, t_comm - t_mlp)
+                   DESYNC-n: 2 * t_comm / n      (survivors synchronous)
+
+  ``hidden_vs_standard`` on ladder rows is the gated quantity: the
+  fraction of STANDARD's exposed comm that LADDER hides at the same
+  (hw, tp, phase, wire format).  scripts/check_bench.py requires
+  >= 0.30 on the gated rows — loose on purpose; it catches accidental
+  serialization of the schedule, not small model drift.  Gated rows are
+  NVLink sync rows (the schedule itself) plus NVLink chunked *prefill*
+  rows (bandwidth-dominated, where chunking pays off).  Ungated but
+  reported: chunked decode (chunks multiply the 8us collective latency,
+  so a decode sub-block genuinely cannot hide 4 chunks' worth — the
+  model says use chunks=1 there) and all PCIe rows (25us latency
+  swamps one sub-block of compute).  The compressed rows also gate the
+  wire-byte reduction (>= 1.9x vs bf16).
+
+* **measured step time** — wall time of jitted psum / ring / compressed
+  ring at TP=2 on this host's (forced) 2 fake CPU devices.  Like
+  kernel_bench's interpret-mode timings this column exists to catch
+  pathological regressions and becomes meaningful on real links; the
+  model rows are what check_bench gates.
+
+    PYTHONPATH=src python benchmarks/comm_bench.py \
+        --out results/comm_bench.json
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# the measured half wants 2 devices; force them BEFORE jax initialises
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+        " --xla_force_host_platform_device_count=2"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import ResidualMode  # noqa: E402
+from repro.core.schedule import (  # noqa: E402
+    HWS,
+    ar_wire_bytes,
+    comm_time,
+    exposed_comm,
+    layer_cost,
+)
+from repro.parallel import compat, overlap  # noqa: E402
+
+MODES = (ResidualMode.STANDARD, ResidualMode.LADDER, ResidualMode.DESYNC2)
+
+# phase name -> (batch, seq_new, kv_len)
+PHASES = dict(decode=(8, 1, 1280), prefill=(1, 1024, 1024))
+
+
+def model_rows(args):
+    """The analytical sweep: (hw, tp, phase) x residual mode x wire format."""
+    cfg = get_config(args.arch, residual="ladder")
+    rows = []
+    for hw_key in args.hws.split(","):
+        hw = HWS[hw_key]
+        for tp in (2, 8):
+            for phase, (batch, seq_new, kv_len) in PHASES.items():
+                t = batch * seq_new
+                wire_fp = ar_wire_bytes(t, cfg.d_model, tp)
+                wire_q = ar_wire_bytes(t, cfg.d_model, tp, quant=True)
+                for comm, chunks, quant in (
+                        ("sync", 1, False),
+                        ("overlap", args.chunks, False),
+                        ("compressed", args.chunks, True)):
+                    lc = layer_cost(cfg, tp=tp, batch=batch, seq_new=seq_new,
+                                    kv_len=kv_len, hw=hw, comm_chunks=chunks,
+                                    comm_quant=quant)
+                    std = exposed_comm(ResidualMode.STANDARD, lc)
+                    for mode in MODES:
+                        rep = exposed_comm(mode, lc)
+                        rows.append(dict(
+                            scenario="model", hw=hw_key, tp=tp, phase=phase,
+                            mode=mode.value, comm=comm, chunks=chunks,
+                            wire_bytes=round(wire_q if quant else wire_fp),
+                            t_comm_us=round(lc.t_comm * 1e6, 3),
+                            t_attn_us=round(lc.t_attn * 1e6, 3),
+                            t_mlp_us=round(lc.t_mlp * 1e6, 3),
+                            t_exposed_us=round(rep["t_exposed"] * 1e6, 3),
+                            t_hidden_us=round(rep["t_hidden"] * 1e6, 3),
+                            hidden_frac=round(rep["hidden_frac"], 4),
+                            hidden_vs_standard=round(
+                                rep["t_hidden"] / std["t_exposed"], 4)
+                            if std["t_exposed"] > 0 else 0.0,
+                            wire_reduction=round(wire_fp / wire_q, 3)
+                            if quant and wire_q else 1.0,
+                            gated=hw_key == "nvlink" and
+                            (comm == "sync" or phase == "prefill"),
+                        ))
+    return rows
+
+
+def _time_fn(fn, *args, iters):
+    jax.block_until_ready(fn(*args))  # compile outside the clock
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def measured_rows(args):
+    """Wall time of the real collectives at TP=2 on this host (fake
+    devices on CPU — correctness/overhead column, not link bandwidth)."""
+    if len(jax.devices()) < 2:
+        return []
+    cfg = get_config(args.arch, residual="ladder")
+    mesh = compat.make_mesh((2,), ("model",))
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(2, 8, cfg.d_model)),
+        jnp.float32)
+
+    def run(fn):
+        wrapped = compat.shard_map(fn, mesh, P("model"), P("model"))
+        with compat.set_mesh(mesh):
+            return _time_fn(jax.jit(wrapped), x, iters=args.iters)
+
+    variants = dict(
+        psum=lambda v: jax.lax.psum(v, "model"),
+        ring=lambda v: overlap.ring_all_reduce(
+            v, "model", chunks=args.chunks),
+        compressed=lambda v: overlap.compressed_ring_all_reduce(
+            v, "model", chunks=args.chunks),
+    )
+    return [dict(scenario="measured", comm=name, tp=2,
+                 shape=list(x.shape[1:]),
+                 t_us=round(run(fn) * 1e6, 1),
+                 backend=jax.default_backend())
+            for name, fn in variants.items()]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ladder-3b")
+    ap.add_argument("--hws", default="nvlink,no_nvlink",
+                    help="comma-separated core.schedule.HWS keys")
+    ap.add_argument("--chunks", type=int, default=4,
+                    help="ring chunk count for overlap/compressed rows")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "results" / "comm_bench.json"))
+    args = ap.parse_args(argv)
+
+    rows = model_rows(args) + measured_rows(args)
+    record = dict(bench="comm_bench", config=vars(args), rows=rows)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=1))
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        if r["scenario"] == "measured":
+            print(f"comm_bench/measured-{r['comm']},{r['t_us']:.1f},"
+                  f"tp={r['tp']} backend={r['backend']}")
+        elif r["mode"] == "ladder":  # the gated rows; others live in JSON
+            print(f"comm_bench/{r['hw']}-tp{r['tp']}-{r['phase']}-"
+                  f"{r['comm']},{r['t_exposed_us']:.3f},"
+                  f"t_comm={r['t_comm_us']}us "
+                  f"wire={r['wire_bytes']}B "
+                  f"hidden_frac={r['hidden_frac']} "
+                  f"hidden_vs_standard={r['hidden_vs_standard']} "
+                  f"gated={r['gated']}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

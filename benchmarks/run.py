@@ -20,6 +20,8 @@ from repro.core import schedule as sched                       # noqa: E402
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
 KERNEL_BENCH = Path(__file__).resolve().parents[1] / "results" / \
     "kernel_bench.json"
+COMM_BENCH = Path(__file__).resolve().parents[1] / "results" / \
+    "comm_bench.json"
 
 PAPER_TABLE1 = {  # model -> (no_nvlink, with_nvlink) measured speedups
     "ladder-1b": (1.39, 1.56), "ladder-3b": (1.50, 1.57),
@@ -161,6 +163,29 @@ def kernel_bench_table():
               f"{', interpret' if r['kernel_interpreted'] else ''})")
 
 
+def comm_bench_table():
+    """Exposed-vs-hidden TP comm per residual mode + wire format, from the
+    committed benchmarks/comm_bench.py artifact (ladder must hide >= 30%
+    of standard's exposed comm on the gated rows — scripts/check_bench.py
+    gates the same rows)."""
+    if not COMM_BENCH.exists():
+        print("comm_bench,0,missing results/comm_bench.json "
+              "(run benchmarks/comm_bench.py)")
+        return
+    rows = json.loads(COMM_BENCH.read_text())["rows"]
+    for r in rows:
+        if r["scenario"] == "measured":
+            _emit(f"comm_bench/measured-{r['comm']}", r["t_us"],
+                  f"tp={r['tp']} backend={r['backend']}")
+        elif r["mode"] == "ladder":
+            _emit(f"comm_bench/{r['hw']}-tp{r['tp']}-{r['phase']}-"
+                  f"{r['comm']}", r["t_exposed_us"],
+                  f"t_comm={r['t_comm_us']}us wire={r['wire_bytes']}B "
+                  f"hidden_frac={r['hidden_frac']} "
+                  f"hidden_vs_standard={r['hidden_vs_standard']} "
+                  f"gated={r['gated']}")
+
+
 TABLES = {
     "table1": table1_inference_speedup,
     "table2": table2_latency_breakdown,
@@ -170,6 +195,7 @@ TABLES = {
     "tpu": tpu_projection,
     "roofline": roofline_table,
     "kernel_bench": kernel_bench_table,
+    "comm_bench": comm_bench_table,
 }
 
 

@@ -85,18 +85,22 @@ def _overload_pool(args, s_max):
 
 
 def _make_engine(cfg, params, args, s_max, spec: str, use_pallas: bool,
-                 kv_quant: str = "fp", overload: bool = False):
+                 kv_quant: str = "fp", overload: bool = False,
+                 comm: str = "sync"):
     """Engine for one bench row: ragged oracle, plain paged, or paged with
     the requested speculative drafter; `use_pallas` routes the paged
     attention read through the block-table-native kernel, `kv_quant`
-    selects fp or int8 pool storage, and `overload` swaps in the tiny
-    oversubscribed pool driven by the preemptive scheduler."""
+    selects fp or int8 pool storage, `overload` swaps in the tiny
+    oversubscribed pool driven by the preemptive scheduler, and `comm`
+    selects the TP AllReduce mode (parallel/overlap.py)."""
     if args.engine == "ragged":
         return sched.ContinuousServingEngine(
             cfg, params, batch_slots=args.slots, s_max=s_max,
             max_prefills_per_step=1)
     pal = dict(use_pallas=True) if use_pallas else {}
     mem = dict(kv_quant=kv_quant)
+    if comm != "sync":
+        mem.update(comm_overlap=True)
     if overload:
         num_blocks, over = _overload_pool(args, s_max)
         mem.update(num_blocks=num_blocks, oversubscribe=over)
@@ -217,10 +221,11 @@ def _pool_economics(cfg, args, s_max, engine) -> dict:
 
 def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
     """One bench row.  `variant` is (engine_label, spec_mode, temperature,
-    use_pallas, kv_quant, overload); None means the plain engine at the
-    sampled default."""
-    label, spec, temperature, use_pallas, kv_quant, overload = variant or (
-        args.engine, "off", args.temperature, False, "fp", False)
+    use_pallas, kv_quant, overload, comm); None means the plain engine at
+    the sampled default."""
+    (label, spec, temperature, use_pallas, kv_quant, overload,
+     comm) = variant or (args.engine, "off", args.temperature, False, "fp",
+                         False, "sync")
     cfg = REGISTRY[args.arch].reduced(
         n_layers=args.layers, d_model=args.d_model, n_heads=4,
         d_ff=2 * args.d_model, vocab_size=args.vocab,
@@ -242,7 +247,7 @@ def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
         r.prompt = shared + r.prompt
 
     engine = _make_engine(cfg, params, args, s_max, spec, use_pallas,
-                          kv_quant=kv_quant, overload=overload)
+                          kv_quant=kv_quant, overload=overload, comm=comm)
 
     # warmup: compile EVERY prefill bucket + the decode graph outside the
     # timed run (jit caches are shared through the process-wide tracing cache
@@ -355,6 +360,12 @@ def main():
                          "interpret mode off-TPU, so wall clock here only "
                          "guards against pathological regressions — the "
                          "bytes-read win lives in kernel_bench.py)")
+    ap.add_argument("--comm", default="on", choices=["on", "off"],
+                    help="add a paged-overlap row per scenario/mode (TP "
+                         "AllReduce as the chunked overlapped ring; at the "
+                         "bench's TP=1 the ring is the identity, so the "
+                         "row guards engine overhead/correctness — the "
+                         "exposed-comm win lives in comm_bench.py)")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.7)
@@ -366,33 +377,43 @@ def main():
                                          / "results" / "serve_bench.json"))
     args = ap.parse_args()
 
-    variants = [(args.engine, "off", args.temperature, False, "fp", False)]
+    variants = [(args.engine, "off", args.temperature, False, "fp", False,
+                 "sync")]
     if args.engine == "paged" and args.pallas == "on":
         # same traffic through the paged-attention kernel: tokens are
         # bit-identical, so any count difference is a bug, not jitter
         variants.append(("paged+pallas", "off", args.temperature, True,
-                         "fp", False))
+                         "fp", False, "sync"))
     if args.engine == "paged" and args.int8 == "on":
         # same traffic on an int8 pool: tokens may differ within the
         # bounded logit error; the row's point is the pool economics
         # (2x+ rows per byte) and that throughput holds up
         variants.append(("paged-int8", "off", args.temperature, False,
-                         "int8", False))
+                         "int8", False, "sync"))
+    if args.engine == "paged" and args.comm == "on":
+        # same traffic with the TP AllReduce in overlap (chunked ring)
+        # mode: at the bench's TP=1 the ring degenerates to the identity,
+        # so like the pallas row this is an overhead/correctness harness
+        # here and becomes a comm-overlap measurement on a real TP mesh
+        # (the modeled win is benchmarks/comm_bench.py)
+        variants.append(("paged-overlap", "off", args.temperature, False,
+                         "fp", False, "overlap"))
     if args.engine == "paged" and args.spec != "off":
         # a plain greedy row at the spec temperature (apples-to-apples
         # counterpart), then one row per requested drafter
         variants.append(("paged-greedy", "off", args.spec_temperature,
-                         False, "fp", False))
+                         False, "fp", False, "sync"))
         variants += [(f"paged+spec-{sp}", sp, args.spec_temperature, False,
-                      "fp", False)
+                      "fp", False, "sync")
                      for sp in (x.strip() for x in args.spec.split(","))
                      if sp]
     # the overload scenario exercises the preemptive memory tier only:
     # a fp and an int8 row on the deliberately-too-small pool
     overload_variants = [
-        ("paged-preempt", "off", args.temperature, False, "fp", True),
+        ("paged-preempt", "off", args.temperature, False, "fp", True,
+         "sync"),
         ("paged-preempt-int8", "off", args.temperature, False, "int8",
-         True),
+         True, "sync"),
     ]
     scenarios = [sc.strip() for sc in args.scenarios.split(",")]
     if args.engine == "ragged" and "overload" in scenarios:

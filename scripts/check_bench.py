@@ -19,6 +19,12 @@ occupancy >= 50%, must show at least a 4x reduction at 25% occupancy
 DESIGN.md §Paged-attention kernel), and the int8-pool variant must cut
 the kernel's own traffic by a further >= 1.8x (dequant-in-VMEM).
 
+Also gates the exposed-comm-time model (results/comm_bench.json,
+regenerated with --run): on the gated NVLink rows the ladder schedule
+must hide >= 30% of the exposed comm time standard mode pays at TP >= 2,
+and the int8-compressed wire must carry >= 1.9x fewer bytes than bf16
+(DESIGN.md §Communication overlap).
+
 KV memory-tier gates (``check_serve_memory``, hard invariants on the
 candidate serve rows — DESIGN.md §KV memory tiers): every paged-int8 row
 must admit >= 1.8x the fp row's worst-case concurrent rows at equal pool
@@ -51,7 +57,7 @@ _REPLAY = [
     "arch", "engine", "requests", "rate", "slots", "max_prompt", "max_new",
     "shared_len", "vocab", "block_size", "prefill_budget", "layers",
     "d_model", "temperature", "seed", "modes", "scenarios",
-    "spec", "spec_k", "spec_temperature", "pallas", "int8",
+    "spec", "spec_k", "spec_temperature", "pallas", "int8", "comm",
 ]
 
 
@@ -194,6 +200,49 @@ def check_kernel_bench(path: Path) -> int:
     return failures
 
 
+def check_comm_bench(path: Path) -> int:
+    """Gate the exposed-comm-time model (benchmarks/comm_bench.py): on
+    every gated ladder row, ladder must hide >= 30% of the exposed comm
+    time STANDARD pays at the same (hw, tp, phase, wire format), and the
+    compressed wire must carry >= 1.9x fewer bytes than bf16.  The model
+    is analytical (deterministic), so like check_kernel_bench these are
+    hard invariants — the 0.30 floor is loose on purpose: it catches the
+    ladder schedule accidentally serializing, not model drift."""
+    if not path.exists():
+        print(f"FAIL comm_bench: {path} missing "
+              "(run benchmarks/comm_bench.py)")
+        return 1
+    rows = json.loads(path.read_text())["rows"]
+    failures = 0
+    gated_pairs = 0
+    for r in rows:
+        if r.get("scenario") != "model" or not r.get("gated"):
+            continue
+        if r["mode"] == "ladder":
+            if r["tp"] < 2:
+                continue
+            gated_pairs += 1
+            ok = r["hidden_vs_standard"] >= 0.30
+            print(f"{'ok  ' if ok else 'FAIL'} comm_bench/{r['hw']}/"
+                  f"tp{r['tp']}/{r['phase']}/{r['comm']}: ladder hides "
+                  f"{100 * r['hidden_vs_standard']:.0f}% of standard's "
+                  f"exposed comm (need >= 30%)")
+            failures += 0 if ok else 1
+        if r["comm"] == "compressed":
+            ok = r.get("wire_reduction", 0.0) >= 1.9
+            if not ok:
+                print(f"FAIL comm_bench/{r['hw']}/tp{r['tp']}/{r['phase']}: "
+                      f"int8 wire reduction x{r.get('wire_reduction', 0.0)} "
+                      "< 1.9")
+                failures += 1
+    # vacuous-pass protection: the gated rows must exist at TP >= 2
+    if gated_pairs == 0:
+        print("FAIL comm_bench: no gated ladder rows at tp >= 2 "
+              "(gate would pass vacuously)")
+        failures += 1
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -211,16 +260,25 @@ def main(argv=None) -> int:
     ap.add_argument("--kernel-bench",
                     default=str(ROOT / "results" / "kernel_bench.json"),
                     help="kernel_bench artifact to gate (bytes-read model)")
+    ap.add_argument("--comm-bench",
+                    default=str(ROOT / "results" / "comm_bench.json"),
+                    help="comm_bench artifact to gate (exposed-comm model)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
     kernel_path = Path(args.kernel_bench)
+    comm_path = Path(args.comm_bench)
     if args.run:
         cand_path = ROOT / "results" / "serve_bench.tmp.json"
         run_bench(baseline, cand_path)
         kernel_path = ROOT / "results" / "kernel_bench.tmp.json"
         cmd = [sys.executable, str(ROOT / "benchmarks" / "kernel_bench.py"),
                "--out", str(kernel_path)]
+        print("+", " ".join(cmd))
+        subprocess.run(cmd, check=True, stdout=subprocess.DEVNULL)
+        comm_path = ROOT / "results" / "comm_bench.tmp.json"
+        cmd = [sys.executable, str(ROOT / "benchmarks" / "comm_bench.py"),
+               "--out", str(comm_path)]
         print("+", " ".join(cmd))
         subprocess.run(cmd, check=True, stdout=subprocess.DEVNULL)
     elif args.candidate:
@@ -232,6 +290,7 @@ def main(argv=None) -> int:
     failures = compare(baseline, candidate, args.tps_tol, args.p99_tol)
     failures += check_serve_memory(candidate)
     failures += check_kernel_bench(kernel_path)
+    failures += check_comm_bench(comm_path)
     if failures:
         print(f"{failures} bench regression(s) vs {args.baseline}")
     else:

@@ -24,7 +24,9 @@ if [[ "${1:-}" == "--lint" ]]; then
         scripts/check_bench.py tests/test_paged.py tests/test_ci_pipeline.py \
         src/repro/kernels/paged_attention.py tests/test_paged_kernel.py \
         benchmarks/kernel_bench.py \
-        src/repro/serving/memory.py src/repro/quant.py tests/test_memory.py
+        src/repro/serving/memory.py src/repro/quant.py tests/test_memory.py \
+        src/repro/parallel/overlap.py src/repro/kernels/comm.py \
+        tests/test_collectives.py benchmarks/comm_bench.py
     exit 0
 fi
 

@@ -115,7 +115,7 @@ def subblock_step(mode: ResidualMode, fn: SubBlockFn, params, carry: Carry,
         # of compute overlaps the collective.
         residual = carry.residual + carry.p2
         out, new_state, aux = fn(params, residual, state)
-        pending = env.sp_reduce(out) if env.sp else env.psum_model(out)
+        pending = env.reduce_block_output(out)
         pending = _name_collective(pending)
         return Carry(residual=residual, p1=pending, p2=carry.p1,
                      aux=carry.aux + aux), new_state
@@ -139,7 +139,7 @@ def subblock_step(mode: ResidualMode, fn: SubBlockFn, params, carry: Carry,
 
     # STANDARD (and PARALLEL, which arrives pre-fused)
     out, new_state, aux = fn(params, carry.residual, state)
-    reduced = env.sp_reduce(out) if env.sp else env.psum_model(out)
+    reduced = env.reduce_block_output(out)
     reduced = _name_collective(reduced)
     return Carry(residual=carry.residual + reduced,
                  aux=carry.aux + aux), new_state

@@ -56,10 +56,69 @@ def _t_compute(flops, bytes_, hw: HW):
     return max(flops / (hw.peak_flops * hw.mfu), bytes_ / hw.hbm_bw)
 
 
+def ar_wire_bytes(t: int, d: int, tp: int, *, quant: bool = False) -> float:
+    """Bytes on the wire for one ring AllReduce of a (t, d) activation over
+    tp shards: each element crosses a link 2(tp-1)/tp times (reduce-scatter
+    + all-gather halves).  bf16 payload (2 B/elem) by default; the
+    int8-compressed wire (parallel/overlap.py) pays 1 B/elem plus one f32
+    scale per 256-element quant block."""
+    if tp <= 1:
+        return 0.0
+    elems = t * d
+    payload = elems * 1 + 4 * -(-elems // 256) if quant else elems * 2
+    return 2 * (tp - 1) / tp * payload
+
+
+def comm_time(wire_bytes: float, hw: HW, *, chunks: int = 1) -> float:
+    """Latency + bandwidth line for one (possibly chunked) AllReduce.
+    Each chunk is its own collective, so chunking multiplies the latency
+    term — the price paid for chunk-level overlap.  With latency-dominated
+    decode comm chunks=1 wins; chunking pays off on bandwidth-dominated
+    prefill shapes (comm_bench sweeps this trade)."""
+    if wire_bytes <= 0.0:
+        return 0.0
+    return chunks * hw.comm_latency + wire_bytes / hw.link_bw
+
+
+def exposed_comm(mode: ResidualMode, lc: LayerCost) -> dict:
+    """Per-layer exposed vs hidden comm time under `mode` — the
+    quantitative form of "ladder can overlap where standard cannot",
+    consistent with :func:`stack_time` (stack = n_layers * (t_attn + t_mlp
+    + t_exposed) up to edge terms).
+
+    STANDARD consumes each AllReduce's result immediately, so nothing can
+    hide it: exposed == total.  LADDER consumes it one sub-block later, so
+    each comm hides under the next sub-block's compute and only the excess
+    is exposed.  DESYNC-n drops all but 1/n of the comms but the survivors
+    are synchronous.  PARALLEL fuses to one (synchronous) comm per layer.
+    """
+    ta, tm, tc = lc.t_attn, lc.t_mlp, lc.t_comm
+    if mode == ResidualMode.STANDARD:
+        total = exposed = 2 * tc
+    elif mode == ResidualMode.LADDER:
+        total = 2 * tc
+        exposed = max(0.0, tc - ta) + max(0.0, tc - tm)
+    elif mode == ResidualMode.PARALLEL:
+        total = exposed = tc
+    elif mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
+        n = {ResidualMode.DESYNC2: 2, ResidualMode.DESYNC4: 4}[mode]
+        total = exposed = 2 * tc / n
+    elif mode == ResidualMode.NO_COMM:
+        total = exposed = 0.0
+    else:
+        raise ValueError(mode)
+    hidden = total - exposed
+    return dict(t_comm_total=total, t_exposed=exposed, t_hidden=hidden,
+                hidden_frac=hidden / total if total > 0 else 0.0)
+
+
 def layer_cost(cfg: ModelConfig, *, tp: int, batch: int, seq_new: int,
-               kv_len: int, hw: HW) -> LayerCost:
+               kv_len: int, hw: HW, comm_chunks: int = 1,
+               comm_quant: bool = False) -> LayerCost:
     """Per-layer sub-block costs for `seq_new` tokens against `kv_len` keys
-    (seq_new == kv_len for prefill/train fwd, 1 for decode)."""
+    (seq_new == kv_len for prefill/train fwd, 1 for decode).  comm_chunks /
+    comm_quant model the overlap/compressed wire formats of
+    parallel/overlap.py (defaults reproduce the monolithic bf16 psum)."""
     d, hd = cfg.d_model, cfg.head_dim
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     t = batch * seq_new
@@ -79,9 +138,9 @@ def layer_cost(cfg: ModelConfig, *, tp: int, batch: int, seq_new: int,
         by_mlp = n_mats * d * cfg.moe.moe_d_ff * 2 * \
             max(cfg.moe.num_experts // tp, 1) + 4 * t * d * 2 / tp
     t_mlp = _t_compute(fl_mlp, by_mlp, hw)
-    # AllReduce of (t, d) bf16 over tp
-    ar_bytes = 2 * (tp - 1) / max(tp, 1) * (t * d * 2)
-    t_comm = hw.comm_latency + ar_bytes / hw.link_bw if tp > 1 else 0.0
+    # AllReduce of the (t, d) activations over tp
+    wire = ar_wire_bytes(t, d, tp, quant=comm_quant)
+    t_comm = comm_time(wire, hw, chunks=comm_chunks)
     return LayerCost(t_attn, t_mlp, t_comm)
 
 

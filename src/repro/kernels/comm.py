@@ -1,0 +1,174 @@
+"""Pallas comm kernels for the overlapped ring AllReduce.
+
+Two kernels back :mod:`repro.parallel.overlap`:
+
+``dequant_accumulate``
+    fused dequantize(int8 ``q``, per-256-block ``scale``) + **masked**
+    accumulate onto an f32 accumulator — the reduce step of the compressed
+    ring.  Ring payloads are padded to whole quant blocks and the pad tail
+    of a reused wire buffer may hold *anything* (a stale chunk, 1e38, NaN);
+    the in-kernel mask keeps it out of the sum.  Poisoned-tail isolation
+    and the chunk-boundary off-by-ones are pinned in interpret mode by
+    tests/test_collectives.py; on TPU the same kernel runs compiled.
+
+``ring_all_reduce_remote``
+    the chunk rotation itself as explicit double-buffered
+    ``pltpu.make_async_remote_copy`` DMA (one neighbour push per step,
+    send/recv slots alternating ``step % 2`` / ``(step + 1) % 2``), with
+    every shard's contribution landed in a by-source VMEM buffer and
+    summed in source order — the same determinism contract as the
+    ppermute fallback (cross-shard bit-identity; psum bit-equality at
+    tp=2).  Remote DMA has no cross-device interpret mode, so this path is
+    TPU-only (``jax.default_backend() == "tpu"``); everything else runs
+    the fallback, and the shared schedule helpers (``chunk_bounds``,
+    source ordering) are what the fast tier pins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant import BLOCK
+
+_LANE = 128  # TPU lane width; remote-DMA payloads are padded to (rows, 128)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# masked dequantize-accumulate (compressed-ring reduce step)
+# ---------------------------------------------------------------------------
+
+def _dequant_acc_kernel(acc_ref, q_ref, s_ref, out_ref, *, valid: int):
+    img = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+    rows = jax.lax.broadcasted_iota(jnp.int32, img.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, img.shape, 1)
+    # flat element index over the (blocks, BLOCK) quant grid; everything at
+    # or beyond `valid` is pad/garbage and must contribute exactly zero.
+    keep = rows * img.shape[1] + cols < valid
+    out_ref[...] = acc_ref[...] + jnp.where(keep, img, 0.0)
+
+
+def dequant_accumulate(acc, q, scale, valid: int, *, interpret=None):
+    """``acc + dequantize(q, scale)[:valid]`` with the pad tail masked out.
+
+    acc: (valid,) f32 running chunk sum.  q: (blocks, BLOCK) int8 wire
+    payload; scale: (blocks,) f32.  ``valid`` is the chunk's true element
+    count (static): ``blocks * BLOCK`` is the padded wire size, and the
+    tail — q values *and* scales — may be garbage from buffer reuse.
+    """
+    blocks, blk = q.shape
+    if blk != BLOCK:
+        raise ValueError(f"expected quant block {BLOCK}, got {blk}")
+    if not 0 < valid <= blocks * blk:
+        raise ValueError(f"valid={valid} outside (0, {blocks * blk}]")
+    if interpret is None:
+        interpret = _default_interpret()
+    accp = (
+        jnp.zeros((blocks * blk,), jnp.float32)
+        .at[:valid]
+        .set(acc.astype(jnp.float32))
+        .reshape(blocks, blk)
+    )
+    out = pl.pallas_call(
+        functools.partial(_dequant_acc_kernel, valid=valid),
+        out_shape=jax.ShapeDtypeStruct((blocks, blk), jnp.float32),
+        interpret=interpret,
+    )(accp, q, scale.astype(jnp.float32))
+    return out.reshape(-1)[:valid]
+
+
+# ---------------------------------------------------------------------------
+# remote-DMA ring all-reduce (TPU only)
+# ---------------------------------------------------------------------------
+
+def _ring_chunk_kernel(x_ref, out_ref, comm_buf, gather_buf, send_sem,
+                       recv_sem, *, tp: int, axis_name: str):
+    my_id = jax.lax.axis_index(axis_name)
+    right = jax.lax.rem(my_id + 1, tp)
+    left = jax.lax.rem(my_id - 1 + tp, tp)
+
+    # Neighbour barrier: nobody starts pushing into a buffer its neighbour
+    # is still initialising (guide: Local Barrier Between Neighbors).
+    barrier = pltpu.get_barrier_semaphore()
+    pltpu.semaphore_signal(barrier, inc=1, device_id=left)
+    pltpu.semaphore_signal(barrier, inc=1, device_id=right)
+    pltpu.semaphore_wait(barrier, 2)
+
+    comm_buf[0] = x_ref[...]
+    gather_buf[pl.dslice(my_id, 1)] = x_ref[...][None].astype(jnp.float32)
+
+    for step in range(tp - 1):
+        send_slot = step % 2
+        recv_slot = (step + 1) % 2
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=comm_buf.at[send_slot],
+            dst_ref=comm_buf.at[recv_slot],
+            send_sem=send_sem.at[send_slot],
+            recv_sem=recv_sem.at[recv_slot],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+        rdma.wait()
+        # After `step + 1` hops we hold the chunk that originated at
+        # (my_id - step - 1) % tp; land it in the by-source buffer so the
+        # final sum can run in source order on every shard.
+        src = jax.lax.rem(my_id - step - 1 + tp, tp)
+        gather_buf[pl.dslice(src, 1)] = (
+            comm_buf[recv_slot][None].astype(jnp.float32)
+        )
+
+    acc = gather_buf[0]
+    for j in range(1, tp):  # fixed left-to-right association (see overlap.py)
+        acc = acc + gather_buf[j]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _ring_chunk_remote(c, axis_name: str, tp: int):
+    """One chunk of the remote-DMA ring: pad flat chunk to (rows, 128)."""
+    n = c.shape[0]
+    pad = (-n) % _LANE
+    cp = jnp.pad(c, (0, pad)).reshape(-1, _LANE)
+    rows = cp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_ring_chunk_kernel, tp=tp, axis_name=axis_name),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANE), c.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, rows, _LANE), c.dtype),       # comm_buf
+            pltpu.VMEM((tp, rows, _LANE), jnp.float32),  # gather_buf
+            pltpu.SemaphoreType.DMA((2,)),               # send_sem
+            pltpu.SemaphoreType.DMA((2,)),               # recv_sem
+        ],
+        compiler_params=pltpu.CompilerParams(
+            has_side_effects=True, collective_id=7
+        ),
+    )(cp)
+    return out.reshape(-1)[:n]
+
+
+def ring_all_reduce_remote(x, axis_name: str, *, chunks: int = 4):
+    """Chunked AllReduce over ``axis_name`` via async remote-copy DMA.
+
+    Same chunk schedule and source-ordered summation as
+    ``overlap.ring_all_reduce`` — the two are interchangeable; dispatch
+    (TPU backend only) happens in the caller.
+    """
+    from repro.parallel.overlap import _static_axis_size, chunk_bounds
+
+    tp = _static_axis_size(axis_name)
+    if tp == 1:
+        return x
+    flat = x.reshape(-1)
+    pieces = [
+        _ring_chunk_remote(flat[start:start + size], axis_name, tp)
+        for start, size in chunk_bounds(flat.shape[0], chunks)
+    ]
+    return jnp.concatenate(pieces).reshape(x.shape)

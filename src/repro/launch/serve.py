@@ -60,6 +60,22 @@ def main():
                          "itself engages only under --oversubscribe > 1 "
                          "(without it every reservation is physically "
                          "backed and the pool can never run dry)")
+    ap.add_argument("--comm-overlap", action="store_true",
+                    help="paged engine: run the TP block-output AllReduce "
+                         "as a chunked overlapped ring (Pallas remote-copy "
+                         "on TPU, ppermute elsewhere) instead of one "
+                         "synchronous psum; token streams are "
+                         "bit-identical at TP<=2 (parallel/overlap.py, "
+                         "DESIGN.md §Communication overlap)")
+    ap.add_argument("--comm-quant", action="store_true",
+                    help="paged engine: int8-compress the TP AllReduce "
+                         "wire (quantize -> ring-reduce -> dequantize, "
+                         "~2x fewer bytes); bounded activation error, NOT "
+                         "bit-identical to the fp psum.  Implies the ring "
+                         "(wins over --comm-overlap)")
+    ap.add_argument("--comm-chunks", type=int, default=4,
+                    help="ring chunk count for --comm-overlap/--comm-quant "
+                         "(chunk i's hops pipeline under chunk i+1)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="run attention through the Pallas kernels: the "
                          "paged engine reads the KV pool with the "
@@ -128,9 +144,11 @@ def main():
     if args.spec_decode != "off" and kind == "ragged":
         raise SystemExit("--spec-decode requires the paged engine")
     if kind == "ragged" and (args.kv_quant != "fp" or
-                             args.oversubscribe != 1.0 or args.swap_blocks):
-        raise SystemExit("--kv-quant/--oversubscribe/--swap-blocks require "
-                         "the paged engine")
+                             args.oversubscribe != 1.0 or args.swap_blocks or
+                             args.comm_overlap or args.comm_quant):
+        raise SystemExit("--kv-quant/--oversubscribe/--swap-blocks/"
+                         "--comm-overlap/--comm-quant require the paged "
+                         "engine")
     if kind != "ragged":
         try:
             paged_kw = dict(
@@ -139,7 +157,9 @@ def main():
                 num_blocks=args.num_blocks or None,
                 max_prefill_tokens=args.prefill_budget,
                 kv_quant=args.kv_quant, oversubscribe=args.oversubscribe,
-                swap_blocks=args.swap_blocks)
+                swap_blocks=args.swap_blocks,
+                comm_overlap=args.comm_overlap, comm_quant=args.comm_quant,
+                comm_chunks=args.comm_chunks)
             if args.spec_decode != "off":
                 from repro.serving.speculative import (
                     SpeculativePagedEngine, derive_draft_cfg)
@@ -160,9 +180,9 @@ def main():
         except NotImplementedError as e:
             if args.engine == "paged" or args.spec_decode != "off" or \
                     args.kv_quant != "fp" or args.oversubscribe != 1.0 or \
-                    args.swap_blocks:
-                # memory-tier flags exist only on the paged path: error
-                # instead of silently serving without them
+                    args.swap_blocks or args.comm_overlap or args.comm_quant:
+                # memory-tier/comm flags exist only on the paged path:
+                # error instead of silently serving without them
                 raise
             print(f"[serve] paged engine unavailable ({e}); using ragged")
     if engine is None:
@@ -204,9 +224,11 @@ def main():
     # fallback run must not be labelled as if the kernel served it
     pallas_tag = "+pallas" if args.use_pallas and kind.startswith("paged") \
         else ""
+    comm_tag = ("+comm:int8" if args.comm_quant else
+                "+comm:overlap" if args.comm_overlap else "")
     print(f"[serve] {len(finished)}/{len(trace)} requests, {n_tok} tokens "
           f"in {wall:.2f}s ({n_tok / max(wall, 1e-9):.1f} tok/s) "
-          f"engine={kind}{pallas_tag} "
+          f"engine={kind}{pallas_tag}{comm_tag} "
           f"slots={args.slots} tp={args.tp} dp={args.dp}")
     if kind.startswith("paged"):
         st = engine.stats()

@@ -5,21 +5,31 @@ axis names.  When an axis is ``None`` (running outside ``shard_map``, e.g. in
 single-device tests) every collective degrades to the identity, so the same
 model function runs unchanged on one device and on a 512-chip mesh.
 
-This module is also where the paper's mechanism lives operationally: the
-``reduce_block_output`` family is the AllReduce that the Ladder topology
-de-couples from the critical path.  On TPU, XLA's latency-hiding scheduler
-lowers these ``psum``s to async ``all-reduce-start``/``all-reduce-done`` pairs
-and sinks the ``done`` to the consumer — the JAX analogue of the paper's
-``AsyncAllReduce`` handle (DESIGN.md §Hardware-adaptation).
+This module is also where the paper's mechanism lives operationally:
+:meth:`AxisEnv.reduce_block_output` is the AllReduce that the Ladder
+topology de-couples from the critical path, and :meth:`AxisEnv.psum_model`
+is its one documented dispatch point.  ``mode="sync"`` leaves overlap to
+XLA's latency-hiding scheduler (async ``all-reduce-start``/``done`` pairs —
+the JAX analogue of the paper's ``AsyncAllReduce`` handle); ``overlap`` and
+``compressed`` switch to the explicit chunked ring collectives in
+:mod:`repro.parallel.overlap` (DESIGN.md §Communication overlap).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.parallel.overlap import (  # noqa: F401  (re-exported seam types)
+    COMM_MODES,
+    SYNC,
+    CommConfig,
+    compressed_ring_all_reduce,
+    ring_all_reduce,
+)
 
 
 def _axis_size(name) -> int:
@@ -39,6 +49,7 @@ class AxisEnv:
     data: Optional[str] = None    # data-parallel axis
     pod: Optional[str] = None     # pod axis (extra DP or pipeline stages)
     sp: bool = False              # Megatron-style sequence parallelism on/off
+    comm: CommConfig = field(default_factory=CommConfig)  # AllReduce mode
 
     @property
     def tp(self) -> int:
@@ -60,9 +71,42 @@ class AxisEnv:
 
     # ---- collectives over the tensor-parallel axis ------------------------
     def psum_model(self, x):
-        """AllReduce over TP shards — THE collective the ladder topology
-        overlaps; identity when unsharded."""
-        return jax.lax.psum(x, self.model) if self.model else x
+        """AllReduce over TP shards — THE comm seam, and its one dispatch
+        point (satellite fix for the old silent per-call-site branching).
+
+        Modes (``self.comm.mode``):
+
+        ``sync``
+            one ``jax.lax.psum``; overlap is left to XLA's scheduler.
+        ``overlap``
+            chunked ppermute/DMA ring (:func:`repro.parallel.overlap.
+            ring_all_reduce`) — bit-equal to sync at tp=2, within rounding
+            above; chunk ``i``'s hops pipeline under chunk ``i+1``.
+        ``compressed``
+            int8-on-wire ring — ~2x fewer wire bytes, bounded error
+            (callers opt in; NOT bit-identical to sync).
+
+        Unsharded (``self.model`` falsy) is the *documented* degenerate
+        path: every mode is the identity, because the single-shard sum is
+        the shard value itself.  An invalid mode raises here — even
+        unsharded — rather than falling through to sync; ``CommConfig``
+        validates at construction, and this guards hand-rolled configs
+        (tests poke one in with ``object.__setattr__``).
+        """
+        mode = self.comm.mode
+        if mode not in COMM_MODES:
+            raise ValueError(
+                f"invalid comm mode {mode!r}; expected one of {COMM_MODES}"
+            )
+        if not self.model:
+            return x
+        if mode == "overlap":
+            return ring_all_reduce(x, self.model, chunks=self.comm.chunks)
+        if mode == "compressed":
+            return compressed_ring_all_reduce(
+                x, self.model, chunks=self.comm.chunks
+            )
+        return jax.lax.psum(x, self.model)
 
     def pmax_model(self, x):
         """Differentiation-safe max over the model axis (pmax lacks a JVP
@@ -154,8 +198,19 @@ class AxisEnv:
         return x
 
     def sp_reduce(self, x, seq_axis: int = 1):
-        """SP block exit: reduce-scatter back to (B, S/tp, D) — plays the
-        AllReduce's role in the ladder schedule; plain psum with SP off."""
+        """SP block exit reduction (alias of :meth:`reduce_block_output`,
+        kept for callers that read better with the SP name)."""
+        return self.reduce_block_output(x, seq_axis=seq_axis)
+
+    def reduce_block_output(self, x, seq_axis: int = 1):
+        """Sub-block exit reduction — the single call site for
+        core/residual.py (no per-site ``env.sp`` branching).
+
+        SP on: reduce-scatter back to (B, S/tp, D); stays synchronous by
+        design — the scattered slice is this shard's own residual segment
+        and is consumed immediately, so there is nothing to overlap.
+        SP off: :meth:`psum_model`, i.e. the sync/overlap/compressed
+        dispatch."""
         if self.sp and self.model:
             return jax.lax.psum_scatter(x, self.model,
                                         scatter_dimension=seq_axis, tiled=True)

@@ -1,0 +1,260 @@
+"""Overlapped TP all-reduce: chunked ring collectives for the serving path.
+
+The ladder residual exists to hide tensor-parallel communication, but a
+monolithic ``jax.lax.psum`` leaves overlap entirely to XLA's scheduler.
+This module provides the explicit alternative: the block-output AllReduce
+is split into ``chunks`` independent ring reductions so chunk ``i``'s wire
+time can hide under chunk ``i+1``'s compute (and, under the ladder
+schedule, under the *next sub-block's* matmuls — see DESIGN.md
+§Communication overlap).  Two wire formats:
+
+``ring_all_reduce``
+    full-precision chunked ring built on ``jax.lax.ppermute`` (the
+    portable fallback; on TPU the Pallas async-remote-copy kernel in
+    ``repro.kernels.comm`` implements the same schedule with explicit
+    double-buffered DMA).
+
+``compressed_ring_all_reduce``
+    int8-on-wire variant (Flash-Communication style): each shard
+    quantizes its local partial with :func:`repro.quant.quantize_int8`,
+    the ring moves ``(q, scale)`` pairs (~2x fewer bytes than bf16), and
+    every shard dequantizes and sums the images.  Bounded error, not
+    bit-identical to the fp psum — see the error-bound property tests.
+
+Determinism contract (load-bearing for the serving engines): every shard
+sums the per-source contributions **in source-shard order** with the same
+left-to-right association, so the result is bit-identical across shards at
+any tp.  At tp=2 the sum is a single commutative IEEE add, hence bit-equal
+to ``jax.lax.psum`` itself — which is what makes engine token streams
+identical with overlap on vs off in the TP=2 tests.
+
+``simulate_ring_all_reduce`` / ``simulate_compressed_all_reduce`` run the
+same chunk schedule and summation order on a host-side ``(tp, ...)`` stack
+of shard values; they are the fast-tier oracle (tests/test_collectives.py)
+for the device path exercised under shard_map in the distributed suite.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import dequantize_int8, quantize_int8
+
+#: Valid values for :attr:`CommConfig.mode`, in dispatch order.
+COMM_MODES = ("sync", "overlap", "compressed")
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """How the block-output AllReduce executes (``AxisEnv.psum_model``).
+
+    Frozen + hashable on purpose: an :class:`~repro.parallel.collectives.
+    AxisEnv` carrying it is closed over by jit'ed step functions.
+
+    mode
+        ``sync``        one ``jax.lax.psum`` (XLA schedules any overlap)
+        ``overlap``     chunked ppermute/DMA ring (:func:`ring_all_reduce`)
+        ``compressed``  int8-on-wire ring (:func:`compressed_ring_all_reduce`)
+    chunks
+        ring chunk count; clamped to the element count per call site.
+    """
+
+    mode: str = "sync"
+    chunks: int = 4
+
+    def __post_init__(self):
+        if self.mode not in COMM_MODES:
+            raise ValueError(
+                f"invalid comm mode {self.mode!r}; expected one of {COMM_MODES}"
+            )
+        if self.chunks < 1:
+            raise ValueError(f"comm chunks must be >= 1, got {self.chunks}")
+
+
+#: Default configuration: the pre-existing synchronous psum behaviour.
+SYNC = CommConfig()
+
+
+def _static_axis_size(name) -> int:
+    """Mesh-axis size as a *python int* (chunk loops are unrolled over it)."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(name))
+    return int(jax.lax.psum(1, name))  # constant-folds on legacy jax
+
+
+def chunk_bounds(n: int, chunks: int) -> list:
+    """Static ``(start, size)`` spans splitting ``n`` elements into at most
+    ``chunks`` near-equal pieces.
+
+    The last chunk is ragged (possibly smaller), never empty; ``chunks`` is
+    clamped to ``n`` so tiny activations degrade to fewer, non-empty chunks.
+    """
+    if n <= 0:
+        return []
+    chunks = max(1, min(chunks, n))
+    size = -(-n // chunks)  # ceil
+    return [(s, min(size, n - s)) for s in range(0, n, size)]
+
+
+def _ring_contributions(c, axis_name, tp):
+    """``(tp, *c.shape)`` stack of every shard's copy of this chunk, ordered
+    by **source shard index** — identical ordering on every shard.
+
+    Rotation ``s`` of the one-step ring permutation ``i -> (i+1) % tp``
+    leaves shard ``i`` holding source ``(i - s) % tp``, so source ``j``
+    lives at step ``(i - j) % tp``; the take() below inverts that.  The
+    ``tp`` chunks' ppermute chains are independent, which is what lets XLA
+    pipeline chunk ``k+1``'s hops under chunk ``k``'s consumer.
+    """
+    perm = [(i, (i + 1) % tp) for i in range(tp)]
+    steps = [c]
+    rot = c
+    for _ in range(tp - 1):
+        rot = jax.lax.ppermute(rot, axis_name, perm)
+        steps.append(rot)
+    by_step = jnp.stack(steps)
+    idx = jax.lax.axis_index(axis_name)
+    src_step = jnp.mod(idx - jnp.arange(tp), tp)
+    return jnp.take(by_step, src_step, axis=0)
+
+
+def _ordered_sum(contribs):
+    """Left-to-right sum over the leading (source) axis — one fixed
+    association so every shard (and the host simulator) rounds identically."""
+    acc = contribs[0]
+    for j in range(1, contribs.shape[0]):
+        acc = acc + contribs[j]
+    return acc
+
+
+def ring_all_reduce(x, axis_name, *, chunks: int = 4):
+    """Chunked ring AllReduce over ``axis_name`` (ppermute fallback path).
+
+    Bit-identical across shards (source-ordered summation); bit-equal to
+    ``jax.lax.psum`` at tp=2, within rounding at tp>2.  tp=1 is the
+    documented degenerate path: returns ``x`` unchanged.
+
+    On a TPU backend the same schedule runs as explicit double-buffered
+    async remote-copy DMA (repro.kernels.comm); remote DMA has no
+    cross-device interpret mode, so everywhere else uses the ppermute
+    chain below.
+    """
+    tp = _static_axis_size(axis_name)
+    if tp == 1:
+        return x
+    if jax.default_backend() == "tpu":
+        from repro.kernels import comm as comm_kernels
+
+        return comm_kernels.ring_all_reduce_remote(x, axis_name, chunks=chunks)
+    flat = x.reshape(-1)
+    pieces = []
+    for start, size in chunk_bounds(flat.shape[0], chunks):
+        c = flat[start:start + size]
+        pieces.append(_ordered_sum(_ring_contributions(c, axis_name, tp)))
+    return jnp.concatenate(pieces).reshape(x.shape)
+
+
+def _dequant_add(acc, q, scale, size):
+    """acc + dequantized first ``size`` elements of ``(q, scale)``.
+
+    On TPU this is the fused Pallas masked dequant-accumulate kernel
+    (repro.kernels.comm) — the mask keeps the quant-block pad tail out of
+    the sum; elsewhere plain jnp (dequantize_int8 slices the pad off)."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels import comm as comm_kernels
+
+        return comm_kernels.dequant_accumulate(acc, q, scale, size)
+    return acc + dequantize_int8(q, scale, (size,))
+
+
+def compressed_ring_all_reduce(x, axis_name, *, chunks: int = 4):
+    """int8-on-wire chunked ring AllReduce (quantize -> reduce -> dequantize).
+
+    Each shard quantizes its local partial per chunk (256-element blocks,
+    :func:`repro.quant.quantize_int8`), the ring rotates ``(q, scale)``
+    pairs, and every shard dequantizes **all tp images — including its own
+    quantized image** — and sums them in source order in f32.  Using the
+    own *quantized* image (not the raw local value) keeps every shard's
+    inputs bitwise identical, hence cross-shard bit-identity.
+
+    Wire bytes ~ (1 + 4/256)/2 of the bf16 ring.  Per-element error is
+    bounded by ``sum_j scale_j(block) / 2`` (each source contributes at
+    most half a quant step); see tests/test_property.py.  NOT bit-identical
+    to the fp psum — callers opt in per DESIGN.md §Communication overlap.
+    """
+    tp = _static_axis_size(axis_name)
+    if tp == 1:
+        return x  # degenerate: no wire traffic, no quantization error
+    orig_dtype = x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    pieces = []
+    for start, size in chunk_bounds(flat.shape[0], chunks):
+        q, scale = quantize_int8(flat[start:start + size])
+        qs = _ring_contributions(q, axis_name, tp)
+        ss = _ring_contributions(scale, axis_name, tp)
+        acc = jnp.zeros((size,), jnp.float32)
+        for j in range(tp):
+            acc = _dequant_add(acc, qs[j], ss[j], size)
+        pieces.append(acc)
+    return jnp.concatenate(pieces).reshape(x.shape).astype(orig_dtype)
+
+
+# ---- host-side simulators (fast-tier oracles) -----------------------------
+
+def _simulated_contributions(flat, i, start, size, tp):
+    """Mirror of :func:`_ring_contributions` for shard ``i`` on a host-side
+    ``(tp, n)`` stack: build the by-step buffer the ring would hold, then
+    apply the same source-order take()."""
+    by_step = jnp.stack(
+        [flat[(i - s) % tp, start:start + size] for s in range(tp)]
+    )
+    src_step = jnp.mod(i - jnp.arange(tp), tp)
+    return jnp.take(by_step, src_step, axis=0)
+
+
+def simulate_ring_all_reduce(shards, *, chunks: int = 4):
+    """Run :func:`ring_all_reduce`'s exact chunk schedule and summation
+    order on a stacked ``(tp, ...)`` host array; returns the per-shard
+    results stacked the same way (all rows bit-identical by construction)."""
+    shards = jnp.asarray(shards)
+    tp = shards.shape[0]
+    flat = shards.reshape(tp, -1)
+    outs = []
+    for i in range(tp):
+        pieces = []
+        for start, size in chunk_bounds(flat.shape[1], chunks):
+            contribs = _simulated_contributions(flat, i, start, size, tp)
+            pieces.append(_ordered_sum(contribs))
+        outs.append(jnp.concatenate(pieces))
+    return jnp.stack(outs).reshape(shards.shape)
+
+
+def simulate_compressed_all_reduce(shards, *, chunks: int = 4):
+    """Host-side mirror of :func:`compressed_ring_all_reduce` over a
+    ``(tp, ...)`` stack of shard values."""
+    shards = jnp.asarray(shards)
+    tp = shards.shape[0]
+    orig_dtype = shards.dtype
+    flat = shards.astype(jnp.float32).reshape(tp, -1)
+    n = flat.shape[1]
+    quants = {}
+    for start, size in chunk_bounds(n, chunks):
+        quants[start] = [quantize_int8(flat[j, start:start + size])
+                         for j in range(tp)]
+    outs = []
+    for i in range(tp):
+        pieces = []
+        for start, size in chunk_bounds(n, chunks):
+            q_stack = jnp.stack([quants[start][j][0] for j in range(tp)])
+            s_stack = jnp.stack([quants[start][j][1] for j in range(tp)])
+            qs = _simulated_contributions(q_stack, i, 0, q_stack.shape[1], tp)
+            ss = _simulated_contributions(s_stack, i, 0, s_stack.shape[1], tp)
+            acc = jnp.zeros((size,), jnp.float32)
+            for j in range(tp):
+                acc = acc + dequantize_int8(qs[j], ss[j], (size,))
+            pieces.append(acc)
+        outs.append(jnp.concatenate(pieces))
+    return jnp.stack(outs).reshape(shards.shape).astype(orig_dtype)

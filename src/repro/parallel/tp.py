@@ -30,18 +30,21 @@ from repro.configs.base import (ModelConfig, ParallelConfig, ResidualMode,
 from repro.models import transformer as tfm
 from repro.models.layers import sharded_cross_entropy
 from repro.parallel import sharding
-from repro.parallel.collectives import AxisEnv
+from repro.parallel.collectives import AxisEnv, CommConfig
 from repro.training import optimizer as opt
 
 
-def make_axis_env(pcfg: ParallelConfig) -> AxisEnv:
+def make_axis_env(pcfg: ParallelConfig,
+                  comm: Optional[CommConfig] = None) -> AxisEnv:
     """AxisEnv naming only the mesh axes `pcfg` actually uses (absent
-    axes stay None so collectives degrade to identity)."""
+    axes stay None so collectives degrade to identity).  `comm` selects
+    the block-output AllReduce implementation (default: sync psum)."""
     return AxisEnv(
         model="model" if pcfg.tp > 1 else None,
         data="data" if pcfg.dp > 1 else None,
         pod="pod" if (pcfg.pods > 1 or pcfg.pp > 1) else None,
-        sp=pcfg.use_sp)
+        sp=pcfg.use_sp,
+        comm=comm if comm is not None else CommConfig())
 
 
 def _dp_axes_present(pcfg: ParallelConfig):

@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import transformer as tfm
 from repro.parallel import sharding
+from repro.parallel.collectives import CommConfig
 from repro.parallel.tp import make_axis_env
 from repro.serving import kv_cache as kvc
 from repro.serving import sampler
@@ -352,7 +353,8 @@ def build_continuous_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
 
 def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
                       batch_slots: int, rng_seed: int = 0,
-                      use_pallas: Optional[bool] = None):
+                      use_pallas: Optional[bool] = None,
+                      comm: Optional[CommConfig] = None):
     """Steps for the paged-KV serving engine (block-pool caches; see
     serving/scheduler.PagedScheduler for the host-side block management).
 
@@ -361,6 +363,13 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
     (kernels/paged_attention.py), False forces the paged_view gather
     oracle, None keeps the config's setting.  Token streams are
     bit-identical either way (tests/test_paged_kernel.py).
+
+    comm: how the TP block-output AllReduce executes inside these steps
+    (parallel/overlap.py) — None/sync keeps the monolithic psum, "overlap"
+    the chunked ring (token streams bit-identical at TP<=2; distributed
+    suite group `serve_comm`), "compressed" the int8 wire (bounded error,
+    opt-in).  Prefill, decode and verify all thread through the same
+    AxisEnv, so one setting covers the three paths.
 
     Block tables: every step takes a ``bt``/``bts`` table of shape
     (rows, W) where W is ANY width covering every block the step's rows
@@ -405,7 +414,7 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
     """
     if use_pallas is not None and use_pallas != cfg.use_pallas:
         cfg = cfg.replace(use_pallas=use_pallas)
-    env = make_axis_env(pcfg)
+    env = make_axis_env(pcfg, comm=comm)
     pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
     base_key = jax.random.key(rng_seed)
 

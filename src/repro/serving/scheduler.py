@@ -773,7 +773,9 @@ class PagedServingEngine(_ServingEngineBase):
                  rng_seed: int = 0, max_prefill_tokens: int = 128,
                  prefill_bucket_min: int = 16, prefix_caching: bool = True,
                  use_pallas: Optional[bool] = None, kv_quant: str = "fp",
-                 oversubscribe: float = 1.0, swap_blocks: int = 0):
+                 oversubscribe: float = 1.0, swap_blocks: int = 0,
+                 comm_overlap: bool = False, comm_quant: bool = False,
+                 comm_chunks: int = 4):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -839,10 +841,19 @@ class PagedServingEngine(_ServingEngineBase):
                 eos_id=eos_id, max_prefill_tokens=max_prefill_tokens)
             self.swap = None
 
+        # TP comm mode for the jitted steps (parallel/overlap.py):
+        # --comm-quant implies the ring (the int8 wire IS a ring format),
+        # so it wins over plain --comm-overlap.
+        from repro.parallel.collectives import CommConfig
+        self.comm = CommConfig(
+            mode=("compressed" if comm_quant
+                  else "overlap" if comm_overlap else "sync"),
+            chunks=comm_chunks)
         steps = engine_mod.build_paged_steps(cfg, pcfg,
                                              batch_slots=batch_slots,
                                              rng_seed=rng_seed,
-                                             use_pallas=use_pallas)
+                                             use_pallas=use_pallas,
+                                             comm=self.comm)
         self.caches, cache_specs = engine_mod.build_caches(
             cfg, batch_slots, s_max, pcfg, for_decode=False, paged=True,
             num_blocks=self.num_blocks, block_size=block_size,

@@ -580,13 +580,158 @@ def serve_memory_tp():
         check(f"serve_memory tp2 spec rid={rid}", toks == spec_got[rid])
 
 
+def serve_comm_tp():
+    """Overlapped TP AllReduce on a real TP=2 mesh — the comm-correctness
+    gate of DESIGN.md §Communication overlap, two levels:
+
+    collective level: the chunked ppermute ring must be bit-equal to
+    ``jax.lax.psum`` at tp=2 (one commutative IEEE add) and to its
+    host-side simulator; the int8 ring must match ITS simulator bit-exactly
+    and stay within the analytic quantization bound of the fp sum.
+
+    engine level: for every residual mode (standard / ladder / desync2) a
+    ``PagedServingEngine`` with ``comm_overlap=True`` must stream
+    bit-identical tokens to the same engine with overlap off — greedy and
+    seeded-sampled requests, fp and int8 KV pools, plain and speculative
+    engines; ladder additionally against the TP=1 iso oracle."""
+    from repro.parallel.overlap import (chunk_bounds,
+                                        compressed_ring_all_reduce,
+                                        ring_all_reduce,
+                                        simulate_compressed_all_reduce,
+                                        simulate_ring_all_reduce)
+    from repro.quant import BLOCK, quantize_int8
+    from repro.serving.scheduler import (ContinuousServingEngine,
+                                         PagedServingEngine, Request,
+                                         SamplingParams)
+    from repro.serving.speculative import SpeculativePagedEngine
+
+    # ---- collective level -------------------------------------------------
+    mesh2 = compat.make_mesh((2,), ("model",))
+    rng = np.random.default_rng(0)
+    shards = jnp.asarray(rng.normal(size=(2, 3, 7, 33)), jnp.float32)
+    for chunks in (1, 3, 5):
+        def ring(v, c=chunks):
+            return ring_all_reduce(v, "model", chunks=c)
+
+        def cring(v, c=chunks):
+            return compressed_ring_all_reduce(v, "model", chunks=c)
+
+        def psum(v):
+            return jax.lax.psum(v, "model")
+
+        with compat.set_mesh(mesh2):
+            got_ring = jax.jit(compat.shard_map(
+                ring, mesh2, P("model"), P("model")))(shards)
+            got_psum = jax.jit(compat.shard_map(
+                psum, mesh2, P("model"), P("model")))(shards)
+            got_c = jax.jit(compat.shard_map(
+                cring, mesh2, P("model"), P("model")))(shards)
+        check(f"serve_comm ring==psum tp2 chunks={chunks}",
+              np.array_equal(np.asarray(got_ring), np.asarray(got_psum)))
+        check(f"serve_comm ring==simulator chunks={chunks}",
+              np.array_equal(np.asarray(got_ring), np.asarray(
+                  simulate_ring_all_reduce(shards, chunks=chunks))))
+        # compressed: cross-shard bit-identity is the contract; vs the
+        # eager host simulator allow <=1-ulp FMA slack (jit may fuse the
+        # dequant multiply+add into one rounding, the simulator rounds
+        # twice — same reason tests/test_collectives.py uses allclose)
+        check(f"serve_comm compressed shard-identical chunks={chunks}",
+              np.array_equal(np.asarray(got_c)[0], np.asarray(got_c)[1]))
+        sim_c = np.asarray(simulate_compressed_all_reduce(shards,
+                                                          chunks=chunks))
+        check(f"serve_comm compressed~=simulator chunks={chunks}",
+              bool(np.allclose(np.asarray(got_c), sim_c, rtol=1e-6,
+                               atol=1e-6)))
+        flat = np.asarray(shards.reshape(2, -1))
+        bound = np.zeros(flat.shape[1])
+        for start, size in chunk_bounds(flat.shape[1], chunks):
+            for j in range(2):
+                _, s = quantize_int8(jnp.asarray(flat[j, start:start + size]))
+                bound[start:start + size] += \
+                    0.5 * np.asarray(jnp.repeat(s, BLOCK)[:size])
+        err = np.abs(np.asarray(got_c[0]).reshape(-1) - flat.sum(0))
+        check(f"serve_comm compressed bounded chunks={chunks}",
+              bool(np.all(err <= bound + 1e-6)))
+
+    # ---- engine level -----------------------------------------------------
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, 16).tolist()
+
+    def make_reqs(vocab):
+        return [Request(rid=i,
+                        prompt=(shared if i != 1 else []) +
+                        rng.integers(0, vocab, lp).tolist(),
+                        max_new_tokens=g, sampling=s)
+                for i, (lp, g, s) in enumerate([
+                    (5, 6, SamplingParams()),
+                    (11, 4, SamplingParams(temperature=0.7, top_k=12,
+                                           seed=3)),
+                    (7, 5, SamplingParams(temperature=1.0, top_p=0.9,
+                                          seed=8))])]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+
+    def run(engine, reqs):
+        for r in reqs:
+            engine.submit(clone(r))
+        return {rid: f.tokens for rid, f in engine.run().items()}
+
+    pcfg = ParallelConfig(tp=2, dp=1)
+    for mode in ("standard", "ladder", "desync2"):
+        cfg = _cfg("stablelm-3b", mode, d_model=64, n_heads=4, d_ff=128,
+                   vocab_size=256)
+        params = tfm.init_params(cfg, jax.random.key(0))
+        reqs = make_reqs(cfg.vocab_size)
+        p2, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
+        kw = dict(batch_slots=2, s_max=48, block_size=8,
+                  max_prefill_tokens=16, pcfg=pcfg, mesh=mesh2)
+
+        for kv_quant in ("fp", "int8"):
+            off = run(PagedServingEngine(cfg, p2, kv_quant=kv_quant, **kw),
+                      reqs)
+            on = run(PagedServingEngine(cfg, p2, kv_quant=kv_quant,
+                                        comm_overlap=True, **kw), reqs)
+            for rid, toks in off.items():
+                check(f"serve_comm {mode} {kv_quant} rid={rid}",
+                      toks == on[rid])
+
+        if mode == "ladder":
+            # overlap-on TP=2 against the TP=1 iso oracle as well: the
+            # ring must not just be self-consistent but *correct*
+            iso = {}
+            for r in reqs:
+                e = ContinuousServingEngine(cfg, params, batch_slots=1,
+                                            s_max=48)
+                e.submit(clone(r))
+                iso[r.rid] = e.run()[r.rid].tokens
+            on = run(PagedServingEngine(cfg, p2, comm_overlap=True, **kw),
+                     reqs)
+            for rid, toks in iso.items():
+                check(f"serve_comm ladder vs-iso rid={rid}",
+                      toks == on[rid])
+
+        spec_off = SpeculativePagedEngine(cfg, p2, spec_mode="ngram",
+                                          spec_k=3, **kw)
+        got_off = run(spec_off, reqs)
+        spec_on = SpeculativePagedEngine(cfg, p2, spec_mode="ngram",
+                                         spec_k=3, comm_overlap=True, **kw)
+        got_on = run(spec_on, reqs)
+        check(f"serve_comm {mode} spec verified",
+              spec_on.stats()["verify_forwards"] > 0)
+        for rid, toks in got_off.items():
+            check(f"serve_comm {mode} spec rid={rid}", toks == got_on[rid])
+
+
 CHECKS = dict(tp=tp_equivalence, fsdp=fsdp_equivalence,
               zero1=zero1_equivalence, sp=sp_equivalence,
               padded=padded_heads, flashdec=flash_decode_seq_sharded,
               pp=pipeline_parity, compress=grad_compression,
               q8=q8_weight_gather, serve_cb=serve_continuous_batching,
               serve_paged=serve_paged_tp, serve_spec=serve_spec_tp,
-              serve_kernel=serve_kernel_tp, serve_memory=serve_memory_tp)
+              serve_kernel=serve_kernel_tp, serve_memory=serve_memory_tp,
+              serve_comm=serve_comm_tp)
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"

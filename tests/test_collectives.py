@@ -1,0 +1,264 @@
+"""Fast-tier comm-correctness harness for the overlapped TP AllReduce.
+
+The device ring runs under shard_map in tests/distributed_impl.py
+(``serve_comm`` group); this file pins everything that does not need a
+multi-device mesh:
+
+* the ``CommConfig`` / ``AxisEnv.psum_model`` dispatch seam (validation,
+  raise-on-invalid — including the previously-silent unsharded path),
+* the chunk schedule (``chunk_bounds`` cover/no-overlap/ragged/clamp),
+* the host-side simulators as oracle: ring == psum across chunk counts x
+  dtypes x ragged shapes x tp, with cross-shard bit-identity,
+* the compressed ring's quantization error bound,
+* the Pallas masked dequant-accumulate kernel in interpret mode
+  (poisoned-pad-tail isolation, chunk-boundary off-by-ones).
+
+``dequant_accumulate`` comparisons use tight allclose, NOT bit-equality:
+when the valid-mask constant-folds to all-true XLA may fuse the
+multiply+add into an FMA (one rounding instead of two), a <=1-ulp
+difference vs the unfused reference.  Cross-shard identity is unaffected
+because every shard runs the same fused program.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.comm import dequant_accumulate
+from repro.parallel import compat
+from repro.parallel.collectives import NULL_ENV, AxisEnv
+from repro.parallel.overlap import (
+    COMM_MODES,
+    SYNC,
+    CommConfig,
+    chunk_bounds,
+    compressed_ring_all_reduce,
+    ring_all_reduce,
+    simulate_compressed_all_reduce,
+    simulate_ring_all_reduce,
+)
+from repro.quant import BLOCK, dequantize_int8, quantize_int8
+
+
+# ---- CommConfig / dispatch seam -------------------------------------------
+
+def test_comm_config_defaults_to_sync():
+    assert SYNC.mode == "sync" and CommConfig().mode == "sync"
+    assert "sync" in COMM_MODES and len(COMM_MODES) == 3
+
+
+@pytest.mark.parametrize("bad", ["", "async", "SYNC", "ring"])
+def test_comm_config_rejects_invalid_mode(bad):
+    with pytest.raises(ValueError, match="invalid comm mode"):
+        CommConfig(mode=bad)
+
+
+@pytest.mark.parametrize("chunks", [0, -1])
+def test_comm_config_rejects_invalid_chunks(chunks):
+    with pytest.raises(ValueError, match="chunks"):
+        CommConfig(chunks=chunks)
+
+
+def test_psum_model_raises_on_invalid_mode_even_unsharded():
+    """The satellite fix: an env with a bogus mode must raise at the one
+    dispatch point instead of silently falling through to sync — even on
+    the unsharded (model=None) degenerate path, where the old code
+    returned x before ever looking at the mode."""
+    env = AxisEnv()  # unsharded
+    object.__setattr__(env.comm, "mode", "bogus")  # bypass __post_init__
+    with pytest.raises(ValueError, match="invalid comm mode 'bogus'"):
+        env.psum_model(jnp.ones((3,)))
+
+
+@pytest.mark.parametrize("mode", COMM_MODES)
+def test_psum_model_identity_unsharded(mode):
+    """model=None => every valid mode is exactly the identity."""
+    env = AxisEnv(comm=CommConfig(mode=mode))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 5)), jnp.float32)
+    np.testing.assert_array_equal(env.psum_model(x), x)
+
+
+@pytest.mark.parametrize("mode", COMM_MODES)
+def test_reduce_block_output_unsharded_dispatch(mode):
+    """reduce_block_output is residual.py's single call site; unsharded it
+    must be the identity for every mode (SP off and on — SP needs a model
+    axis to do anything)."""
+    x = jnp.ones((1, 4, 8))
+    for sp in (False, True):
+        env = AxisEnv(sp=sp, comm=CommConfig(mode=mode))
+        np.testing.assert_array_equal(env.reduce_block_output(x), x)
+    np.testing.assert_array_equal(NULL_ENV.reduce_block_output(x), x)
+
+
+# ---- chunk schedule --------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunks", [(1, 1), (7, 3), (8, 3), (9, 3),
+                                      (64, 4), (5, 8), (256, 1), (33, 5)])
+def test_chunk_bounds_cover_exactly(n, chunks):
+    spans = chunk_bounds(n, chunks)
+    assert len(spans) == min(chunks, n)
+    # contiguous, non-overlapping, in order, covering [0, n)
+    pos = 0
+    for start, size in spans:
+        assert start == pos and size >= 1
+        pos += size
+    assert pos == n
+    # ragged only in the last span
+    sizes = [s for _, s in spans]
+    assert all(s == sizes[0] for s in sizes[:-1])
+    assert sizes[-1] <= sizes[0]
+
+
+def test_chunk_bounds_degenerate():
+    assert chunk_bounds(0, 4) == []
+    assert chunk_bounds(-3, 4) == []
+    assert chunk_bounds(5, 1) == [(0, 5)]
+
+
+# ---- single-device ring (degenerate tp=1 path, real shard_map) ------------
+
+def test_single_device_ring_is_identity():
+    """tp=1 is the documented degenerate path: both rings return x
+    bit-unchanged (no wire traffic, no quantization error)."""
+    mesh = compat.make_mesh((1,), ("model",))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 7, 24)),
+                    jnp.float32)
+
+    for fn in (lambda v: ring_all_reduce(v, "model", chunks=3),
+               lambda v: compressed_ring_all_reduce(v, "model", chunks=3)):
+        wrapped = compat.shard_map(fn, mesh, P(), P())
+        with compat.set_mesh(mesh):
+            out = jax.jit(wrapped)(x)
+        np.testing.assert_array_equal(out, x)
+
+
+# ---- simulator sweep (the fast-tier oracle for the device path) -----------
+
+SHAPES = [(1, 1, 64),    # decode: one token
+          (2, 16, 48),   # small prefill
+          (1, 7, 33)]    # ragged: n not divisible by anything convenient
+
+
+@pytest.mark.parametrize("tp", [2, 3, 4])
+@pytest.mark.parametrize("chunks", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_simulated_ring_matches_psum(tp, chunks, dtype, shape):
+    """The ring must equal the psum: bit-exact at tp=2 (single commutative
+    add), within rounding above; and every shard's row must be
+    bit-identical (source-ordered fixed-association summation)."""
+    rng = np.random.default_rng(hash((tp, chunks, shape)) % 2**32)
+    shards = jnp.asarray(rng.normal(size=(tp, *shape)), dtype)
+    out = simulate_ring_all_reduce(shards, chunks=chunks)
+    assert out.dtype == dtype
+    # cross-shard bit-identity
+    for i in range(1, tp):
+        np.testing.assert_array_equal(out[0], out[i])
+    want = jnp.sum(shards.astype(jnp.float32), axis=0)
+    if tp == 2:
+        np.testing.assert_array_equal(
+            out[0].astype(jnp.float32),
+            want if dtype == jnp.float32
+            else (shards[0] + shards[1]).astype(jnp.float32))
+    else:
+        tol = 1e-6 if dtype == jnp.float32 else 1e-1
+        np.testing.assert_allclose(out[0].astype(jnp.float32), want,
+                                   rtol=tol, atol=tol)
+
+
+def test_simulated_ring_chunk_count_invariant():
+    """Chunking is a schedule choice, not a numerics choice: any chunk
+    count gives the bit-same result (per-chunk sums are independent)."""
+    rng = np.random.default_rng(7)
+    shards = jnp.asarray(rng.normal(size=(4, 3, 50)), jnp.float32)
+    ref = simulate_ring_all_reduce(shards, chunks=1)
+    for chunks in (2, 3, 7, 50, 999):
+        np.testing.assert_array_equal(
+            simulate_ring_all_reduce(shards, chunks=chunks), ref)
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("chunks", [1, 3])
+def test_simulated_compressed_bounded_error(tp, chunks):
+    """Compressed ring: all rows bit-identical, and the per-element error
+    vs the fp32 sum is bounded by sum_j scale_j / 2 (each source
+    contributes at most half a quant step per element)."""
+    rng = np.random.default_rng(tp * 10 + chunks)
+    shards = jnp.asarray(rng.normal(size=(tp, 2, 5, 40)), jnp.float32)
+    out = simulate_compressed_all_reduce(shards, chunks=chunks)
+    for i in range(1, tp):
+        np.testing.assert_array_equal(out[0], out[i])
+    want = jnp.sum(shards, axis=0)
+    flat = shards.reshape(tp, -1)
+    n = flat.shape[1]
+    bound = np.zeros(n, np.float64)
+    for start, size in chunk_bounds(n, chunks):
+        for j in range(tp):
+            _, scale = quantize_int8(flat[j, start:start + size])
+            per_elem = jnp.repeat(scale, BLOCK)[:size]
+            bound[start:start + size] += 0.5 * np.asarray(per_elem)
+    err = np.abs(np.asarray(out[0] - want)).reshape(-1)
+    assert np.all(err <= bound + 1e-6), float((err - bound).max())
+
+
+# ---- Pallas dequant-accumulate kernel (interpret mode) --------------------
+
+def _ref_dequant_acc(acc, q, scale, valid):
+    return acc + dequantize_int8(q, scale, (int(valid),))
+
+
+@pytest.mark.parametrize("valid", [1, BLOCK - 1, BLOCK, BLOCK + 1,
+                                   2 * BLOCK - 1, 2 * BLOCK])
+def test_dequant_accumulate_chunk_boundaries(valid):
+    """Off-by-one sweep around the quant-block boundary.  allclose, not
+    bit-equality: the fused multiply-add may round once where the
+    reference rounds twice (<= 1 ulp)."""
+    rng = np.random.default_rng(valid)
+    blocks = -(-valid // BLOCK)
+    q = jnp.asarray(rng.integers(-127, 128, size=(blocks, BLOCK)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.01, 2.0, size=(blocks,)), jnp.float32)
+    acc = jnp.asarray(rng.normal(size=(valid,)), jnp.float32)
+    got = dequant_accumulate(acc, q, scale, valid, interpret=True)
+    want = _ref_dequant_acc(acc, q, scale, valid)
+    assert got.shape == (valid,)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("valid", [1, BLOCK - 1, BLOCK + 1, 2 * BLOCK - 5])
+def test_dequant_accumulate_isolates_poisoned_pad(valid):
+    """The wire buffer's pad tail may hold ANYTHING (stale chunk, 1e38,
+    NaN int8 garbage / NaN scales on fully-pad blocks) — the in-kernel
+    mask must keep it all out of the sum."""
+    rng = np.random.default_rng(valid + 1000)
+    blocks = -(-valid // BLOCK) + 1  # one extra, fully-pad quant block
+    q = np.asarray(rng.integers(-127, 128, size=(blocks, BLOCK)), np.int8)
+    scale = np.asarray(rng.uniform(0.01, 2.0, size=(blocks,)), np.float32)
+    # clean reference BEFORE poisoning
+    want = _ref_dequant_acc(
+        jnp.zeros((valid,), jnp.float32),
+        jnp.asarray(q[:blocks - 1]), jnp.asarray(scale[:blocks - 1]), valid)
+    # poison: garbage q beyond `valid` inside the last REAL block (its
+    # scale must stay sane — real lanes share it), then NaN/huge scale on
+    # the fully-pad block
+    last_real = blocks - 2
+    tail_start = valid - last_real * BLOCK
+    q[last_real, tail_start:] = 127
+    q[blocks - 1, :] = -128
+    scale[blocks - 1] = np.nan
+    got = dequant_accumulate(jnp.zeros((valid,), jnp.float32),
+                             jnp.asarray(q), jnp.asarray(scale), valid,
+                             interpret=True)
+    assert np.all(np.isfinite(np.asarray(got)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_dequant_accumulate_rejects_bad_valid():
+    q = jnp.zeros((2, BLOCK), jnp.int8)
+    scale = jnp.zeros((2,), jnp.float32)
+    with pytest.raises(ValueError):
+        dequant_accumulate(jnp.zeros((0,)), q, scale, 0, interpret=True)
+    with pytest.raises(ValueError):
+        dequant_accumulate(jnp.zeros((2 * BLOCK + 1,)), q, scale,
+                           2 * BLOCK + 1, interpret=True)

@@ -30,6 +30,7 @@ def _run(which: str):
 @pytest.mark.parametrize("which", ["tp", "fsdp", "zero1", "sp", "padded",
                                    "flashdec", "pp", "compress", "q8",
                                    "serve_cb", "serve_paged", "serve_spec",
-                                   "serve_kernel", "serve_memory"])
+                                   "serve_kernel", "serve_memory",
+                                   "serve_comm"])
 def test_distributed(which):
     _run(which)

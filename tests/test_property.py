@@ -224,3 +224,81 @@ def test_rmsnorm_kernel_property(seed, rows, d):
     w = jnp.asarray(rng.normal(size=(d,)) * 0.1, jnp.float32)
     got = rmsnorm(x, w, interpret=True)
     np.testing.assert_allclose(got, rmsnorm_ref(x, w), atol=1e-5, rtol=1e-5)
+
+
+@SETTINGS
+@given(tp=st.sampled_from([2, 4]), chunks=st.integers(1, 6),
+       n=st.integers(1, 700), seed=st.integers(0, 100))
+def test_compressed_all_reduce_error_bound(tp, chunks, n, seed):
+    """Compressed ring vs fp32 sum: per-element error <= sum_j scale_j / 2
+    (each source shard contributes at most half a quantization step), for
+    arbitrary tp x chunk x ragged-length combinations."""
+    from repro.parallel.overlap import (chunk_bounds,
+                                        simulate_compressed_all_reduce)
+    from repro.quant import BLOCK, quantize_int8
+    rng = np.random.default_rng(seed)
+    shards = jnp.asarray(rng.normal(size=(tp, n)) *
+                         rng.uniform(0.1, 10), jnp.float32)
+    out = simulate_compressed_all_reduce(shards, chunks=chunks)
+    want = np.asarray(jnp.sum(shards, axis=0))
+    bound = np.zeros(n, np.float64)
+    for start, size in chunk_bounds(n, chunks):
+        for j in range(tp):
+            _, scale = quantize_int8(shards[j, start:start + size])
+            bound[start:start + size] += \
+                0.5 * np.asarray(jnp.repeat(scale, BLOCK)[:size])
+    err = np.abs(np.asarray(out[0]) - want)
+    assert np.all(err <= bound + 1e-6)
+
+
+@SETTINGS
+@given(tp=st.sampled_from([2, 4]), seed=st.integers(0, 100))
+def test_compressed_all_reduce_scale_idempotence(tp, seed):
+    """Re-quantizing a dequantized image is a fixed point (mirrors the KV
+    swap-tier contract) PROVIDED the blocking aligns: running values that
+    are already exact int8 multiples through a compressed ring whose chunk
+    boundaries fall on quant-block boundaries introduces NO extra error
+    beyond the summation itself.  (Misaligned chunks re-block and change
+    scales — that case is covered by the general error bound above.)"""
+    from repro.parallel.overlap import simulate_compressed_all_reduce
+    from repro.quant import BLOCK, dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    n = 2 * BLOCK  # chunks=2 -> each ring chunk is exactly one quant block
+    raw = jnp.asarray(rng.normal(size=(tp, n)), jnp.float32)
+    imgs = []
+    for j in range(tp):
+        q, s = quantize_int8(raw[j])
+        img = dequantize_int8(q, s, (n,))
+        q2, s2 = quantize_int8(img)  # fixed point: same codes
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+        imgs.append(img)
+    shards = jnp.stack(imgs)
+    out = simulate_compressed_all_reduce(shards, chunks=2)
+    # every shard's image survives the wire exactly -> the reduce equals
+    # the plain fp sum of the images, bit-for-bit at tp=2 and within
+    # association-rounding above
+    want = np.asarray(jnp.sum(shards, axis=0))
+    np.testing.assert_allclose(np.asarray(out[0]), want, rtol=1e-6,
+                               atol=1e-6)
+
+
+@SETTINGS
+@given(tp=st.sampled_from([2, 4]), chunks=st.integers(1, 4),
+       seed=st.integers(0, 50))
+def test_compressed_all_reduce_overflow_safe(tp, chunks, seed):
+    """Worst-case magnitudes (+-1e30 activations, all-zero chunks) must
+    stay finite: scales absorb the magnitude, zero blocks quantize to
+    exact zero (scale 0 guarded by _EPS), nothing overflows int8 or f32."""
+    from repro.parallel.overlap import simulate_compressed_all_reduce
+    rng = np.random.default_rng(seed)
+    big = rng.choice([-1e30, 1e30], size=(tp, 256)).astype(np.float32)
+    zeros = np.zeros((tp, 256), np.float32)
+    mixed = np.concatenate([big, zeros, rng.normal(size=(tp, 64))
+                            .astype(np.float32) * 1e-20], axis=1)
+    out = np.asarray(simulate_compressed_all_reduce(
+        jnp.asarray(mixed), chunks=chunks))
+    assert np.all(np.isfinite(out))
+    for i in range(1, tp):
+        np.testing.assert_array_equal(out[0], out[i])
+    # zero chunks come back exactly zero
+    np.testing.assert_array_equal(out[0, 256:512], np.zeros(256, np.float32))
