@@ -1,0 +1,59 @@
+"""Shared result-writing policy for the benches.
+
+A bench run always lands its JSON in an UNTRACKED ``<stem>.tmp.json``
+scratch file next to the requested ``--out`` path (``results/*.tmp.json``
+is gitignored); only under ``--update-baseline`` is the scratch then
+atomically renamed (``os.replace``) onto the committed baseline.  This
+keeps ``git status`` clean after exploratory runs, makes refreshing a
+committed artifact an explicit act, and guarantees a crashed or
+interrupted bench can never leave a half-written baseline behind —
+readers see either the old complete file or the new complete file.
+
+``scripts/check_bench.py --run`` passes explicit ``results/*.tmp.json``
+candidate paths; those are already scratch, so they are written in place
+and ``--update-baseline`` has nothing further to do.
+"""
+
+import json
+import os
+from pathlib import Path
+
+_TMP_SUFFIX = ".tmp.json"
+
+
+def scratch_path(out) -> Path:
+    """The untracked scratch twin of ``out`` (identity if already one)."""
+    out = Path(out)
+    if out.name.endswith(_TMP_SUFFIX):
+        return out
+    return out.with_name(out.name[: -len(".json")] + _TMP_SUFFIX)
+
+
+def write_record(record: dict, out, update_baseline: bool) -> Path:
+    """Write ``record`` under the scratch-then-promote policy.
+
+    Returns the path the result actually lives at, and prints it — a run
+    without ``--update-baseline`` must say loudly that the committed
+    baseline was NOT touched.
+    """
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    scratch = scratch_path(out)
+    scratch.write_text(json.dumps(record, indent=1))
+    if update_baseline and scratch != out:
+        os.replace(scratch, out)
+        print(f"[bench_io] baseline updated: {out}")
+        return out
+    if scratch != out:
+        print(f"[bench_io] wrote scratch {scratch} "
+              f"(baseline {out.name} untouched; pass --update-baseline "
+              "to promote)")
+    return scratch
+
+
+def add_update_baseline_arg(ap) -> None:
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="atomically promote the scratch result onto the committed "
+             "--out baseline (default: write only the untracked "
+             "*.tmp.json scratch)")

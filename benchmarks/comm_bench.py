@@ -40,13 +40,15 @@ kernel_bench does:
 """
 
 import argparse
-import json
 import os
 import sys
 import time
 from pathlib import Path
 
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from bench_io import add_update_baseline_arg, write_record  # noqa: E402
 
 # the measured half wants 2 devices; force them BEFORE jax initialises
 if "--xla_force_host_platform_device_count" not in os.environ.get(
@@ -168,13 +170,13 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--out", default=str(
         Path(__file__).resolve().parents[1] / "results" / "comm_bench.json"))
+    add_update_baseline_arg(ap)
     args = ap.parse_args(argv)
 
     rows = model_rows(args) + measured_rows(args)
-    record = dict(bench="comm_bench", config=vars(args), rows=rows)
-    out = Path(args.out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(record, indent=1))
+    cfg = {k: v for k, v in vars(args).items() if k != "update_baseline"}
+    record = dict(bench="comm_bench", config=cfg, rows=rows)
+    write_record(record, args.out, args.update_baseline)
 
     print("name,us_per_call,derived")
     for r in rows:

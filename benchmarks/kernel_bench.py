@@ -37,18 +37,21 @@ occupancies:
 """
 
 import argparse
-import json
 import sys
 import time
 from pathlib import Path
 
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from bench_io import add_update_baseline_arg, write_record  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.kernels import ops  # noqa: E402
+from repro.kernels import autotune, ops  # noqa: E402
+from repro.kernels.paged_attention import prefill_kernel_blocks  # noqa: E402
 from repro.models.attention import _cached_attention  # noqa: E402
 from repro.parallel.collectives import NULL_ENV  # noqa: E402
 from repro.serving.kv_cache import PagedKVCache, paged_view  # noqa: E402
@@ -114,6 +117,17 @@ def _bench_case(scenario, kv_lens, args):
     def kernel_read(q, k, v, bt, qpos):
         return ops.paged_attention(q, k, v, bt, qpos, scale=scale, block_size=bs)
 
+    # tuned launch geometry: what the serving engine dispatches for this
+    # (phase, occupancy-bucket) via the committed tuning table — same
+    # static key the engine derives (table width / max table width)
+    occ = w / max_blocks
+    tuned_cfg = autotune.get_config("decode", occ, block_size=bs)
+
+    def kernel_read_tuned(q, k, v, bt, qpos):
+        return ops.paged_attention(
+            q, k, v, bt, qpos, scale=scale, block_size=bs, phase="decode", occ=occ
+        )
+
     # int8 pool: same contents quantized per (token, head); the kernel
     # streams int8 tiles + scale tiles and dequantizes in VMEM
     from repro.quant import quantize_kv
@@ -129,6 +143,14 @@ def _bench_case(scenario, kv_lens, args):
     gather = jax.jit(gather_read)
     t_gather = _time_fn(gather, q, k, v, bt_live, qpos, iters=args.iters)
     t_kernel = _time_fn(kernel_read, q, k, v, bt_live, qpos, iters=args.iters)
+    # a cell whose tuned geometry IS the default dispatches the identical
+    # compiled call — re-timing it would only race the clock
+    if (tuned_cfg.num_splits, tuned_cfg.q_tile) == (0, 0):
+        t_kernel_tuned = t_kernel
+    else:
+        t_kernel_tuned = _time_fn(
+            kernel_read_tuned, q, k, v, bt_live, qpos, iters=args.iters
+        )
     t_kernel_int8 = _time_fn(
         kernel_read_int8, q, k8, v8, ks, vs, bt_live, qpos, iters=args.iters
     )
@@ -154,6 +176,9 @@ def _bench_case(scenario, kv_lens, args):
         reduction_int8_vs_fp=round(bytes_kernel / bytes_kernel_int8, 3),
         t_gather_us=round(t_gather * 1e6, 1),
         t_kernel_us=round(t_kernel * 1e6, 1),
+        t_kernel_tuned_us=round(t_kernel_tuned * 1e6, 1),
+        tuned_num_splits=tuned_cfg.num_splits,
+        tuned_q_tile=tuned_cfg.q_tile,
         t_kernel_int8_us=round(t_kernel_int8 * 1e6, 1),
         kernel_interpreted=jax.default_backend() != "tpu",
     )
@@ -175,6 +200,111 @@ def bench_ragged(args):
     s_max = args.max_blocks * args.block_size
     kv_lens = [s_max] + [max(1, s_max // 8)] * (args.rows - 1)
     return _bench_case("ragged", kv_lens, args)
+
+
+def _bench_prefill(kv_lens, chunk, args):
+    """One prefill/append row: each request appends a `chunk`-query tail
+    ending at its kv_len (history already paged in), the regime chunked
+    prefill and prefix-cache-hit appends actually run.  The kernel's
+    bytes model is O(sum_b tiles * ceil(tile_hi / bs)) via
+    prefill_kernel_blocks — per-row causal extent, never the table width
+    — while the gather path materialises O(W) per row before attending."""
+    bs, hkv, hd = args.block_size, args.kv_heads, args.head_dim
+    b = len(kv_lens)
+    max_blocks = args.max_blocks
+    used = [-(-kv // bs) for kv in kv_lens]
+    hq = hkv * args.group
+    dtype = jnp.float32
+    isize = jnp.dtype(dtype).itemsize
+
+    key = jax.random.key(1)
+    q = jax.random.normal(key, (b, chunk, hq, hd), dtype)
+    num_blocks = b * max_blocks
+    k = jax.random.normal(
+        jax.random.fold_in(key, 1), (hkv, num_blocks * bs, hd), dtype
+    )
+    v = jax.random.normal(
+        jax.random.fold_in(key, 2), (hkv, num_blocks * bs, hd), dtype
+    )
+    rng = np.random.default_rng(1)
+    bt_full = jnp.asarray(
+        rng.permutation(num_blocks).reshape(b, max_blocks), jnp.int32
+    )
+    qpos = jnp.asarray(
+        [[kv - chunk + i for i in range(chunk)] for kv in kv_lens], jnp.int32
+    )
+    scale = hd**-0.5
+    w = min(_bucket(max(used), 1), max_blocks)
+    bt_live = bt_full[:, :w]
+    occ = w / max_blocks
+    tuned_cfg = autotune.get_config("prefill", occ, block_size=bs)
+
+    def gather_read(q, k, v, bt, qpos):
+        cache = PagedKVCache(k=k, v=v, block_size=bs)
+        view = paged_view(cache, bt)
+        return _cached_attention(q * scale, view, qpos, NULL_ENV, softcap=0.0)
+
+    def kernel_read(q, k, v, bt, qpos):
+        return ops.paged_attention(q, k, v, bt, qpos, scale=scale, block_size=bs)
+
+    def kernel_read_tuned(q, k, v, bt, qpos):
+        return ops.paged_attention(
+            q, k, v, bt, qpos, scale=scale, block_size=bs, phase="prefill", occ=occ
+        )
+
+    gather = jax.jit(gather_read)
+    t_gather = _time_fn(gather, q, k, v, bt_live, qpos, iters=args.iters)
+    t_kernel = _time_fn(kernel_read, q, k, v, bt_live, qpos, iters=args.iters)
+    # identical compiled call when the tuned geometry is the default (see
+    # _bench_case)
+    if (tuned_cfg.num_splits, tuned_cfg.q_tile) == (0, 0):
+        t_kernel_tuned = t_kernel
+    else:
+        t_kernel_tuned = _time_fn(
+            kernel_read_tuned, q, k, v, bt_live, qpos, iters=args.iters
+        )
+
+    blocks_kernel = sum(prefill_kernel_blocks(kv, chunk, 0, bs) for kv in kv_lens)
+    blocks_tuned = sum(
+        prefill_kernel_blocks(kv, chunk, tuned_cfg.q_tile, bs) for kv in kv_lens
+    )
+    bytes_full = _kv_bytes(b * max_blocks, bs, hkv, hd, isize)
+    bytes_sliced = _kv_bytes(b * w, bs, hkv, hd, isize)
+    bytes_kernel = _kv_bytes(blocks_kernel, bs, hkv, hd, isize)
+    bytes_tuned = _kv_bytes(blocks_tuned, bs, hkv, hd, isize)
+    return dict(
+        scenario="prefill",
+        chunk=chunk,
+        occupancy=round(sum(used) / (b * max_blocks), 4),
+        kv_lens=list(kv_lens),
+        rows=b,
+        max_blocks=max_blocks,
+        blocks_used=used,
+        bt_width=w,
+        bytes_gather_full=bytes_full,
+        bytes_gather_sliced=bytes_sliced,
+        bytes_kernel=bytes_kernel,
+        bytes_kernel_tuned=bytes_tuned,
+        reduction_vs_full=round(bytes_full / bytes_kernel, 3),
+        reduction_vs_sliced=round(bytes_sliced / bytes_kernel, 3),
+        t_gather_us=round(t_gather * 1e6, 1),
+        t_kernel_us=round(t_kernel * 1e6, 1),
+        t_kernel_tuned_us=round(t_kernel_tuned * 1e6, 1),
+        tuned_num_splits=tuned_cfg.num_splits,
+        tuned_q_tile=tuned_cfg.q_tile,
+        kernel_interpreted=jax.default_backend() != "tpu",
+    )
+
+
+def bench_prefill(args):
+    """Ragged chunked-prefill rows: one full-history row pinning the
+    batch-max table width plus progressively shorter histories, all
+    appending the same chunk (kernels/autotune.py's prefill phase shape)."""
+    s_max = args.max_blocks * args.block_size
+    chunk = min(16, s_max)
+    kv_lens = [s_max, max(chunk, s_max // 2), max(chunk, s_max // 4)]
+    kv_lens += [chunk] * (args.rows - len(kv_lens))
+    return _bench_prefill(kv_lens[: args.rows], chunk, args)
 
 
 def main(argv=None):
@@ -200,28 +330,36 @@ def main(argv=None):
             Path(__file__).resolve().parents[1] / "results" / "kernel_bench.json"
         ),
     )
+    add_update_baseline_arg(ap)
     args = ap.parse_args(argv)
 
     rows = [bench_occupancy(float(o), args) for o in args.occupancies.split(",")]
     rows.append(bench_ragged(args))
-    record = dict(bench="kernel_bench", config=vars(args), rows=rows)
-    out = Path(args.out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(record, indent=1))
+    rows.append(bench_prefill(args))
+    cfg = {k: v for k, v in vars(args).items() if k != "update_baseline"}
+    record = dict(bench="kernel_bench", config=cfg, rows=rows)
+    write_record(record, args.out, args.update_baseline)
 
     print("name,us_per_call,derived")
     for r in rows:
         tag = f"occ{r['occupancy']}" if r["scenario"] == "uniform" else r["scenario"]
         interp = " (interpret)" if r["kernel_interpreted"] else ""
+        int8 = (
+            f"bytes_kernel_int8={r['bytes_kernel_int8']} "
+            f"reduction_int8_vs_fp={r['reduction_int8_vs_fp']}x "
+            if "bytes_kernel_int8" in r
+            else f"chunk={r['chunk']} bytes_kernel_tuned={r['bytes_kernel_tuned']} "
+        )
         print(
             f"kernel_bench/{tag},{r['t_kernel_us']:.1f},"
             f"bytes_kernel={r['bytes_kernel']} "
-            f"bytes_kernel_int8={r['bytes_kernel_int8']} "
+            f"{int8}"
             f"bytes_gather_full={r['bytes_gather_full']} "
             f"bytes_gather_sliced={r['bytes_gather_sliced']} "
             f"reduction_vs_full={r['reduction_vs_full']}x "
             f"reduction_vs_sliced={r['reduction_vs_sliced']}x "
-            f"reduction_int8_vs_fp={r['reduction_int8_vs_fp']}x "
+            f"t_tuned={r['t_kernel_tuned_us']:.1f}us"
+            f"[s{r['tuned_num_splits']}q{r['tuned_q_tile']}] "
             f"t_gather={r['t_gather_us']:.1f}us{interp}"
         )
     return record

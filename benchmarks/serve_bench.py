@@ -59,10 +59,13 @@ import sys
 import time
 from pathlib import Path
 
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax                                                     # noqa: E402
 import numpy as np                                             # noqa: E402
+
+from bench_io import add_update_baseline_arg, write_record     # noqa: E402
 
 from repro.configs import REGISTRY, ResidualMode               # noqa: E402
 from repro.models import transformer as tfm                    # noqa: E402
@@ -133,7 +136,14 @@ def _warm_paged_variants(engine, longest: int, temperature: float):
     so traffic-shaped warmup cannot cover the grid reliably; each variant
     instead runs one MASKED step (length 0 / active all-False: every
     position is -1, K/V writes drop, sampled tokens discarded — engine
-    state is untouched)."""
+    state is untouched).
+
+    The kernel-tuning dispatch (engine.build_paged_steps's ``_tune``)
+    adds NO extra variants to this grid: its (phase, occupancy-bucket)
+    key is a pure function of the table width already swept here, so
+    warming every width also warms every tuned launch geometry — each
+    row's ``n_jit_variants`` pins the compiled-variant count so a
+    tuning-key change that silently explodes retraces fails review."""
     import jax.numpy as jnp
     from repro.serving.sampler import GREEDY_EPS
 
@@ -193,6 +203,22 @@ def _warm_paged_variants(engine, longest: int, temperature: float):
                 engine.caches, _ = engine._decode(
                     *base, zf(nb) + temperature, zi(nb), zf(nb) + 1.0,
                     zi(nb))
+
+
+def _n_jit_variants(engine) -> int:
+    """Compiled-variant count across the engine's jitted step functions —
+    the (bucket x width x phase) grid _warm_paged_variants covers, plus
+    anything the traffic forced.  Reported per row so retrace explosions
+    (e.g. a tuning key that varies per step) show up in the artifact."""
+    fns = ("_prefill_chunk", "_decode", "_decode_greedy", "_verify",
+           "_verify_greedy", "_prefill")
+    total = 0
+    for name in fns:
+        fn = getattr(engine, name, None)
+        size = getattr(fn, "_cache_size", None)
+        if size is not None:
+            total += size()
+    return total
 
 
 def _pool_economics(cfg, args, s_max, engine) -> dict:
@@ -295,6 +321,7 @@ def bench_mode(mode: str, scenario: str, args, variant=None) -> dict:
         tokens_per_s=round(n_tok / max(wall, 1e-9), 2),
         per_token_latency_ms=_percentiles([x * 1e3 for x in itl]),
         ttft_ms=_percentiles([x * 1e3 for x in ttft]),
+        n_jit_variants=_n_jit_variants(engine),
     )
     if args.engine == "paged":
         st = engine.stats()
@@ -375,6 +402,7 @@ def main():
                     default="poisson,shared_prefix,overload")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
                                          / "results" / "serve_bench.json"))
+    add_update_baseline_arg(ap)
     args = ap.parse_args()
 
     variants = [(args.engine, "off", args.temperature, False, "fp", False,
@@ -426,11 +454,9 @@ def main():
             for m in args.modes.split(",")
             for v in (overload_variants if sc == "overload"
                       else variants)]
-    record = dict(bench="serve_bench", config=vars(args), rows=rows)
-
-    out = Path(args.out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(record, indent=1))
+    cfg = {k: v for k, v in vars(args).items() if k != "update_baseline"}
+    record = dict(bench="serve_bench", config=cfg, rows=rows)
+    write_record(record, args.out, args.update_baseline)
     print(json.dumps(record, indent=1))
     for r in rows:
         extra = (f" hit={r['prefix_hit_rate']:.2f} "
@@ -445,6 +471,7 @@ def main():
         if "preemptions" in r:
             extra += (f" preempt={r['preemptions']} "
                       f"resume={r['resumes']}")
+        extra += f" jits={r['n_jit_variants']}"
         print(f"serve_bench/{r['scenario']}/{r['engine']}/{r['mode']},"
               f"{1e6 / max(r['tokens_per_s'], 1e-9):.1f},"
               f"tok_per_s={r['tokens_per_s']} "

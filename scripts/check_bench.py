@@ -19,6 +19,13 @@ occupancy >= 50%, must show at least a 4x reduction at 25% occupancy
 DESIGN.md §Paged-attention kernel), and the int8-pool variant must cut
 the kernel's own traffic by a further >= 1.8x (dequant-in-VMEM).
 
+The kernel-tuning table (results/kernel_tuning.json) is gated too
+(``check_kernel_tuning``): its schema must validate with tuned <= default
+on every entry, one swept arch must cover the full phase x occupancy
+grid, and kernel_bench's re-measured tuned timings must stay within
+--tuned-tol of the default config's (nightly the table itself is
+re-swept by ``python -m repro.kernels.autotune --check``).
+
 Also gates the exposed-comm-time model (results/comm_bench.json,
 regenerated with --run): on the gated NVLink rows the ladder schedule
 must hide >= 30% of the exposed comm time standard mode pays at TP >= 2,
@@ -162,15 +169,35 @@ def check_kernel_bench(path: Path) -> int:
     """Gate the paged-attention kernel's bytes-read model: traffic must
     track actual kv length, not table width.  Rows come from
     benchmarks/kernel_bench.py; the model is analytical (deterministic),
-    so this is a hard invariant, not a tolerance check."""
+    so this is a hard invariant, not a tolerance check.
+
+    Prefill rows gate the ragged q-tiled mode the same way: the kernel's
+    chunk-append traffic is O(sum_b tiles * ceil(tile_hi / bs)) — each
+    row's own causal extent — while the gather path materialises the
+    O(table width) view for every row, so at the bench's mixed-history
+    shape the kernel must read >= 2x fewer KV bytes than the full-width
+    gather and never more than the live-sliced gather."""
     if not path.exists():
         print(f"FAIL kernel_bench: {path} missing "
               "(run benchmarks/kernel_bench.py)")
         return 1
     rows = json.loads(path.read_text())["rows"]
     failures = 0
-    saw_25 = saw_50 = False
+    saw_25 = saw_50 = saw_prefill = False
     for r in rows:
+        if r.get("scenario") == "prefill":
+            saw_prefill = True
+            ok = (r["bytes_kernel"] <= r["bytes_gather_sliced"]
+                  and r["reduction_vs_full"] >= 2.0
+                  and r.get("bytes_kernel_tuned", 1 << 62)
+                  <= r["bytes_gather_sliced"])
+            print(f"{'ok  ' if ok else 'FAIL'} kernel_bench/prefill: "
+                  f"kernel {r['bytes_kernel']} B "
+                  f"(tuned {r.get('bytes_kernel_tuned')} B) vs gather "
+                  f"{r['bytes_gather_full']} B "
+                  f"(x{r['reduction_vs_full']} reduction, need >= 2.0)")
+            failures += 0 if ok else 1
+            continue
         if r.get("scenario") != "uniform":
             continue
         occ = r["occupancy"]
@@ -197,6 +224,79 @@ def check_kernel_bench(path: Path) -> int:
         print("FAIL kernel_bench: gated occupancy rows missing "
               "(need uniform rows at 0.25 and >= 0.5)")
         failures += 1
+    if not saw_prefill:
+        print("FAIL kernel_bench: prefill row missing (the ragged "
+              "q-tiled append mode must stay in the gated artifact)")
+        failures += 1
+    return failures
+
+
+def check_kernel_tuning(table_path: Path, bench_path: Path,
+                        tuned_tol: float) -> int:
+    """Gate the committed kernel-tuning table (results/kernel_tuning.json)
+    and the tuned timing columns kernel_bench carries.
+
+    Table checks are hard invariants: the schema must validate
+    (kernels/autotune.validate_table — includes tuned_us <= default_us on
+    every entry, i.e. the sweep may never persist a config slower than
+    the deterministic fallback, and tuned_us >= the roofline bound), and
+    at least one swept arch must cover the full phase x occupancy-bucket
+    grid so a partial sweep cannot silently pass.
+
+    The kernel_bench timing check is tolerance-based: re-measured
+    ``t_kernel_tuned_us`` may not exceed ``t_kernel_us`` by more than
+    ``tuned_tol`` (interpret-mode timings on shared CI hardware are
+    noisy, and the tuned config legitimately equals the default at some
+    occupancies); every row must CARRY the tuned columns — a row that
+    drops them would pass vacuously otherwise."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.kernels import autotune
+
+    if not table_path.exists():
+        print(f"FAIL kernel_tuning: {table_path} missing "
+              "(run python -m repro.kernels.autotune --sweep)")
+        return 1
+    failures = 0
+    try:
+        table = autotune.load_table(table_path, strict=True)
+    except ValueError as e:
+        print(f"FAIL kernel_tuning: {e}")
+        return 1
+    entries = table["entries"]
+    by_arch = {}
+    for key in entries:
+        arch, phase, occ = key.rsplit("/", 2)
+        by_arch.setdefault(arch, set()).add((phase, occ))
+    full_grid = {(p, f"occ{b}") for p in autotune.PHASES
+                 for b in autotune.OCC_BUCKETS}
+    complete = [a for a, got in by_arch.items() if got >= full_grid]
+    if not complete:
+        print("FAIL kernel_tuning: no arch covers the full "
+              f"phase x occupancy grid ({sorted(by_arch)})")
+        failures += 1
+    else:
+        n = len(entries)
+        print(f"ok   kernel_tuning: {n} entries, full grid for "
+              f"{', '.join(sorted(complete))} (tuned <= default on all)")
+
+    if not bench_path.exists():
+        return failures  # check_kernel_bench already failed the artifact
+    rows = json.loads(bench_path.read_text())["rows"]
+    for r in rows:
+        tag = (f"occ{r['occupancy']}" if r["scenario"] == "uniform"
+               else r["scenario"])
+        if "t_kernel_tuned_us" not in r:
+            print(f"FAIL kernel_tuning/{tag}: tuned timing column missing")
+            failures += 1
+            continue
+        ceil_us = r["t_kernel_us"] * (1.0 + tuned_tol)
+        ok = r["t_kernel_tuned_us"] <= ceil_us
+        print(f"{'ok  ' if ok else 'FAIL'} kernel_tuning/{tag}: tuned "
+              f"{r['t_kernel_tuned_us']:.1f}us "
+              f"[splits={r['tuned_num_splits']} q_tile={r['tuned_q_tile']}]"
+              f" vs default {r['t_kernel_us']:.1f}us "
+              f"(ceil {ceil_us:.1f}us)")
+        failures += 0 if ok else 1
     return failures
 
 
@@ -260,6 +360,13 @@ def main(argv=None) -> int:
     ap.add_argument("--kernel-bench",
                     default=str(ROOT / "results" / "kernel_bench.json"),
                     help="kernel_bench artifact to gate (bytes-read model)")
+    ap.add_argument("--kernel-tuning",
+                    default=str(ROOT / "results" / "kernel_tuning.json"),
+                    help="committed kernel tuning table to gate")
+    ap.add_argument("--tuned-tol", type=float, default=0.5,
+                    help="max fractional excess of the re-measured tuned "
+                         "kernel time over the default config's (noise "
+                         "headroom; the table itself is gated hard)")
     ap.add_argument("--comm-bench",
                     default=str(ROOT / "results" / "comm_bench.json"),
                     help="comm_bench artifact to gate (exposed-comm model)")
@@ -290,6 +397,8 @@ def main(argv=None) -> int:
     failures = compare(baseline, candidate, args.tps_tol, args.p99_tol)
     failures += check_serve_memory(candidate)
     failures += check_kernel_bench(kernel_path)
+    failures += check_kernel_tuning(Path(args.kernel_tuning), kernel_path,
+                                    args.tuned_tol)
     failures += check_comm_bench(comm_path)
     if failures:
         print(f"{failures} bench regression(s) vs {args.baseline}")

@@ -26,7 +26,9 @@ if [[ "${1:-}" == "--lint" ]]; then
         benchmarks/kernel_bench.py \
         src/repro/serving/memory.py src/repro/quant.py tests/test_memory.py \
         src/repro/parallel/overlap.py src/repro/kernels/comm.py \
-        tests/test_collectives.py benchmarks/comm_bench.py
+        tests/test_collectives.py benchmarks/comm_bench.py \
+        src/repro/kernels/autotune.py tests/test_autotune.py \
+        benchmarks/bench_io.py
     exit 0
 fi
 

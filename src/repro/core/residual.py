@@ -41,10 +41,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ResidualMode
-from repro.parallel.collectives import AxisEnv
+from repro.parallel.collectives import AxisEnv, PendingResidual
 
 # A sub-block: fn(group_params, x, state) -> (partial_out, new_state, aux)
 SubBlockFn = Callable[[Any, jnp.ndarray, Any], Tuple[jnp.ndarray, Any, jnp.ndarray]]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FusedNormInput:
+    """A ladder sub-block input whose pending AllReduce is still int8.
+
+    Under ``comm.fuse_norm`` the sub-block j input is conceptually
+    ``base + dequant_sum(pending)`` but is handed to the sub-block
+    UNSUMMED: the entry RMSNorm dequant-accumulates the images in VMEM
+    (kernels/rmsnorm.rmsnorm_dequant via models/transformer.norm_in), so
+    the pre-norm read streams int8 instead of round-tripping the summed
+    f32 activation through HBM.  Sub-block functions consume their input
+    only through ``norm_in``, which is what makes this a drop-in payload.
+    """
+
+    base: jnp.ndarray          # (B, S, D) residual stream (x_{j-1})
+    pending: PendingResidual   # psum(h_{j-1}) still as per-source images
 
 
 @dataclass
@@ -62,10 +80,20 @@ class Carry:
                                  self.aux) if t is not None)
 
 
-def init_carry(mode: ResidualMode, x: jnp.ndarray) -> Carry:
+def init_carry(mode: ResidualMode, x: jnp.ndarray,
+               env: Optional[AxisEnv] = None) -> Carry:
     zero = jnp.zeros_like(x)
     aux = jnp.zeros((), jnp.float32)
     if mode == ResidualMode.LADDER:
+        if env is not None and env.comm.fuse_norm and not env.sp:
+            # fused-norm ladder: pendings live as deferred int8 image
+            # stacks; an all-zero stack materializes to exactly zero
+            # (scale 0), so the first two sub-blocks see x unchanged
+            tp = env.tp
+            zp = PendingResidual(
+                images=jnp.zeros((tp, *x.shape), jnp.int8),
+                scales=jnp.zeros((tp, *x.shape[:-1]), jnp.float32))
+            return Carry(residual=x, p1=zp, p2=zp, aux=aux)
         return Carry(residual=x, p1=zero, p2=zero, aux=aux)
     if mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
         return Carry(residual=x, delta=zero, aux=aux)
@@ -76,7 +104,10 @@ def finalize_carry(mode: ResidualMode, carry: Carry, env: AxisEnv) -> Tuple[jnp.
     """Flush pendings / deltas; returns (residual, aux_loss)."""
     r = carry.residual
     if mode == ResidualMode.LADDER:
-        r = r + carry.p2 + carry.p1
+        if isinstance(carry.p2, PendingResidual):
+            r = carry.p1.materialize(carry.p2.materialize(r))
+        else:
+            r = r + carry.p2 + carry.p1
     elif mode in (ResidualMode.DESYNC2, ResidualMode.DESYNC4):
         # re-synchronize whatever local delta remains at the stack end
         r = r + env.psum_model(carry.delta)
@@ -94,7 +125,7 @@ def _name_collective(x):
     the backward recompute (§Perf hillclimb 1 — roughly halves the train
     collective term at the cost of one saved activation per sub-block)."""
     from jax.ad_checkpoint import checkpoint_name
-    return checkpoint_name(x, "coll_out")
+    return jax.tree.map(lambda t: checkpoint_name(t, "coll_out"), x)
 
 
 def subblock_step(mode: ResidualMode, fn: SubBlockFn, params, carry: Carry,
@@ -113,9 +144,20 @@ def subblock_step(mode: ResidualMode, fn: SubBlockFn, params, carry: Carry,
         # compute from the (now one-step-stale) residual and issue this
         # sub-block's psum.  Between issue and consume, one full sub-block
         # of compute overlaps the collective.
-        residual = carry.residual + carry.p2
-        out, new_state, aux = fn(params, residual, state)
-        pending = env.reduce_block_output(out)
+        if isinstance(carry.p2, PendingResidual):
+            # fuse_norm: hand the sub-block the UNSUMMED pending — its
+            # entry RMSNorm dequant-accumulates the int8 images in VMEM —
+            # and materialize the same sum (same source order, same f32
+            # association) for the carried residual stream.
+            out, new_state, aux = fn(
+                params, FusedNormInput(base=carry.residual, pending=carry.p2),
+                state)
+            residual = carry.p2.materialize(carry.residual)
+            pending = env.ring_block_output_images(out)
+        else:
+            residual = carry.residual + carry.p2
+            out, new_state, aux = fn(params, residual, state)
+            pending = env.reduce_block_output(out)
         pending = _name_collective(pending)
         return Carry(residual=residual, p1=pending, p2=carry.p1,
                      aux=carry.aux + aux), new_state

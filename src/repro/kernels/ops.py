@@ -42,10 +42,12 @@ def flash_attention(q, k, v, *, scale: float, window: int = 0,
 
 
 @partial(jax.jit, static_argnames=("scale", "block_size", "softcap",
-                                   "num_splits"))
+                                   "num_splits", "q_tile", "phase", "occ"))
 def paged_attention(q, k, v, block_tables, positions, *, scale: float,
                     block_size: int, softcap: float = 0.0,
-                    num_splits: int = 0, k_scale=None, v_scale=None):
+                    num_splits: int = 0, q_tile: int = 0,
+                    phase: str = None, occ: float = 0.0,
+                    k_scale=None, v_scale=None):
     """Model-facing: q (B, Q, Hq, hd) at per-query absolute `positions`
     (B, Q) (-1 = padding/inactive), against the paged pool k/v
     (Hkv, n_blocks*bs, hd) through `block_tables` (B, M).  Replaces the
@@ -53,10 +55,21 @@ def paged_attention(q, k, v, block_tables, positions, *, scale: float,
     bytes-read scales with each row's actual kv length instead of the
     table width (kernels/paged_attention.py).  For int8 pools pass the
     per-(token, head) `k_scale`/`v_scale` arrays: tiles load as int8 and
-    dequantize in VMEM (DESIGN.md §KV memory tiers)."""
+    dequantize in VMEM (DESIGN.md §KV memory tiers).
+
+    When `phase` is given ("decode"/"prefill"/"verify") and no explicit
+    `num_splits`/`q_tile` override is set, the launch geometry comes from
+    the committed tuning table (kernels/autotune.py; results/
+    kernel_tuning.json) keyed by (arch, phase, occupancy bucket `occ`),
+    falling back to the deterministic defaults on a missing key."""
+    if phase is not None and num_splits == 0 and q_tile == 0:
+        from repro.kernels import autotune as _at
+        tuned = _at.get_config(phase, occ or 1.0, block_size=block_size)
+        num_splits, q_tile = tuned.num_splits, tuned.q_tile
     return _pa.paged_attention(q, k, v, block_tables, positions,
                                scale=scale, block_size=block_size,
                                softcap=softcap, num_splits=num_splits,
+                               q_tile=q_tile,
                                k_scale=k_scale, v_scale=v_scale,
                                interpret=_interpret())
 
@@ -64,6 +77,15 @@ def paged_attention(q, k, v, block_tables, positions, *, scale: float,
 @partial(jax.jit, static_argnames=("eps",))
 def rmsnorm(x, weight, *, eps: float = 1e-5):
     return _rn.rmsnorm(x, weight, eps=eps, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def rmsnorm_dequant(x, images, scales, weight, *, eps: float = 1e-5):
+    """Fused dequant-sum + RMSNorm over a deferred int8 AllReduce
+    (parallel/overlap.PendingResidual): one HBM pass instead of
+    round-tripping the summed f32 activation (kernels/rmsnorm.py)."""
+    return _rn.rmsnorm_dequant(x, images, scales, weight, eps=eps,
+                               interpret=_interpret())
 
 
 @jax.jit

@@ -10,29 +10,39 @@ scalar-prefetched ``block_tables`` argument, so only the row's own KV
 blocks are ever streamed from HBM and bytes-read scales with
 ``ceil(kv_len / block_size)`` (benchmarks/kernel_bench.py pins the model).
 
-Grid ``(B * Hkv, num_splits, blocks_per_split)``:
+Grid ``(B * Hkv, num_q_tiles, num_splits, blocks_per_split)``:
 
 * axis 0 fuses (batch row, local kv head) — one online-softmax state per
-  cell, GQA without materialised KV repetition: the group's ``Q * G`` query
-  rows stay resident in VMEM while that kv head's tiles stream past (same
-  trick as kernels/flash_attention.py, with the group dim folded into the
-  q-tile rows instead of the grid).
-* axis 1 is the split-K dimension: each split covers a contiguous range of
+  cell, GQA without materialised KV repetition: the tile's ``q_tile * G``
+  query rows stay resident in VMEM while that kv head's tiles stream past
+  (same trick as kernels/flash_attention.py, with the group dim folded
+  into the q-tile rows instead of the grid).
+* axis 1 tiles the query dimension (ragged prefill/append mode): each
+  q-tile carries its own slice of the per-query positions, its own
+  online-softmax state, and its own ragged early exit — a tile covering
+  only early chunk positions stops streaming KV at ITS last position, not
+  the chunk's.  ``q_tile = 0`` keeps the whole Q resident in one tile
+  (exactly the pre-tiling behaviour — the decode default); the autotuner
+  (kernels/autotune.py) picks the tile for prefill/verify shapes, trading
+  VMEM residency against per-tile KV re-streaming.
+* axis 2 is the split-K dimension: each split covers a contiguous range of
   logical blocks and emits PARTIAL softmax statistics ``(m, l, acc)``; the
   host-side combine (``_combine_splits``) merges them with exactly the
   ``(m, l)`` contract ``_cached_attention`` already uses for seq-sharded
   flash decoding, so a TP/DP stats combine composes unchanged on top.
-* axis 2 walks the split's logical blocks (grid-minor: VMEM scratch carries
+* axis 3 walks the split's logical blocks (grid-minor: VMEM scratch carries
   the online-softmax state across iterations).  Tiles whose first position
-  lies beyond the row's last query position are skipped with ``pl.when`` —
-  the per-row ragged early exit.
+  lies beyond the q-tile's last query position are skipped with ``pl.when``
+  — the per-(row, q-tile) ragged early exit.
 
 Queries are general ``Q >= 1`` with *per-query absolute positions*
 (padding / inactive rows at -1), so plain decode (Q = 1), speculative K+1
 verification and chunked prefill all run through the same kernel: the mask
 ``kv_pos <= q_pos`` is simultaneously the ragged length mask and the
-causal mask among fresh tokens (their K/V is scattered into the pool
-before the kernel runs — engine.build_paged_steps).
+causal mask among fresh tokens (their K/V is scatter-appended into the
+pool by ``paged_update`` inside the same jitted step —
+engine.build_paged_steps — so chunked prefill and K+1 verify never
+materialise the ``paged_view`` gather).
 
 int8 pools (DESIGN.md §KV memory tiers) add two scale-tile inputs walked
 by the same logical -> physical index_map as the KV tiles: KV tiles load
@@ -83,8 +93,9 @@ def _kernel(
     else:
         m_out, l_out, acc_out, m_ref, l_ref, acc_ref = refs
     cell = pl.program_id(0)  # fused (row, kv head)
-    split = pl.program_id(1)
-    j = pl.program_id(2)  # block within this split
+    t = pl.program_id(1)  # q-tile within the row's queries
+    split = pl.program_id(2)
+    j = pl.program_id(3)  # block within this split
     row = cell // hkv
 
     @pl.when(j == 0)
@@ -94,15 +105,16 @@ def _kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     logical = split * blocks_per_split + j
-    qp = qpos_ref[row]  # (Q,) absolute query positions
-    # ragged early exit: tiles past the row's last query position hold no
-    # readable KV (reads are masked to kv_pos <= q_pos); inactive rows
-    # (all positions -1) skip every tile and emit l = 0
+    qp = qpos_ref[row, t]  # (q_tile,) absolute query positions of THIS tile
+    # ragged early exit: KV tiles past the q-tile's last query position
+    # hold no readable KV (reads are masked to kv_pos <= q_pos); inactive
+    # rows / pure-padding tiles (all positions -1) skip every KV tile and
+    # emit l = 0
     in_range = logical * block_size <= jnp.max(qp)
 
     @pl.when(in_range)
     def _body():
-        q = q_ref[0].astype(jnp.float32) * scale  # (Q*G, hd)
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (q_tile*G, hd)
         k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
         if quant:
             k = k * ks_ref[0, 0][:, None]
@@ -115,7 +127,7 @@ def _kernel(
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
         qg = q.shape[0]
-        # query row i*G+g carries query i's position (the (Q, G) q-tile
+        # query row i*G+g carries query i's position (the (q_tile, G)
         # layout below flattens row-major)
         qpg = jnp.repeat(qp, group, total_repeat_length=qg)
         kvpos = logical * block_size + jax.lax.broadcasted_iota(
@@ -144,9 +156,9 @@ def _kernel(
 
     @pl.when(j == blocks_per_split - 1)
     def _finalize():
-        m_out[0, 0] = m_ref[...]
-        l_out[0, 0] = l_ref[...]
-        acc_out[0, 0] = acc_ref[...]
+        m_out[0, 0, 0] = m_ref[...]
+        l_out[0, 0, 0] = l_ref[...]
+        acc_out[0, 0, 0] = acc_ref[...]
 
 
 def _combine_splits(ms, ls, accs):
@@ -160,6 +172,27 @@ def _combine_splits(ms, ls, accs):
     return num / jnp.maximum(den, 1e-37)[..., None]
 
 
+def prefill_kernel_blocks(kv_hi: int, chunk: int, q_tile: int,
+                          block_size: int) -> int:
+    """Analytical KV-block reads of the q-tiled kernel for ONE prefill
+    chunk whose last query sits at absolute position ``kv_hi - 1``.
+
+    Each q-tile streams logical blocks 0..ceil(tile_last_pos+1 / bs)-1
+    (the per-tile ragged early exit) — so ``q_tile = 0`` (one tile) reads
+    ceil(kv_hi / bs) blocks exactly once, while smaller tiles re-stream
+    early blocks but stop at their OWN extent.  benchmarks/kernel_bench.py
+    pins this model against the gather path's O(table width) and
+    kernels/autotune.py feeds it to the roofline sanity bound."""
+    qt = chunk if q_tile <= 0 else min(q_tile, chunk)
+    nqt = -(-chunk // qt)
+    total = 0
+    for t in range(nqt):
+        tile_last = min((t + 1) * qt, chunk)  # queries in the chunk tail
+        tile_hi = kv_hi - chunk + tile_last  # absolute last position + 1
+        total += -(-tile_hi // block_size)
+    return total
+
+
 def paged_attention(
     q,
     k,
@@ -171,6 +204,7 @@ def paged_attention(
     block_size: int,
     softcap: float = 0.0,
     num_splits: int = 0,
+    q_tile: int = 0,
     interpret: bool = False,
     k_scale=None,
     v_scale=None,
@@ -187,6 +221,12 @@ def paged_attention(
         padding / inactive rows (their output is 0 — callers never read it).
     num_splits: split-K parallelism (0 = auto); long rows fan out over the
         grid and partials merge host-side in ``_combine_splits``.
+    q_tile: queries resident per VMEM tile (0 = all Q in one tile — the
+        decode default).  Smaller tiles bound VMEM for long prefill chunks
+        and sharpen the ragged early exit (a tile of early chunk positions
+        stops streaming KV at its own extent); the output is invariant to
+        the choice (tests/test_autotune.py) — kernels/autotune.py picks it
+        per (arch, occupancy bucket, phase).
     k_scale, v_scale: (Hkv, num_blocks * block_size) float32 per-(token,
         head) dequant scales for int8 pools (both or neither).  Scale tiles
         ride the same block-table translation as the KV tiles and the
@@ -201,7 +241,15 @@ def paged_attention(
     b, nq, hq, hd = q.shape
     hkv, n_tok, _ = k.shape
     group = hq // hkv
-    qg = nq * group
+    qt = nq if q_tile <= 0 else min(q_tile, nq)
+    nqt = -(-nq // qt)
+    qpad = nqt * qt - nq
+    if qpad:
+        # padded queries run at position -1: masked out of every KV tile,
+        # their output rows are sliced off before returning
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, qpad)), constant_values=-1)
+    qtg = qt * group
     m = block_tables.shape[1]
     if num_splits <= 0:
         # enough splits that short grids still spread, never more than the
@@ -216,10 +264,11 @@ def paged_attention(
         block_tables = jnp.pad(block_tables, ((0, 0), (0, pad)))
     kp = k.reshape(hkv, n_tok // block_size, block_size, hd)
     vp = v.reshape(hkv, n_tok // block_size, block_size, hd)
-    # (B, Q, Hkv, G, hd) -> (B*Hkv, Q*G, hd): the kv head is grid-major,
-    # its whole query group rides in one VMEM-resident q tile
-    qf = q.reshape(b, nq, hkv, group, hd).transpose(0, 2, 1, 3, 4)
-    qf = qf.reshape(b * hkv, qg, hd)
+    # (B, nqt, qt, Hkv, G, hd) -> (B*Hkv, nqt, qt*G, hd): the kv head is
+    # grid-major, each q-tile's query group rides in one VMEM-resident tile
+    qf = q.reshape(b, nqt, qt, hkv, group, hd).transpose(0, 3, 1, 2, 4, 5)
+    qf = qf.reshape(b * hkv, nqt, qtg, hd)
+    qpos_t = qpos.reshape(b, nqt, qt)
 
     kernel = functools.partial(
         _kernel,
@@ -232,15 +281,15 @@ def paged_attention(
         quant=quant,
     )
 
-    def kv_map(c, s, j, bt, qp):
+    def kv_map(c, t, s, j, bt, qp):
         # logical block (s * bps + j) of row (c // hkv) -> physical block
         return (c % hkv, bt[c // hkv, s * bps + j], 0, 0)
 
-    def scale_map(c, s, j, bt, qp):
+    def scale_map(c, t, s, j, bt, qp):
         return (c % hkv, bt[c // hkv, s * bps + j], 0)
 
     in_specs = [
-        pl.BlockSpec((1, qg, hd), lambda c, s, j, bt, qp: (c, 0, 0)),
+        pl.BlockSpec((1, 1, qtg, hd), lambda c, t, s, j, bt, qp: (c, t, 0, 0)),
         pl.BlockSpec((1, 1, block_size, hd), kv_map),
         pl.BlockSpec((1, 1, block_size, hd), kv_map),
     ]
@@ -253,31 +302,39 @@ def paged_attention(
         ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # block_tables, qpos
-        grid=(b * hkv, ns, bps),
+        num_scalar_prefetch=2,  # block_tables, qpos (tiled (B, nqt, qt))
+        grid=(b * hkv, nqt, ns, bps),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, qg), lambda c, s, j, bt, qp: (c, s, 0)),
-            pl.BlockSpec((1, 1, qg), lambda c, s, j, bt, qp: (c, s, 0)),
-            pl.BlockSpec((1, 1, qg, hd), lambda c, s, j, bt, qp: (c, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, qtg),
+                         lambda c, t, s, j, bt, qp: (c, t, s, 0)),
+            pl.BlockSpec((1, 1, 1, qtg),
+                         lambda c, t, s, j, bt, qp: (c, t, s, 0)),
+            pl.BlockSpec((1, 1, 1, qtg, hd),
+                         lambda c, t, s, j, bt, qp: (c, t, s, 0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((qg,), jnp.float32),  # running max
-            pltpu.VMEM((qg,), jnp.float32),  # running denominator
-            pltpu.VMEM((qg, hd), jnp.float32),  # output accumulator
+            pltpu.VMEM((qtg,), jnp.float32),  # running max
+            pltpu.VMEM((qtg,), jnp.float32),  # running denominator
+            pltpu.VMEM((qtg, hd), jnp.float32),  # output accumulator
         ],
     )
     ms, ls, accs = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b * hkv, ns, qg), jnp.float32),
-            jax.ShapeDtypeStruct((b * hkv, ns, qg), jnp.float32),
-            jax.ShapeDtypeStruct((b * hkv, ns, qg, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, nqt, ns, qtg), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, nqt, ns, qtg), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, nqt, ns, qtg, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables, qpos, *inputs)
+    )(block_tables, qpos_t, *inputs)
 
-    out = _combine_splits(ms, ls, accs)
-    out = out.reshape(b, hkv, nq, group, hd).transpose(0, 2, 1, 3, 4)
-    return out.reshape(b, nq, hq, hd).astype(q.dtype)
+    out = _combine_splits(
+        ms.reshape(b * hkv * nqt, ns, qtg),
+        ls.reshape(b * hkv * nqt, ns, qtg),
+        accs.reshape(b * hkv * nqt, ns, qtg, hd),
+    )
+    out = out.reshape(b, hkv, nqt, qt, group, hd).transpose(0, 2, 3, 1, 4, 5)
+    out = out.reshape(b, nqt * qt, hq, hd)
+    return out[:, :nq].astype(q.dtype)

@@ -52,3 +52,66 @@ def rmsnorm(x, weight, *, eps: float = 1e-5, block_rows: int = 8,
         interpret=interpret,
     )(x2, weight)
     return out[:rows].reshape(orig_shape)
+
+
+def _dequant_kernel(x_ref, q_ref, s_ref, w_ref, o_ref, *, eps: float,
+                    tp: int):
+    # dequant-accumulate the per-source int8 images onto the base rows in
+    # f32 SOURCE ORDER (the ring's fixed association — bit-identical to
+    # PendingResidual.materialize), then the usual fused norm.  The tp loop
+    # unrolls: tp is tiny (<= 8) and each image tile is int8, so the whole
+    # working set stays in VMEM for one HBM pass.
+    x = x_ref[...].astype(jnp.float32)                      # (br, D)
+    for j in range(tp):
+        x = x + q_ref[j].astype(jnp.float32) * s_ref[j][:, None]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm_dequant(x, images, scales, weight, *, eps: float = 1e-5,
+                    block_rows: int = 8, interpret: bool = False):
+    """Fused dequant + RMSNorm: ``rmsnorm(x + sum_j images[j] * scales[j])``
+    in ONE pass over HBM.
+
+    x: (..., D) base rows; images: (tp, ..., D) int8 per-source quantized
+    partials with per-row ``scales`` (tp, ...) (repro.quant.quantize_kv
+    layout — the deferred AllReduce wire of parallel/overlap.
+    ring_block_images).  The unfused lowering reads the f32 sum back from
+    HBM between the dequant-add and the norm; here the int8 images
+    dequantize in VMEM and only the normed rows are written
+    (DESIGN.md §Communication overlap, fused-norm decode path).
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    tp = images.shape[0]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    q2 = images.reshape(tp, rows, d)
+    s2 = scales.astype(jnp.float32).reshape(tp, rows)
+    block_rows = min(block_rows, rows)
+    n = -(-rows // block_rows)
+    pad = n * block_rows - rows
+    if pad:
+        # zero-scale padding rows dequantize to exactly zero
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        q2 = jnp.pad(q2, ((0, 0), (0, pad), (0, 0)))
+        s2 = jnp.pad(s2, ((0, 0), (0, pad)))
+
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, eps=eps, tp=tp),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((tp, block_rows, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((tp, block_rows), lambda i: (0, i)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n * block_rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, q2, s2, weight)
+    return out[:rows].reshape(orig_shape)

@@ -36,6 +36,16 @@ PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
 LINK_BW = 50e9             # bytes/s per ICI link
 
+
+def kernel_time_bound_s(bytes_read: float, flops: float) -> float:
+    """Roofline lower bound on one kernel invocation: it can finish no
+    faster than its HBM stream or its FLOPs, whichever dominates.  The
+    kernel autotuner (kernels/autotune.py) uses this as a sanity check on
+    sweep winners — a measured time BELOW this bound is measurement noise
+    (a cached result, a clock glitch), not a real tuning, and is
+    rejected."""
+    return max(bytes_read / HBM_BW, flops / PEAK_FLOPS)
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,

@@ -76,6 +76,14 @@ def main():
     ap.add_argument("--comm-chunks", type=int, default=4,
                     help="ring chunk count for --comm-overlap/--comm-quant "
                          "(chunk i's hops pipeline under chunk i+1)")
+    ap.add_argument("--comm-fuse-norm", action="store_true",
+                    help="paged engine, ladder only: defer the int8 "
+                         "AllReduce's dequant-sum into the next sub-block's "
+                         "RMSNorm (fused Pallas dequant+norm kernel under "
+                         "--use-pallas) — the pre-norm read streams int8 "
+                         "instead of round-tripping f32 through HBM.  "
+                         "Implies --comm-quant's wire; bounded error like "
+                         "it (DESIGN.md §Communication overlap)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="run attention through the Pallas kernels: the "
                          "paged engine reads the KV pool with the "
@@ -83,6 +91,16 @@ def main():
                          "(bytes-read tracks each row's actual kv length); "
                          "tokens are bit-identical to the default gather "
                          "path.  Compiled on TPU, interpret mode elsewhere")
+    ap.add_argument("--autotune", action="store_true",
+                    help="re-sweep the paged-kernel launch geometry for "
+                         "this host before serving (kernels/autotune.py) "
+                         "and consult the fresh table; without it the "
+                         "committed results/kernel_tuning.json is used, "
+                         "with deterministic defaults on a missing key")
+    ap.add_argument("--no-tune", action="store_true",
+                    help="ignore the tuning table: run the paged kernel "
+                         "with the deterministic default launch geometry "
+                         "(tokens are bit-identical either way)")
     ap.add_argument("--spec-decode", default="off",
                     choices=["off", "ngram", "draft"],
                     help="speculative decoding on the paged engine: ngram "
@@ -138,6 +156,18 @@ def main():
         print(f"[serve] restored step {mgr.latest_step()}")
     params, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
 
+    if args.autotune:
+        # local re-sweep: overwrite the in-process tuning table (and the
+        # on-disk json) with fresh measurements for THIS host before the
+        # engine traces its steps
+        from repro.kernels import autotune
+        table = autotune.sweep(block_sizes=(args.block_size,))
+        autotune.save_table(table)
+        autotune.get_table.cache_clear()
+        n = len(table["entries"])
+        print(f"[serve] autotune: swept {n} (phase, occupancy) entries "
+              f"-> {autotune.TABLE_PATH}")
+
     s_max = args.prompt_len + args.gen + 1
     engine = None
     kind = args.engine
@@ -145,10 +175,11 @@ def main():
         raise SystemExit("--spec-decode requires the paged engine")
     if kind == "ragged" and (args.kv_quant != "fp" or
                              args.oversubscribe != 1.0 or args.swap_blocks or
-                             args.comm_overlap or args.comm_quant):
+                             args.comm_overlap or args.comm_quant or
+                             args.comm_fuse_norm):
         raise SystemExit("--kv-quant/--oversubscribe/--swap-blocks/"
-                         "--comm-overlap/--comm-quant require the paged "
-                         "engine")
+                         "--comm-overlap/--comm-quant/--comm-fuse-norm "
+                         "require the paged engine")
     if kind != "ragged":
         try:
             paged_kw = dict(
@@ -159,7 +190,9 @@ def main():
                 kv_quant=args.kv_quant, oversubscribe=args.oversubscribe,
                 swap_blocks=args.swap_blocks,
                 comm_overlap=args.comm_overlap, comm_quant=args.comm_quant,
-                comm_chunks=args.comm_chunks)
+                comm_chunks=args.comm_chunks,
+                comm_fuse_norm=args.comm_fuse_norm,
+                tuned=not args.no_tune)
             if args.spec_decode != "off":
                 from repro.serving.speculative import (
                     SpeculativePagedEngine, derive_draft_cfg)
@@ -180,7 +213,8 @@ def main():
         except NotImplementedError as e:
             if args.engine == "paged" or args.spec_decode != "off" or \
                     args.kv_quant != "fp" or args.oversubscribe != 1.0 or \
-                    args.swap_blocks or args.comm_overlap or args.comm_quant:
+                    args.swap_blocks or args.comm_overlap or \
+                    args.comm_quant or args.comm_fuse_norm:
                 # memory-tier/comm flags exist only on the paged path:
                 # error instead of silently serving without them
                 raise
@@ -224,7 +258,8 @@ def main():
     # fallback run must not be labelled as if the kernel served it
     pallas_tag = "+pallas" if args.use_pallas and kind.startswith("paged") \
         else ""
-    comm_tag = ("+comm:int8" if args.comm_quant else
+    comm_tag = ("+comm:int8+norm" if args.comm_fuse_norm else
+                "+comm:int8" if args.comm_quant else
                 "+comm:overlap" if args.comm_overlap else "")
     print(f"[serve] {len(finished)}/{len(trace)} requests, {n_tok} tokens "
           f"in {wall:.2f}s ({n_tok / max(wall, 1e-9):.1f} tok/s) "

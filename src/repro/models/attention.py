@@ -188,7 +188,7 @@ def _project_qkv(params, x, head_dim):
 def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
               rope_theta: float, window: int = 0, softcap: float = 0.0,
               use_pallas: bool = False, cache: Optional[dict] = None,
-              kv_override=None, block_tables=None):
+              kv_override=None, block_tables=None, attn_tune=None):
     """Causal self-attention (or cross-attention via kv_override).
 
     Returns (partial_out, new_cache).  partial_out requires a psum over the
@@ -198,6 +198,9 @@ def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
     kv_override: (k, v, kv_mask) precomputed keys/values for cross-attention.
     block_tables: (B, max_blocks) physical block ids — required when `cache`
     is a PagedKVCache; logical reads/writes go through the table.
+    attn_tune: optional static (phase, occupancy-bucket) pair that keys the
+    paged-kernel launch geometry into the committed tuning table
+    (kernels/autotune.py); None keeps the deterministic defaults.
     """
     scale = 1.0 / math.sqrt(head_dim)
     q, k, v = _project_qkv(params, x, head_dim)
@@ -235,10 +238,12 @@ def attention(params, x, positions, env: AxisEnv, *, head_dim: int,
             # int8 pools hand the kernel their per-(token, head) scales so
             # dequantization happens on the int8 tiles in VMEM; the gather
             # oracle below dequantizes inside paged_view with the same math
+            phase, occ = attn_tune if attn_tune is not None else (None, 0.0)
             out = ops.paged_attention(q, cache.k, cache.v, block_tables,
                                       positions, scale=scale,
                                       block_size=cache.block_size,
                                       softcap=softcap,
+                                      phase=phase, occ=occ,
                                       k_scale=cache.k_scale,
                                       v_scale=cache.v_scale)
         else:

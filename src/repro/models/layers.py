@@ -57,6 +57,31 @@ def rmsnorm(x, weight, eps: float = 1e-5, env: AxisEnv | None = None,
     return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
 
 
+def rmsnorm_dequant(x, images, scales, weight, eps: float = 1e-5,
+                    use_pallas: bool = False):
+    """RMSNorm of ``x + sum_j dequant(images[j])`` — the fused consumer of a
+    deferred int8 AllReduce (parallel/overlap.PendingResidual).
+
+    The jnp path below is the bit-level oracle for the Pallas kernel
+    (kernels/rmsnorm.rmsnorm_dequant): same f32 source-ordered
+    dequant-accumulate, same norm math on the UN-downcast f32 sum — so
+    under jit (how the engines run both paths) ``use_pallas`` on/off
+    emit bit-identical activations and the serving engines' token
+    streams match (tests/test_autotune.py pins it; eagerly the separate
+    mul+add rounds twice where XLA fuses one FMA — 1-ulp slack).
+    """
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.rmsnorm_dequant(x, images, scales, weight, eps=eps)
+    acc = x.astype(jnp.float32)
+    for j in range(images.shape[0]):
+        acc = acc + images[j].astype(jnp.float32) * \
+            scales[j].astype(jnp.float32)[..., None]
+    var = jnp.mean(acc * acc, axis=-1, keepdims=True)
+    y = acc * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
 def init_rmsnorm(d: int, dtype):
     # stored as (weight - 1) like gemma/llama "zero-centered" convention
     return jnp.zeros((d,), dtype)

@@ -25,7 +25,8 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (embed_init, init_mlp, init_rmsnorm,
-                                 lm_head_logits, mlp, rmsnorm, embed_lookup)
+                                 lm_head_logits, mlp, rmsnorm,
+                                 rmsnorm_dequant, embed_lookup)
 from repro.parallel.collectives import AxisEnv
 
 VOCAB_ALIGN = 2048  # pad vocab so every TP degree up to 16 divides evenly
@@ -256,6 +257,7 @@ class FwdCtx:
     enc_out: Optional[jnp.ndarray] = None
     enc_mask: Optional[jnp.ndarray] = None
     block_tables: Optional[jnp.ndarray] = None   # paged serving (B, blocks)
+    attn_tune: Optional[tuple] = None   # (phase, occ bucket) tuning-table key
 
 
 def _make_subblock_fn(ctx: FwdCtx, sub: str, slot: str, shared_params=None):
@@ -264,6 +266,13 @@ def _make_subblock_fn(ctx: FwdCtx, sub: str, slot: str, shared_params=None):
     pallas = cfg.use_pallas
 
     def norm_in(p, x):
+        if isinstance(x, topo.FusedNormInput):
+            # fuse_norm ladder input: the pending AllReduce is still int8
+            # images — dequant-accumulate them inside the norm pass
+            # (models/layers.rmsnorm_dequant; Pallas kernel when enabled)
+            return rmsnorm_dequant(x.base, x.pending.images,
+                                   x.pending.scales, p["norm"], eps,
+                                   use_pallas=pallas)
         return rmsnorm(x, p["norm"], eps, use_pallas=pallas)
 
     if sub in ("attn", "local_attn", "enc_attn", "shared_attn"):
@@ -285,7 +294,8 @@ def _make_subblock_fn(ctx: FwdCtx, sub: str, slot: str, shared_params=None):
                 p, h, ctx.positions, env, head_dim=cfg.head_dim,
                 rope_theta=cfg.rope_theta, window=window,
                 softcap=cfg.attn_logit_softcap, use_pallas=pallas,
-                cache=state, block_tables=ctx.block_tables)
+                cache=state, block_tables=ctx.block_tables,
+                attn_tune=ctx.attn_tune)
             return out, new_cache, jnp.zeros((), jnp.float32)
         return fn
 
@@ -460,14 +470,14 @@ def run_stack(ctx: FwdCtx, sections_params, x, *, caches=None,
     remat = cfg.remat if ctx.train else "none"
 
     mode0 = plans[0].mode
-    carry = topo.init_carry(mode0, x)
+    carry = topo.init_carry(mode0, x, env)
     new_caches = []
     prev_mode = mode0
     for sec_i, (plan, sec_params) in enumerate(zip(plans, sections_params)):
         if plan.mode != prev_mode:
             # topology change (hybrid adaptation): flush pendings, restart
             r, aux = topo.finalize_carry(prev_mode, carry, env)
-            carry = topo.init_carry(plan.mode, r)
+            carry = topo.init_carry(plan.mode, r, env)
             carry.aux = carry.aux + aux
             prev_mode = plan.mode
         fns = _section_fns(ctx, plan, shared_params)
@@ -518,12 +528,14 @@ def encode(cfg: ModelConfig, params, frames, env: AxisEnv, train=False):
 def forward(cfg: ModelConfig, params, tokens, env: AxisEnv, *,
             positions=None, caches=None, frontend_embeds=None,
             train: bool = False, section_gathers=None,
-            unroll: bool = False, block_tables=None):
+            unroll: bool = False, block_tables=None, attn_tune=None):
     """Decoder forward.  Returns (hidden, new_caches, aux_loss).
 
     caches: list per section of per-group-stacked state pytrees (or None).
     block_tables: (B, max_blocks) physical block ids when `caches` holds
     PagedKVCache pools (paged serving).
+    attn_tune: optional static (phase, occupancy bucket) key into the
+    paged-kernel tuning table (kernels/autotune.py).
     """
     enc_out = enc_mask = None
     aux0 = jnp.zeros((), jnp.float32)
@@ -544,7 +556,7 @@ def forward(cfg: ModelConfig, params, tokens, env: AxisEnv, *,
 
     ctx = FwdCtx(cfg=cfg, env=env, positions=positions, train=train,
                  enc_out=enc_out, enc_mask=enc_mask,
-                 block_tables=block_tables)
+                 block_tables=block_tables, attn_tune=attn_tune)
     hidden, new_caches, aux = run_stack(
         ctx, params["sections"], x,
         caches=list(caches) if caches is not None else None,

@@ -27,8 +27,11 @@ from repro.parallel.overlap import (  # noqa: F401  (re-exported seam types)
     COMM_MODES,
     SYNC,
     CommConfig,
+    PendingResidual,
     compressed_ring_all_reduce,
+    local_block_images,
     ring_all_reduce,
+    ring_block_images,
 )
 
 
@@ -107,6 +110,22 @@ class AxisEnv:
                 x, self.model, chunks=self.comm.chunks
             )
         return jax.lax.psum(x, self.model)
+
+    def ring_block_output_images(self, x) -> PendingResidual:
+        """Deferred block-output AllReduce (``comm.fuse_norm``): the int8
+        ring delivers the source-ordered per-shard image stack
+        (:class:`~repro.parallel.overlap.PendingResidual`) and the
+        dequant-sum is left to the consumer — the ladder topology's next
+        sub-block, whose RMSNorm fuses it (kernels/rmsnorm.rmsnorm_dequant).
+
+        Only the LADDER wiring calls this (core/residual.py): a deferred
+        pending IS what a ladder carry holds, whereas the standard topology
+        consumes the reduction immediately.  Unsharded is NOT the identity:
+        the shard's own partial still quantizes into a one-source stack, so
+        TP=1 exercises the same deferred-dequant numerics as the ring."""
+        if not self.model:
+            return local_block_images(x)
+        return ring_block_images(x, self.model, chunks=self.comm.chunks)
 
     def pmax_model(self, x):
         """Differentiation-safe max over the model axis (pmax lacks a JVP

@@ -41,7 +41,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.quant import dequantize_int8, quantize_int8
+from repro.quant import dequantize_int8, dequantize_kv, quantize_int8, \
+    quantize_kv
 
 #: Valid values for :attr:`CommConfig.mode`, in dispatch order.
 COMM_MODES = ("sync", "overlap", "compressed")
@@ -60,10 +61,20 @@ class CommConfig:
         ``compressed``  int8-on-wire ring (:func:`compressed_ring_all_reduce`)
     chunks
         ring chunk count; clamped to the element count per call site.
+    fuse_norm
+        defer the int8 wire's dequant-sum into the NEXT sub-block's RMSNorm
+        (kernels/rmsnorm.rmsnorm_dequant): the ring delivers per-source
+        quantized images (:func:`ring_block_images`) instead of a summed
+        f32 activation, and the pre-norm read streams int8 instead of
+        round-tripping f32 through HBM.  Requires ``mode="compressed"``
+        (the images ARE the compressed wire format) and only engages on
+        the ladder topology (the deferred pending is what a ladder carry
+        already is; core/residual.py).
     """
 
     mode: str = "sync"
     chunks: int = 4
+    fuse_norm: bool = False
 
     def __post_init__(self):
         if self.mode not in COMM_MODES:
@@ -72,6 +83,10 @@ class CommConfig:
             )
         if self.chunks < 1:
             raise ValueError(f"comm chunks must be >= 1, got {self.chunks}")
+        if self.fuse_norm and self.mode != "compressed":
+            raise ValueError(
+                "fuse_norm defers the int8 wire's dequant-sum into the next "
+                "norm; it requires mode='compressed'")
 
 
 #: Default configuration: the pre-existing synchronous psum behaviour.
@@ -202,6 +217,80 @@ def compressed_ring_all_reduce(x, axis_name, *, chunks: int = 4):
     return jnp.concatenate(pieces).reshape(x.shape).astype(orig_dtype)
 
 
+# ---- deferred (fused-norm) wire format ------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PendingResidual:
+    """A block-output AllReduce whose dequant-sum has NOT happened yet.
+
+    The int8 wire format of :func:`compressed_ring_all_reduce`, kept as the
+    per-source image stack instead of being summed on arrival: ``images``
+    is ``(tp, ..., D)`` int8, ``scales`` ``(tp, ...)`` f32 — per-ROW
+    symmetric quantization (:func:`repro.quant.quantize_kv` layout, one
+    scale per (source, row)), so the ring's row-chunking never splits a
+    quantization group.  Source-ordered like every ring in this module:
+    every shard holds bit-identical stacks, so any shard's materialization
+    (or fused-norm read) of the pending is bit-identical too.
+
+    Consumed two ways, both summing sources left-to-right in f32:
+    :meth:`materialize` (the jnp path — the ladder carry's residual
+    update), and fused into the next sub-block's RMSNorm
+    (kernels/rmsnorm.rmsnorm_dequant) so the pre-norm read streams int8.
+    """
+
+    images: jnp.ndarray   # (tp, ..., D) int8 per-source quantized images
+    scales: jnp.ndarray   # (tp, ...)    f32 per-(source, row) scales
+
+    def materialize(self, base):
+        """``base + sum_j dequant(images[j])`` — f32 accumulation in source
+        order (the association the fused kernel replays bit-for-bit)."""
+        acc = base.astype(jnp.float32)
+        for j in range(self.images.shape[0]):
+            acc = acc + dequantize_kv(self.images[j], self.scales[j])
+        return acc.astype(base.dtype)
+
+
+def local_block_images(x) -> PendingResidual:
+    """tp=1 degenerate of :func:`ring_block_images`: quantize the shard's
+    OWN partial as a one-source stack.  Not the identity on purpose — the
+    unsharded path exercises the same quantize -> deferred-dequant math the
+    ring produces, so TP=1 tests pin the fused-norm numerics."""
+    q, scale = quantize_kv(x)
+    return PendingResidual(images=q[None], scales=scale[None])
+
+
+def ring_block_images(x, axis_name, *, chunks: int = 4) -> PendingResidual:
+    """Deferred AllReduce: rotate per-row int8 images around the ring and
+    return the source-ordered stack WITHOUT summing.
+
+    x: ``(..., D)`` partial block output.  Each shard quantizes per row
+    (one scale per leading index, :func:`repro.quant.quantize_kv`), the
+    ring moves ``(q, scale)`` pairs in row-aligned chunks (chunk ``k+1``'s
+    hops pipeline under chunk ``k``'s consumer exactly like
+    :func:`compressed_ring_all_reduce`), and the dequant-sum is left to the
+    consumer — the next sub-block's fused RMSNorm on the serving decode
+    path (DESIGN.md §Communication overlap).
+    """
+    tp = _static_axis_size(axis_name)
+    lead, d = x.shape[:-1], x.shape[-1]
+    q, scale = quantize_kv(x)
+    q2, s2 = q.reshape(-1, d), scale.reshape(-1)
+    if tp == 1:
+        qs, ss = q2[None], s2[None]
+    else:
+        qp, sp = [], []
+        for start, size in chunk_bounds(q2.shape[0], chunks):
+            qp.append(_ring_contributions(q2[start:start + size],
+                                          axis_name, tp))
+            sp.append(_ring_contributions(s2[start:start + size],
+                                          axis_name, tp))
+        qs = jnp.concatenate(qp, axis=1)
+        ss = jnp.concatenate(sp, axis=1)
+    return PendingResidual(images=qs.reshape(tp, *lead, d),
+                           scales=ss.reshape(tp, *lead))
+
+
 # ---- host-side simulators (fast-tier oracles) -----------------------------
 
 def _simulated_contributions(flat, i, start, size, tp):
@@ -230,6 +319,17 @@ def simulate_ring_all_reduce(shards, *, chunks: int = 4):
             pieces.append(_ordered_sum(contribs))
         outs.append(jnp.concatenate(pieces))
     return jnp.stack(outs).reshape(shards.shape)
+
+
+def simulate_ring_block_images(shards) -> PendingResidual:
+    """Host-side mirror of :func:`ring_block_images` over a ``(tp, ..., D)``
+    stack of shard partials.  Source ordering makes every shard's stacks
+    identical, so the simulated result is simply each shard's own
+    quantized image stacked in source order — the oracle the distributed
+    suite checks the device ring against."""
+    shards = jnp.asarray(shards)
+    q, scale = quantize_kv(shards)
+    return PendingResidual(images=q, scales=scale)
 
 
 def simulate_compressed_all_reduce(shards, *, chunks: int = 4):

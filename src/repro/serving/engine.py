@@ -354,7 +354,8 @@ def build_continuous_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
 def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
                       batch_slots: int, rng_seed: int = 0,
                       use_pallas: Optional[bool] = None,
-                      comm: Optional[CommConfig] = None):
+                      comm: Optional[CommConfig] = None,
+                      tuned: bool = True, max_blocks: int = 0):
     """Steps for the paged-KV serving engine (block-pool caches; see
     serving/scheduler.PagedScheduler for the host-side block management).
 
@@ -411,12 +412,30 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
     Sampling keys fold (request seed, absolute position) exactly like the
     ragged engine, so paged and ragged serving emit identical tokens — and
     speculative verification emits identical tokens to step-by-step decode.
+
+    tuned/max_blocks: when ``tuned`` and ``max_blocks > 0``, each step keys
+    the Pallas kernel's launch geometry into the committed tuning table
+    (kernels/autotune.py) by its phase and the trace-time occupancy bucket
+    ``bt_width / max_blocks`` — the table-width bucketing above makes the
+    (phase, bucket) pair static per jit variant.  Token streams are
+    bit-identical tuned-on vs tuned-off (split-K and Q-tiling are
+    numerics-preserving; distributed suite group ``serve_tuned``).
     """
     if use_pallas is not None and use_pallas != cfg.use_pallas:
         cfg = cfg.replace(use_pallas=use_pallas)
     env = make_axis_env(pcfg, comm=comm)
     pspecs = sharding.param_pspecs(tfm.param_specs(cfg))
     base_key = jax.random.key(rng_seed)
+
+    def _tune(phase, bt):
+        # trace-time: bt.shape is static, so the (phase, occ-bucket) pair is
+        # a static jit-cache key; ops.paged_attention resolves it against
+        # the tuning table (deterministic fallback on a missing key)
+        if not (tuned and max_blocks > 0 and cfg.use_pallas):
+            return None
+        from repro.kernels.autotune import occupancy_bucket
+        occ = float(occupancy_bucket(bt.shape[-1] / max_blocks))
+        return (phase, occ)
 
     def _sample(params, hidden_last, keys, temp, top_k, top_p):
         logits = tfm.logits_shard(cfg, params, hidden_last)
@@ -430,7 +449,8 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
         positions = jnp.where(ar < length, start + ar, -1)[None]     # (1, C)
         hidden, caches, _ = tfm.forward(cfg, params, tokens, env,
                                         positions=positions, caches=caches,
-                                        block_tables=bt)
+                                        block_tables=bt,
+                                        attn_tune=_tune("prefill", bt))
         h_last = jax.lax.dynamic_slice_in_dim(hidden, length - 1, 1, axis=1)
         keys = sampler.request_keys(base_key, seed, (start + length)[None])
         tok = _sample(params, h_last, keys, temp, top_k, top_p)
@@ -440,7 +460,8 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
         positions = jnp.where(active, pos, -1)[:, None]              # (B, 1)
         hidden, caches, _ = tfm.forward(cfg, params, tokens[:, None], env,
                                         positions=positions, caches=caches,
-                                        unroll=True, block_tables=bts)
+                                        unroll=True, block_tables=bts,
+                                        attn_tune=_tune("decode", bts))
         return hidden, caches
 
     def decode(params, caches, tokens, pos, active, bts, temp, top_k, top_p,
@@ -470,7 +491,8 @@ def build_paged_steps(cfg: ModelConfig, pcfg: ParallelConfig, *,
                               pos[:, None] + ar, -1)          # (B, K1)
         hidden, caches, _ = tfm.forward(cfg, params, tokens, env,
                                         positions=positions, caches=caches,
-                                        block_tables=bts)
+                                        block_tables=bts,
+                                        attn_tune=_tune("verify", bts))
         return hidden, caches
 
     def verify(params, caches, tokens, pos, active, klen, bts, temp, top_k,

@@ -775,7 +775,8 @@ class PagedServingEngine(_ServingEngineBase):
                  use_pallas: Optional[bool] = None, kv_quant: str = "fp",
                  oversubscribe: float = 1.0, swap_blocks: int = 0,
                  comm_overlap: bool = False, comm_quant: bool = False,
-                 comm_chunks: int = 4):
+                 comm_chunks: int = 4, comm_fuse_norm: bool = False,
+                 tuned: bool = True):
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -843,17 +844,29 @@ class PagedServingEngine(_ServingEngineBase):
 
         # TP comm mode for the jitted steps (parallel/overlap.py):
         # --comm-quant implies the ring (the int8 wire IS a ring format),
-        # so it wins over plain --comm-overlap.
+        # so it wins over plain --comm-overlap; --comm-fuse-norm implies
+        # the int8 wire (the deferred images ARE its format) and
+        # additionally defers the dequant-sum into the next sub-block's
+        # RMSNorm — a ladder-only schedule, since only the ladder carries
+        # an unconsumed pending across a sub-block (core/residual.py).
+        from repro.configs.base import ResidualMode
         from repro.parallel.collectives import CommConfig
+        if comm_fuse_norm and cfg.residual_mode != ResidualMode.LADDER:
+            raise NotImplementedError(
+                "comm_fuse_norm rides the ladder topology's deferred "
+                f"pending; residual_mode={cfg.residual_mode} keeps the "
+                "AllReduce on the critical path with nothing to defer")
         self.comm = CommConfig(
-            mode=("compressed" if comm_quant
+            mode=("compressed" if comm_quant or comm_fuse_norm
                   else "overlap" if comm_overlap else "sync"),
-            chunks=comm_chunks)
+            chunks=comm_chunks, fuse_norm=comm_fuse_norm)
         steps = engine_mod.build_paged_steps(cfg, pcfg,
                                              batch_slots=batch_slots,
                                              rng_seed=rng_seed,
                                              use_pallas=use_pallas,
-                                             comm=self.comm)
+                                             comm=self.comm,
+                                             tuned=tuned,
+                                             max_blocks=self.max_blocks)
         self.caches, cache_specs = engine_mod.build_caches(
             cfg, batch_slots, s_max, pcfg, for_decode=False, paged=True,
             num_blocks=self.num_blocks, block_size=block_size,

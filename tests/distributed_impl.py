@@ -724,6 +724,78 @@ def serve_comm_tp():
             check(f"serve_comm {mode} spec rid={rid}", toks == got_on[rid])
 
 
+def serve_tuned_tp():
+    """Kernel-tuning dispatch on a real TP=2 mesh: the tuned launch
+    geometry (kernels/autotune.py via engine.build_paged_steps's static
+    (phase, occupancy-bucket) key) only re-tiles the SAME f32 online-
+    softmax accumulation, so a tuned-on engine must stream bit-identical
+    tokens to tuned-off for every residual mode — plain decode, chunked
+    prefill and speculative K+1 verify.  Ladder additionally checks the
+    fused dequant+RMSNorm consumer (comm_fuse_norm): the Pallas kernel
+    against its jnp oracle, token-for-token."""
+    from repro.serving.scheduler import (PagedServingEngine, Request,
+                                         SamplingParams)
+    from repro.serving.speculative import SpeculativePagedEngine
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 256, 16).tolist()
+    reqs = [Request(rid=i,
+                    prompt=(shared if i != 1 else []) +
+                    rng.integers(0, 256, lp).tolist(),
+                    max_new_tokens=g, sampling=s)
+            for i, (lp, g, s) in enumerate([
+                (5, 6, SamplingParams()),
+                (11, 4, SamplingParams(temperature=0.7, top_k=12, seed=3)),
+                (7, 5, SamplingParams(temperature=1.0, top_p=0.9, seed=8))])]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+
+    def run(engine):
+        for r in reqs:
+            engine.submit(clone(r))
+        return {rid: f.tokens for rid, f in engine.run().items()}
+
+    pcfg = ParallelConfig(tp=2, dp=1)
+    mesh2 = compat.make_mesh((2,), ("model",))
+    for mode in ("standard", "ladder", "desync2"):
+        cfg = _cfg("stablelm-3b", mode, d_model=64, n_heads=4, d_ff=128,
+                   vocab_size=256)
+        params = tfm.init_params(cfg, jax.random.key(0))
+        p2, _ = sharding.prepare_params_for_tp(params, cfg, pcfg.tp)
+        kw = dict(batch_slots=2, s_max=48, block_size=8,
+                  max_prefill_tokens=16, pcfg=pcfg, mesh=mesh2,
+                  use_pallas=True)
+
+        off = run(PagedServingEngine(cfg, p2, tuned=False, **kw))
+        on = run(PagedServingEngine(cfg, p2, tuned=True, **kw))
+        for rid, toks in off.items():
+            check(f"serve_tuned {mode} rid={rid}", toks == on[rid])
+
+        spec_off = run(SpeculativePagedEngine(cfg, p2, spec_mode="ngram",
+                                              spec_k=3, tuned=False, **kw))
+        eng = SpeculativePagedEngine(cfg, p2, spec_mode="ngram", spec_k=3,
+                                     tuned=True, **kw)
+        spec_on = run(eng)
+        check(f"serve_tuned {mode} spec verified",
+              eng.stats()["verify_forwards"] > 0)
+        for rid, toks in spec_off.items():
+            check(f"serve_tuned {mode} spec rid={rid}",
+                  toks == spec_on[rid])
+
+        if mode == "ladder":
+            # fused dequant+RMSNorm: Pallas kernel vs jnp oracle over the
+            # SAME deferred int8 pending images — bit-identical tokens
+            fkw = dict(kw, comm_fuse_norm=True)
+            jnp_norm = run(PagedServingEngine(
+                cfg, p2, **dict(fkw, use_pallas=False)))
+            pal_norm = run(PagedServingEngine(cfg, p2, **fkw))
+            for rid, toks in jnp_norm.items():
+                check(f"serve_tuned fuse_norm rid={rid}",
+                      toks == pal_norm[rid])
+
+
 CHECKS = dict(tp=tp_equivalence, fsdp=fsdp_equivalence,
               zero1=zero1_equivalence, sp=sp_equivalence,
               padded=padded_heads, flashdec=flash_decode_seq_sharded,
@@ -731,7 +803,7 @@ CHECKS = dict(tp=tp_equivalence, fsdp=fsdp_equivalence,
               q8=q8_weight_gather, serve_cb=serve_continuous_batching,
               serve_paged=serve_paged_tp, serve_spec=serve_spec_tp,
               serve_kernel=serve_kernel_tp, serve_memory=serve_memory_tp,
-              serve_comm=serve_comm_tp)
+              serve_comm=serve_comm_tp, serve_tuned=serve_tuned_tp)
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"

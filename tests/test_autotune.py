@@ -1,0 +1,469 @@
+"""Kernel autotuner + ragged prefill + fused-norm tests (DESIGN.md
+§Kernel autotuner).
+
+Layers, bottom-up:
+
+* table plumbing — round-trip through ``save_table``/``load_table``,
+  schema rejection (including a persisted entry that beats the roofline
+  bound — measurement noise must never be committed as a tuning), and the
+  deterministic fallback: a missing key/arch/table resolves to the same
+  config tuned-off uses, so a deleted table can change speed but never
+  tokens.
+* sweep mechanics — roofline rejection drops too-fast-to-be-true
+  measurements before the argmin; a sweep whose every candidate is
+  rejected still emits the deterministic default.
+* ragged prefill / append kernel vs the gather oracle — the q-tiled mode
+  chunked prefill and speculative verify dispatch through, swept over
+  chunk-vs-block-boundary misalignment, GQA, int8 pools, and
+  poisoned-pool isolation; q_tile is output-invariant (it only re-tiles
+  the same per-query online softmax).
+* fused dequant+RMSNorm — Pallas kernel vs jnp oracle is bit-identical,
+  and a ladder paged engine with ``comm_fuse_norm`` streams the same
+  tokens either way (the TP=2 group lives in tests/distributed_impl.py:
+  ``serve_tuned``).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, ResidualMode
+from repro.kernels import autotune, ops
+from repro.kernels.paged_attention import paged_attention, prefill_kernel_blocks
+from repro.models import transformer as tfm
+from repro.models.attention import _cached_attention
+from repro.models.layers import rmsnorm_dequant
+from repro.parallel.collectives import NULL_ENV
+from repro.quant import dequantize_kv, quantize_kv
+from repro.serving.kv_cache import PagedKVCache, paged_view
+from repro.serving.scheduler import PagedServingEngine, Request, SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# table round-trip, schema, deterministic fallback
+# ---------------------------------------------------------------------------
+
+
+def _entry(block_size=8, num_splits=2, q_tile=0, tuned_us=10.0, default_us=12.0,
+           bound_us=1.0):
+    return dict(block_size=block_size, num_splits=num_splits, q_tile=q_tile,
+                tuned_us=tuned_us, default_us=default_us, bound_us=bound_us)
+
+
+def _table(entries):
+    return dict(version=autotune.TABLE_VERSION, arch="test", entries=entries)
+
+
+def test_table_round_trip(tmp_path):
+    path = tmp_path / "tuning.json"
+    table = _table({autotune.entry_key("test", "decode", 0.25): _entry()})
+    autotune.save_table(table, path)
+    assert autotune.load_table(path) == table
+    cfg = autotune.get_config("decode", 0.25, table=table, arch="test")
+    assert (cfg.num_splits, cfg.q_tile) == (2, 0)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda t: t.update(version=99),
+        lambda t: t.pop("entries"),
+        lambda t: t["entries"].update({"no-phase-key": _entry()}),
+        lambda t: t["entries"].update(
+            {"test/warmup/occ1.0": _entry()}),  # unknown phase
+        lambda t: t["entries"]["test/decode/occ0.25"].update(
+            num_splits="two"),
+        lambda t: t["entries"]["test/decode/occ0.25"].update(
+            tuned_us=15.0),  # slower than default: sweep bug
+        lambda t: t["entries"]["test/decode/occ0.25"].update(
+            tuned_us=0.5),  # beats roofline bound: committed noise
+    ],
+)
+def test_schema_rejection(tmp_path, mutate):
+    table = _table({autotune.entry_key("test", "decode", 0.25): _entry()})
+    mutate(table)
+    with pytest.raises(ValueError):
+        autotune.validate_table(table)
+    # strict load refuses the same table; lenient load treats it as absent
+    path = tmp_path / "bad.json"
+    path.write_text(__import__("json").dumps(table))
+    with pytest.raises(ValueError):
+        autotune.load_table(path)
+    assert autotune.load_table(path, strict=False) == {}
+
+
+def test_deterministic_fallback():
+    default = autotune.default_config("decode")
+    # empty table, missing key, and foreign arch all resolve identically
+    assert autotune.get_config("decode", 1.0, table={}) == default
+    table = _table({autotune.entry_key("test", "decode", 0.25): _entry()})
+    assert autotune.get_config("decode", 1.0, table=table,
+                               arch="test") == default
+    assert autotune.get_config("decode", 0.25, table=table,
+                               arch="other-arch") == default
+    with pytest.raises(ValueError):
+        autotune.get_config("warmup", 1.0, table=table)
+    with pytest.raises(ValueError):
+        autotune.default_config("warmup")
+
+
+def test_occupancy_bucket_snaps_up():
+    assert autotune.occupancy_bucket(0.01) == "0.125"
+    assert autotune.occupancy_bucket(0.125) == "0.125"
+    assert autotune.occupancy_bucket(0.3) == "0.5"
+    assert autotune.occupancy_bucket(1.0) == "1.0"
+    assert autotune.occupancy_bucket(2.0) == "1.0"
+    # the bucket IS the table key suffix the engine's static tune key uses
+    assert autotune.entry_key("a", "decode", 0.3) == "a/decode/occ0.5"
+
+
+# ---------------------------------------------------------------------------
+# sweep mechanics (patched clock — no real timing in the fast tier)
+# ---------------------------------------------------------------------------
+
+_TINY = dict(block_sizes=(4,), rows=1, hkv=1, group=1, hd=8, max_blocks=2,
+             iters=1, arch="test", interpret=True, verbose=False)
+
+
+def test_sweep_rejects_sub_roofline_noise(monkeypatch):
+    """A clock reporting impossibly fast times (below the bytes/FLOPs
+    bound) must not elect a winner: every cell keeps the deterministic
+    default and the table still validates."""
+    monkeypatch.setattr(autotune, "_time_fn", lambda *a, **k: 0.0)
+    table = autotune.sweep(**_TINY)
+    autotune.validate_table(table)
+    assert len(table["entries"]) == len(autotune.PHASES) * len(
+        autotune.OCC_BUCKETS)
+    for e in table["entries"].values():
+        assert (e["num_splits"], e["q_tile"]) == (0, 0)
+        assert e["tuned_us"] == e["default_us"]
+
+
+def test_sweep_elects_measured_winner(monkeypatch):
+    """With a deterministic decreasing clock the LAST candidate measured
+    wins each cell, and tuned_us <= default_us holds on every entry by
+    construction (the default is always a candidate).  The confirmation
+    re-measure is pinned to uphold each win so the election logic is what
+    is under test."""
+    clock = iter(range(10**6, 0, -1))
+    monkeypatch.setattr(autotune, "_time_fn",
+                        lambda *a, **k: next(clock) * 1e-6)
+    monkeypatch.setattr(
+        autotune, "_measure_cfg",
+        lambda phase, occ, cfg, **kw:
+            1.0 if (cfg.num_splits, cfg.q_tile) != (0, 0) else 2.0)
+    table = autotune.sweep(**_TINY)
+    autotune.validate_table(table)  # includes tuned_us <= default_us
+    assert any(e["num_splits"] > 0 or e["q_tile"] > 0
+               for e in table["entries"].values())
+
+
+def test_sweep_confirmation_rejects_noise_win(monkeypatch):
+    """A candidate that wins the argmin but cannot reproduce its win in
+    the head-to-head confirmation is discarded: the cell keeps the
+    deterministic default (argmin winner's-curse guard)."""
+    clock = iter(range(10**6, 0, -1))
+    monkeypatch.setattr(autotune, "_time_fn",
+                        lambda *a, **k: next(clock) * 1e-6)
+    # confirmation: every geometry measures identically -> no win survives
+    monkeypatch.setattr(autotune, "_measure_cfg",
+                        lambda phase, occ, cfg, **kw: 5.0)
+    table = autotune.sweep(**_TINY)
+    autotune.validate_table(table)
+    assert all((e["num_splits"], e["q_tile"]) == (0, 0)
+               for e in table["entries"].values())
+
+
+def test_check_regression_head_to_head(monkeypatch):
+    """The nightly gate re-measures the committed geometry vs the default
+    on this host and fails only when the tuned choice actually loses by
+    more than the tolerance — never by comparing absolute times across
+    runs (different hosts, and the committed argmin is biased low)."""
+    key = autotune.entry_key("test", "decode", 0.25)
+    committed = _table({key: _entry(num_splits=2)})
+    times = {2: 10.0, 0: 12.0}  # tuned (splits=2) beats default (splits=0)
+    monkeypatch.setattr(
+        autotune, "_measure_cfg",
+        lambda phase, occ, cfg, **kw: times[cfg.num_splits])
+    assert autotune.check_regression(committed) == 0
+    times[2] = 14.0  # tuned now loses to the default by > 10%
+    assert autotune.check_regression(committed) == 1
+    times[2] = 13.0  # loses, but within the 10% tolerance
+    assert autotune.check_regression(committed) == 0
+    # a cell whose committed geometry IS the default passes without
+    # measuring at all (it cannot lose to itself)
+    monkeypatch.setattr(autotune, "_measure_cfg",
+                        lambda *a, **kw: pytest.fail("measured default"))
+    plain = _table({key: _entry(num_splits=0, q_tile=0)})
+    assert autotune.check_regression(plain) == 0
+
+
+# ---------------------------------------------------------------------------
+# ragged prefill/append: q-tiled kernel vs the gather oracle
+# ---------------------------------------------------------------------------
+
+
+def _prefill_case(seed, kv_lens, chunk, hkv, g, hd, bs, max_blocks):
+    """Each row appends a `chunk`-query tail ending at its kv_len, through
+    a per-row permuted block table sliced to the live width."""
+    b = len(kv_lens)
+    hq = hkv * g
+    key = jax.random.key(seed)
+    q = jax.random.normal(key, (b, chunk, hq, hd), jnp.float32)
+    num_blocks = b * max_blocks
+    k = jax.random.normal(
+        jax.random.fold_in(key, 1), (hkv, num_blocks * bs, hd), jnp.float32
+    )
+    v = jax.random.normal(
+        jax.random.fold_in(key, 2), (hkv, num_blocks * bs, hd), jnp.float32
+    )
+    rng = np.random.default_rng(seed)
+    # one permutation across rows: tables are disjoint, so poisoning one
+    # row's tail blocks can never alias another row's live blocks
+    bt = rng.permutation(num_blocks).reshape(b, max_blocks)
+    w = max(-(-kv // bs) for kv in kv_lens)
+    qpos = jnp.asarray(
+        [[kv - chunk + i for i in range(chunk)] for kv in kv_lens], jnp.int32
+    )
+    return q, k, v, jnp.asarray(bt[:, :w], jnp.int32), qpos
+
+
+def _oracle(q, k, v, bt, qpos, *, scale, bs):
+    cache = PagedKVCache(k=k, v=v, block_size=bs)
+    view = paged_view(cache, bt)
+    return _cached_attention(q * scale, view, qpos, NULL_ENV, softcap=0.0)
+
+
+@pytest.mark.parametrize(
+    "bs,g,chunk,q_tile",
+    [
+        (8, 1, 5, 2),  # chunk < block, tile straddles nothing
+        (8, 2, 11, 4),  # GQA; chunk crosses a block boundary mid-tile
+        (4, 2, 8, 3),  # tile size not a divisor of the chunk (ragged tail)
+        (16, 1, 6, 6),  # one tile == whole chunk, big blocks
+    ],
+)
+def test_prefill_kernel_matches_gather_oracle(bs, g, chunk, q_tile):
+    hkv, hd, max_blocks = 2, 32, 8
+    kv_lens = [max_blocks * bs, chunk + bs + 1, chunk]  # ragged histories
+    q, k, v, bt, qpos = _prefill_case(0, kv_lens, chunk, hkv, g, hd, bs,
+                                      max_blocks)
+    scale = hd**-0.5
+    got = paged_attention(q, k, v, bt, qpos, scale=scale, block_size=bs,
+                          q_tile=q_tile, interpret=True)
+    want = _oracle(q, k, v, bt, qpos, scale=scale, bs=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_prefill_q_tile_invariance():
+    """q_tile only re-tiles the grid: every query still runs the same
+    f32 online softmax over the same blocks in the same order, so the
+    output is invariant to the tile size (what makes tuned dispatch
+    token-preserving in the engine)."""
+    bs, hkv, g, hd, max_blocks, chunk = 8, 2, 2, 32, 8, 12
+    kv_lens = [max_blocks * bs, chunk + 3]
+    q, k, v, bt, qpos = _prefill_case(1, kv_lens, chunk, hkv, g, hd, bs,
+                                      max_blocks)
+    outs = [
+        paged_attention(q, k, v, bt, qpos, scale=hd**-0.5, block_size=bs,
+                        q_tile=qt, interpret=True)
+        for qt in (0, 1, 3, 4, chunk)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_prefill_kernel_int8_pool():
+    """The q-tiled walk over an int8 pool dequantizes in VMEM to exactly
+    the values the oracle sees on the host-dequantized pool."""
+    bs, hkv, g, hd, max_blocks, chunk, q_tile = 8, 2, 2, 32, 8, 9, 4
+    kv_lens = [max_blocks * bs, chunk + 2]
+    q, k, v, bt, qpos = _prefill_case(2, kv_lens, chunk, hkv, g, hd, bs,
+                                      max_blocks)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    got = paged_attention(q, k8, v8, bt, qpos, scale=hd**-0.5, block_size=bs,
+                          q_tile=q_tile, k_scale=ks, v_scale=vs,
+                          interpret=True)
+    want = _oracle(q, dequantize_kv(k8, ks), dequantize_kv(v8, vs), bt, qpos,
+                   scale=hd**-0.5, bs=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_prefill_kernel_poisoned_pool_isolation():
+    """NaNs in blocks past each row's causal extent (but inside the table
+    width) never reach the q-tiled walk: each tile's ragged early exit
+    stops at its own extent, so the output is bit-identical to the clean
+    pool's."""
+    bs, hkv, g, hd, max_blocks, chunk, q_tile = 4, 1, 2, 16, 8, 6, 2
+    kv_lens = [max_blocks * bs, 7]  # row 1 uses 2 of the 8-wide table
+    q, k, v, bt, qpos = _prefill_case(3, kv_lens, chunk, hkv, g, hd, bs,
+                                      max_blocks)
+    ref = paged_attention(q, k, v, bt, qpos, scale=hd**-0.5, block_size=bs,
+                          q_tile=q_tile, interpret=True)
+    poison_k, poison_v = np.array(k), np.array(v)
+    for row, kv in enumerate(kv_lens):
+        for blk in np.asarray(bt)[row, -(-kv // bs):]:
+            poison_k[:, blk * bs:(blk + 1) * bs] = np.nan
+            poison_v[:, blk * bs:(blk + 1) * bs] = np.nan
+    got = paged_attention(q, jnp.asarray(poison_k), jnp.asarray(poison_v),
+                          bt, qpos, scale=hd**-0.5, block_size=bs,
+                          q_tile=q_tile, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_prefill_kernel_blocks_model():
+    """The analytical prefill bytes model kernel_bench gates: q_tile=0
+    reads each block exactly once; smaller tiles re-stream early blocks
+    but stop at their OWN extent, so the count stays below tiles * full."""
+    bs, chunk, kv = 8, 16, 64
+    assert prefill_kernel_blocks(kv, chunk, 0, bs) == -(-kv // bs)
+    tiled = prefill_kernel_blocks(kv, chunk, 4, bs)
+    assert -(-kv // bs) < tiled < 4 * -(-kv // bs)
+    # append of 1 token (decode shape) degenerates to the decode model
+    assert prefill_kernel_blocks(kv, 1, 0, bs) == -(-kv // bs)
+
+
+# ---------------------------------------------------------------------------
+# tuned dispatch: table-driven geometry is numerics-preserving
+# ---------------------------------------------------------------------------
+
+
+def test_ops_tuned_dispatch_matches_untuned(monkeypatch):
+    """ops.paged_attention with a `phase` key consults the table and the
+    tuned geometry (splits + q_tile) reproduces the untuned output —
+    the contract that lets the engine flip tuning on without changing
+    tokens."""
+    table = _table(
+        {autotune.entry_key(autotune.arch_key(), "verify", 0.125): _entry(
+            num_splits=2, q_tile=2)}
+    )
+    monkeypatch.setattr(autotune, "get_table", lambda: table)
+    assert autotune.get_config("verify", 0.1).num_splits == 2
+    bs, hkv, g, hd, max_blocks, chunk = 8, 2, 2, 32, 16, 4
+    kv_lens = [bs + chunk, chunk]
+    q, k, v, bt, qpos = _prefill_case(4, kv_lens, chunk, hkv, g, hd, bs,
+                                      max_blocks)
+    want = ops.paged_attention(q, k, v, bt, qpos, scale=hd**-0.5,
+                               block_size=bs)
+    got = ops.paged_attention(q, k, v, bt, qpos, scale=hd**-0.5,
+                              block_size=bs, phase="verify", occ=0.1)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-6,
+                               rtol=1e-6)
+
+
+def test_engine_tuned_bit_identity():
+    """A paged engine with tuning on streams tokens bit-identical to
+    tuning off (TP=1 fast-tier twin of distributed_impl.serve_tuned)."""
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=256
+    ).replace(residual_mode=ResidualMode("ladder"))
+    params = tfm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=0, prompt=rng.integers(0, 256, 19).tolist(),
+                max_new_tokens=5, sampling=SamplingParams()),
+        Request(rid=1, prompt=rng.integers(0, 256, 7).tolist(),
+                max_new_tokens=4,
+                sampling=SamplingParams(temperature=0.8, top_k=12, seed=3)),
+    ]
+
+    def run(tuned):
+        eng = PagedServingEngine(
+            cfg, params, batch_slots=2, s_max=48, block_size=8,
+            max_prefill_tokens=16, use_pallas=True, tuned=tuned)
+        for r in reqs:
+            eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                               max_new_tokens=r.max_new_tokens,
+                               sampling=r.sampling))
+        return {rid: f.tokens for rid, f in eng.run().items()}
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant + RMSNorm (the decode-path HBM round-trip cut)
+# ---------------------------------------------------------------------------
+
+
+def _pending_case(seed, tp, shape, d):
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (*shape, d), jnp.float32)
+    parts = jax.random.normal(jax.random.fold_in(key, 1), (tp, *shape, d),
+                              jnp.float32)
+    images, scales = quantize_kv(parts)
+    weight = jax.random.normal(jax.random.fold_in(key, 2), (d,), jnp.float32)
+    return x, images, scales, weight
+
+
+@pytest.mark.parametrize("tp,shape,d", [(1, (2, 3), 32), (2, (5,), 64),
+                                        (4, (3, 7), 16)])
+def test_rmsnorm_dequant_kernel_matches_oracle(tp, shape, d):
+    """Pallas fused dequant-sum+norm vs the jnp oracle: same f32
+    source-ordered accumulate, same norm on the un-downcast sum —
+    bit-identical UNDER JIT (how the engine runs both paths; eagerly the
+    oracle's separate mul+add rounds twice where XLA emits one FMA, the
+    same 1-ulp caveat tests/test_collectives.py documents), including
+    padded row tails (row count not a multiple of the kernel's block)."""
+    x, images, scales, weight = _pending_case(0, tp, shape, d)
+    oracle = jax.jit(
+        lambda *a: rmsnorm_dequant(*a, use_pallas=False))
+    want = oracle(x, images, scales, weight)
+    got = rmsnorm_dequant(x, images, scales, weight, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_rmsnorm_dequant_zero_scale_rows():
+    """All-zero pending images (the engine's init_carry state for the
+    first two sub-blocks) reduce the fused op to a plain rmsnorm."""
+    from repro.models.layers import rmsnorm
+
+    x, _, _, weight = _pending_case(1, 2, (4,), 32)
+    images = jnp.zeros((2, 4, 32), jnp.int8)
+    scales = jnp.zeros((2, 4), jnp.float32)
+    got = rmsnorm_dequant(x, images, scales, weight, use_pallas=True)
+    want = jax.jit(rmsnorm)(x, weight)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_engine_fused_norm_bit_identity():
+    """Ladder paged engine with comm_fuse_norm: the Pallas fused norm and
+    the jnp oracle emit identical token streams; non-ladder modes refuse
+    the flag (nothing is deferred to fuse)."""
+    cfg = REGISTRY["stablelm-3b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab_size=256
+    ).replace(residual_mode=ResidualMode("ladder"))
+    params = tfm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(rid=0, prompt=rng.integers(0, 256, 11).tolist(),
+                max_new_tokens=5, sampling=SamplingParams()),
+        Request(rid=1, prompt=rng.integers(0, 256, 6).tolist(),
+                max_new_tokens=4,
+                sampling=SamplingParams(temperature=0.9, top_k=16, seed=5)),
+    ]
+
+    def run(use_pallas):
+        eng = PagedServingEngine(
+            cfg, params, batch_slots=2, s_max=48, block_size=8,
+            max_prefill_tokens=16, comm_fuse_norm=True,
+            use_pallas=use_pallas)
+        for r in reqs:
+            eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                               max_new_tokens=r.max_new_tokens,
+                               sampling=r.sampling))
+        return {rid: f.tokens for rid, f in eng.run().items()}
+
+    assert run(True) == run(False)
+
+    std = cfg.replace(residual_mode=ResidualMode("standard"))
+    with pytest.raises(NotImplementedError):
+        PagedServingEngine(std, tfm.init_params(std, jax.random.key(0)),
+                           batch_slots=2, s_max=48, block_size=8,
+                           comm_fuse_norm=True)

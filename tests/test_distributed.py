@@ -31,6 +31,6 @@ def _run(which: str):
                                    "flashdec", "pp", "compress", "q8",
                                    "serve_cb", "serve_paged", "serve_spec",
                                    "serve_kernel", "serve_memory",
-                                   "serve_comm"])
+                                   "serve_comm", "serve_tuned"])
 def test_distributed(which):
     _run(which)
